@@ -1,0 +1,42 @@
+"""Bounds tightness (Eqs. 7/12/13/14): lower <= measured <= upper."""
+from __future__ import annotations
+
+from repro.core import (
+    access_stream, lower_bound_loads, natural_order,
+    simulate_loads, star_stencil, upper_bound_loads,
+)
+from repro.core.cache_fitting import plan_schedule
+from repro.core.lattice import CacheGeometry
+
+from .common import emit, timed
+
+GEOM = CacheGeometry(2, 512, 4)
+S = GEOM.size_words
+
+GRIDS = [(64, 91, 40), (52, 60, 40), (80, 80, 24), (47, 83, 32)]
+
+
+def run():
+    K = star_stencil(3, 2)
+    rows = []
+    for dims in GRIDS:
+        lb = lower_bound_loads(dims, S)["bound"]
+        ub = upper_bound_loads(dims, S, 2)["bound"]
+        order, bq, _ = plan_schedule(dims, S, 2, geom=GEOM)
+        lf = simulate_loads(access_stream(dims, order, K, base_q=bq), GEOM)
+        ln = simulate_loads(access_stream(dims, natural_order(dims, 2), K, base_q=bq), GEOM)
+        rows.append((dims, lb, lf, ln, ub, lb <= lf <= ub))
+    return rows
+
+
+def main(quick: bool = True):
+    rows, us = timed(run)
+    ok = all(r[5] for r in rows)
+    tightness = max(r[2] / max(r[1], 1) for r in rows)
+    emit("bounds_table", us, f"sandwich_holds={ok} worst_measured/lower={tightness:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for dims, lb, lf, ln, ub, ok in main():
+        print(f"  {dims}: lower={lb:.0f} fitting={lf} natural={ln} upper={ub:.0f} ok={ok}")

@@ -1,0 +1,17 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # us
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

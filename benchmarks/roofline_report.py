@@ -1,0 +1,50 @@
+"""§Roofline table from the dry-run artifacts (launch/dryrun.py output)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit, timed
+
+_ARTDIR = Path(__file__).resolve().parent.parent / "artifacts"
+# prefer the optimized sweep when present (baseline kept for §Perf diffs)
+ART = (_ARTDIR / "dryrun_optimized.jsonl"
+       if (_ARTDIR / "dryrun_optimized.jsonl").exists()
+       else _ARTDIR / "dryrun.jsonl")
+
+
+def rows(path=ART):
+    if not Path(path).exists():
+        return []
+    out = {}
+    for line in Path(path).read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if r.get("ok"):
+            out[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(out.values())
+
+
+def main(quick: bool = True):
+    rs, us = timed(rows)
+    if not rs:
+        emit("roofline_report", us, "no_artifacts_yet=1")
+        return []
+    n_fit = sum(1 for r in rs if r.get("fits_16g"))
+    bounds = {}
+    for r in rs:
+        b = r["roofline"]["bottleneck"]
+        bounds[b] = bounds.get(b, 0) + 1
+    emit("roofline_report", us,
+         f"cells={len(rs)} fits_16g={n_fit} bottlenecks={bounds}")
+    return rs
+
+
+if __name__ == "__main__":
+    for r in main():
+        ro = r["roofline"]
+        print(f"  {r['arch']:16s} {r['shape']:12s} {r['mesh']:8s} "
+              f"tc={ro['t_compute_s']:.3f} tm={ro['t_memory_s']:.3f} "
+              f"tx={ro['t_collective_s']:.3f} {ro['bottleneck']}")

@@ -1,0 +1,26 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark (spec format).
+``--full`` runs paper-scale sweeps; default is the quick CI-sized pass.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    from . import (
+        bounds_table, fig4_miss_reduction, fig5_unfavorable,
+        padding_effect, roofline_report, tpu_tiling,
+    )
+    fig4_miss_reduction.main(quick)
+    fig5_unfavorable.main(quick)
+    bounds_table.main(quick)
+    padding_effect.main(quick)
+    tpu_tiling.main(quick)
+    roofline_report.main(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""DESIGN.md §2 adaptation: VMEM tile selection vs naive tiling + the
+Pallas kernel itself (interpret mode timing is CPU-bound; the derived
+column carries the traffic ratios that transfer to TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiling import select_tile, tile_traffic_bytes
+from repro.kernels.ops import apply_star_2nd_order
+
+from .common import emit, timed
+
+SHAPES = [(64, 128, 512), (128, 128, 1024), (32, 512, 512)]
+
+
+def run():
+    rows = []
+    for shape in SHAPES:
+        halo = [(2, 2)] * 3
+        best = select_tile(shape, halo, dtype_bytes=4,
+                           vmem_budget=1 << 22, n_operands=2)
+        naive = tile_traffic_bytes(shape, (8, 8, 128), halo, 4)
+        rows.append((shape, best.tile, best.traffic_bytes, naive,
+                     naive / best.traffic_bytes, best.efficiency))
+    return rows
+
+
+def main(quick: bool = True):
+    rows, us = timed(run)
+    u = jax.random.normal(jax.random.PRNGKey(0), (24, 40, 256), jnp.float32)
+    _, kus = timed(lambda: jax.block_until_ready(apply_star_2nd_order(u)))
+    gain = max(r[4] for r in rows)
+    eff = min(r[5] for r in rows)
+    emit("tpu_tiling", kus,
+         f"traffic_gain_vs_naive_x={gain:.2f} min_efficiency_vs_isoperimetric={eff:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for shape, tile, t, naive, gain, eff in main():
+        print(f"  {shape}: tile={tile} traffic={t/1e6:.1f}MB naive={naive/1e6:.1f}MB gain={gain:.2f}x eff={eff:.2f}")

@@ -1,0 +1,22 @@
+"""Batched serving example: prefill + greedy decode on the smoke model.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args(argv)
+    return serve_main([
+        "--arch", args.arch, "--smoke", "--batch", str(args.batch),
+        "--prompt-len", "24", "--gen", "12",
+    ])
+
+
+if __name__ == "__main__":
+    main()

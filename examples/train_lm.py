@@ -1,0 +1,50 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelCfg
+from repro.launch.train import main as train_main
+
+# ~100M params: 12L, d=768, 12H, ff=3072, 32k vocab (GPT-2-small-ish).
+HUNDRED_M = ModelCfg(
+    name="lm-100m", family="dense", n_layers=12, d_model=768, n_heads=12,
+    n_kv_heads=12, d_ff=3072, vocab=32000, q_chunk=128, loss_chunk=128,
+    fsdp=False,
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args(argv)
+
+    # register the config under a temp module path used by train.py
+    import repro.configs as C
+    import sys, types
+    mod = types.ModuleType("repro.configs.lm_100m")
+    mod.CONFIG = HUNDRED_M
+    mod.smoke = lambda: dataclasses.replace(
+        HUNDRED_M, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=512)
+    sys.modules["repro.configs.lm_100m"] = mod
+
+    from repro.models import count_params
+    n = count_params(HUNDRED_M)
+    print(f"training {HUNDRED_M.name}: {n/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+    return train_main([
+        "--arch", "lm_100m", "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        "--log-every", "20",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Emit the §Dry-run and §Roofline markdown tables from the artifacts.
+
+    PYTHONPATH=src python scripts/make_experiment_tables.py > artifacts/tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import os
+ART = Path(os.environ.get("DRYRUN_ARTIFACT", Path(__file__).resolve().parent.parent / "artifacts" / "dryrun.jsonl"))
+
+
+def load(path=ART):
+    out = {}
+    for line in Path(path).read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+        if r.get("ok") or key not in out:
+            out[key] = r
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def main():
+    recs = load()
+    print("## §Dry-run (generated)\n")
+    print("| arch | shape | mesh | ok | GB/dev (CPU) | GB/dev (TPU est) | fits 16G | compile s |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s, m), r in sorted(recs.items()):
+        if r.get("ok"):
+            print(f"| {a} | {s} | {m} | ok | {fmt_bytes(r['bytes_per_device'])} "
+                  f"| {fmt_bytes(r.get('bytes_per_device_tpu_est', 0))} "
+                  f"| {'Y' if r.get('fits_16g_tpu_est') else 'N'} | {r['compile_s']} |")
+        else:
+            err = r.get("error", "?")[:60]
+            print(f"| {a} | {s} | {m} | FAIL | - | - | - | {err} |")
+
+    print("\n## §Roofline (generated)\n")
+    print("| arch | shape | mesh | t_compute s | t_memory s | t_collective s "
+          "| bottleneck | HLO TFLOPs/dev | model TFLOPs/dev | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for (a, s, m), r in sorted(recs.items()):
+        if not r.get("ok"):
+            continue
+        ro = r["roofline"]
+        tmax = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        # roofline fraction: ideal (model-flops compute time) / bound-term
+        ideal = ro["model_flops_per_device"] / 197e12
+        frac = ideal / tmax if tmax else 0.0
+        print(f"| {a} | {s} | {m} | {ro['t_compute_s']:.4f} | {ro['t_memory_s']:.4f} "
+              f"| {ro['t_collective_s']:.4f} | {ro['bottleneck']} "
+              f"| {ro['flops']/1e12:.2f} | {ro['model_flops_per_device']/1e12:.2f} "
+              f"| {ro['useful_flop_ratio']:.2f} | {frac:.3f} |")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""§Perf hillclimb driver: lower+compile one cell under config variants and
+record the roofline terms per variant.
+
+    PYTHONPATH=src python scripts/perf_cells.py mixtral llama_decode llama_train
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro.launch import roofline as rf
+from repro.launch.dryrun import build_cell, rules_for
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.sharding import activate_mesh
+from repro.configs.base import MoECfg
+
+
+def run(arch_mod, arch, shape, label, multi=True, **overrides):
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{arch_mod}")
+    base = getattr(mod, "_BASE", mod.CONFIG)
+    if not hasattr(mod, "_BASE"):
+        mod._BASE = base
+    mod.CONFIG = dataclasses.replace(base, **overrides) if overrides else base
+    mesh = make_production_mesh(multi_pod=multi)
+    world = len(mesh.devices.ravel())
+    t0 = time.time()
+    fn, args, donate, out_sh, cfg, mf, np_, na = build_cell(arch, shape, mesh)
+    with activate_mesh(mesh, rules_for(cfg)):
+        compiled = (
+            jax.jit(fn, donate_argnums=donate, out_shardings=out_sh)
+            .lower(*args).compile()
+        )
+    m = compiled.memory_analysis()
+    roof = rf.analyze(compiled, mf, world)
+    temp = m.temp_size_in_bytes
+    tot = (m.argument_size_in_bytes + temp + m.output_size_in_bytes
+           - m.alias_size_in_bytes)
+    rec = dict(
+        label=label, arch=arch, shape=shape,
+        mem_gb=round(tot / 1e9, 2), temp_gb=round(temp / 1e9, 2),
+        mem_tpu_est_gb=round((tot - temp // 2) / 1e9, 2),
+        tc=round(roof.t_compute, 3), tm=round(roof.t_memory, 3),
+        tx=round(roof.t_collective, 3), bound=roof.bottleneck,
+        useful=round(roof.useful_ratio, 3),
+        coll={k: round(v / 1e9, 1) for k, v in roof.collectives.items()},
+        compile_s=round(time.time() - t0, 1),
+    )
+    print(json.dumps(rec), flush=True)
+    with open("artifacts/perf_iters.jsonl", "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main():
+    which = set(sys.argv[1:]) or {"mixtral", "llama_decode", "llama_train"}
+    if "mixtral" in which:
+        # V1 = current code (grouped attn + explicit-sharding MoE), dmodel
+        run("mixtral_8x22b", "mixtral_8x22b", "train_4k", "mixtral/V1-dmodel")
+        # V2: drop the dmodel residual constraint (hypothesis: the TP
+        # cross-model reduce of (G,E,C,F) dispatch activations disappears)
+        run("mixtral_8x22b", "mixtral_8x22b", "train_4k", "mixtral/V2-no-dmodel",
+            act_shard="")
+        # V3: expert parallelism (experts over 'model', all-to-all dispatch)
+        run("mixtral_8x22b", "mixtral_8x22b", "train_4k", "mixtral/V3-EP",
+            act_shard="", moe=MoECfg(n_experts=8, top_k=2, expert_parallel=True))
+        # V4: EP + dmodel
+        run("mixtral_8x22b", "mixtral_8x22b", "train_4k", "mixtral/V4-EP-dmodel",
+            moe=MoECfg(n_experts=8, top_k=2, expert_parallel=True))
+    if "llama_decode" in which:
+        run("llama3_405b", "llama3_405b", "decode_32k", "llama-dec/V1-grouped")
+    if "llama_train" in which:
+        run("llama3_405b", "llama3_405b", "train_4k", "llama-train/V1-grouped")
+        # V2: coarser remat groups (hypothesis: fewer group-recompute passes
+        # -> lower flops; saved-stack memory grows G·|x|)
+        run("llama3_405b", "llama3_405b", "train_4k", "llama-train/V2-groups6",
+            remat_groups=6)
+        # V3: finer groups
+        run("llama3_405b", "llama3_405b", "train_4k", "llama-train/V3-groups18",
+            remat_groups=18)
+    if "arctic" in which:
+        run("arctic_480b", "arctic_480b", "train_4k", "arctic/V1-grouped")
+        run("arctic_480b", "arctic_480b", "train_4k", "arctic/V2-EP",
+            act_shard="",
+            moe=MoECfg(n_experts=128, top_k=2, dense_residual=True,
+                       expert_parallel=True))
+    if "qwen" in which:
+        run("qwen1p5_32b", "qwen1p5_32b", "train_4k", "qwen/V1-grouped")
+
+
+if __name__ == "__main__":
+    main()

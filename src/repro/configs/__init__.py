@@ -1,0 +1,42 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``.
+
+Each assigned architecture lives in its own module with the exact published
+dims plus a ``smoke()`` reduced config for CPU tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from .base import LM_SHAPES, ModelCfg, MoECfg, ShapeCfg, SSMCfg  # noqa: F401
+
+ARCHS = [
+    "internvl2_2b",
+    "whisper_large_v3",
+    "zamba2_2p7b",
+    "qwen1p5_32b",
+    "granite_3_2b",
+    "llama3_405b",
+    "internlm2_20b",
+    "mixtral_8x22b",
+    "arctic_480b",
+    "mamba2_2p7b",
+]
+
+
+def _norm(name: str) -> str:
+    return name.replace("-", "_").replace(".", "p")
+
+
+def get_config(name: str) -> ModelCfg:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelCfg:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.smoke()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,175 @@
+"""Config system: model architecture + input-shape configs.
+
+Every assigned architecture is a ``ModelCfg`` in its own module
+(``repro/configs/<id>.py``) with the exact published dims, plus a
+``smoke()`` reduced config of the same family for CPU tests.
+
+Dims pass through the paper's padding advisor (``repro.core.padding``):
+``vocab_padded`` is the lane-aligned vocabulary used for the embedding
+table / logits (raw entries beyond ``vocab`` are masked in the loss);
+unfavorable dims are recorded in ``padding_report``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.core.padding import advise_dim, tpu_pad_dim
+
+__all__ = ["MoECfg", "SSMCfg", "ModelCfg", "ShapeCfg", "LM_SHAPES"]
+
+
+@dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int = 2
+    dense_residual: bool = False     # arctic: dense FFN in parallel
+    capacity_factor: float = 1.25
+    expert_parallel: bool = False    # EP (experts over 'model') vs TP inside expert
+
+
+@dataclass(frozen=True)
+class SSMCfg:
+    state: int = 128       # N
+    head_dim: int = 64     # P
+    expand: int = 2        # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 128       # SSD chunk length Q
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    window: Optional[int] = None   # SWA window (mixtral)
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    attn_every: int = 0            # hybrid: shared attn block every k ssm blocks
+    enc_layers: int = 0            # encdec: encoder depth
+    frontend_len: int = 0          # audio frames / vision patches (stub input)
+    rope_theta: float = 1e4
+    tie_embeddings: bool = True
+
+    # numerics / execution
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    q_chunk: int = 1024            # query-chunked attention (memory roofline)
+    loss_chunk: int = 2048         # seq-chunked xent (avoid (B,S,V) logits)
+    remat: bool = True
+    remat_groups: int = 0          # >0: two-level scan, remat whole groups
+    act_shard: str = ""            # '' | 'seq' | 'dmodel': residual-stream
+                                   # activation sharding over 'model' (SP)
+    fsdp: bool = True              # ZeRO-3 weight sharding over ('pod','data')
+    scan_layers: bool = True
+
+    # distribution bind-time fields (configs ship tp=dp=1; dryrun rebinds)
+    tp: int = 1
+    dp: int = 1                    # data-parallel groups (MoE local dispatch)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+
+    # ---- paper §6 padding advisor applied to model dims -------------------
+    @property
+    def vocab_padded(self) -> int:
+        import math
+
+        unit = math.lcm(128, max(self.tp, 1))
+        return tpu_pad_dim(self.vocab, unit)
+
+    @property
+    def padding_report(self) -> dict:
+        return {
+            "vocab": advise_dim(self.vocab, 128),
+            "d_ff": advise_dim(self.d_ff, 128),
+            "d_model": advise_dim(self.d_model, 128),
+            "head_dim": advise_dim(self.head_dim, 128),
+        }
+
+    # ---- head padding for TP (paper §6 padding applied to the mesh) -------
+    @property
+    def padded_heads(self) -> int:
+        """Q heads padded so the head axis divides tp.
+
+        MHA (q==kv): tail-pad to a multiple of tp (whisper 20→32, qwen
+        40→48).  GQA with q%tp!=0 (arctic 56=8kv×7): pad *each kv group*
+        g→g' so kv·g' % tp == 0 (arctic 7→8 ⇒ 64) — keeps the
+        q-head→kv-head map a consecutive repeat, so sharding stays aligned.
+        """
+        hq, hkv, tp = self.n_heads, self.n_kv_heads, self.tp
+        if tp <= 1 or hq % tp == 0:
+            return hq
+        if hq == hkv:
+            return -(-hq // tp) * tp
+        g = hq // hkv
+        gp = g
+        while (hkv * gp) % tp:
+            gp += 1
+        return hkv * gp
+
+    @property
+    def stored_kv_heads(self) -> int:
+        """KV heads as stored in compute/cache so the head dim shards."""
+        hkv, tp = self.n_kv_heads, self.tp
+        if tp <= 1 or hkv % tp == 0:
+            return hkv
+        if self.n_heads == self.n_kv_heads:
+            return self.padded_heads  # padded-MHA: kv tail-padded with q
+        if tp % hkv == 0:
+            return tp  # replicate each kv head tp/hkv times
+        raise ValueError(f"{self.name}: kv={hkv} vs tp={tp} unsupported")
+
+    @property
+    def d_inner(self) -> int:
+        return (self.ssm.expand * self.d_model) if self.ssm else 0
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm.head_dim if self.ssm else 0
+
+    def bind(self, tp: int, dp: int = 1) -> "ModelCfg":
+        return dataclasses.replace(self, tp=tp, dp=dp)
+
+    def param_count(self) -> int:
+        """Total parameters N (raw dims), for MODEL_FLOPS = 6·N·D."""
+        from repro.models.model_api import count_params  # late import
+
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model_api import count_params
+
+        return count_params(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+LM_SHAPES: dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}

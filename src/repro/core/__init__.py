@@ -1,0 +1,44 @@
+"""Core library: the paper's contribution as reusable components.
+
+- lattice:       interference lattice, LLL, shortest vector (§4, Eq. 8/9)
+- isoperimetric: octahedron counts + lower bounds (§3/§5, Appendix A)
+- cache_fitting: pencil-sweep visit order + upper bounds (§4/§5)
+- cache_sim:     exact (a,z,w) LRU simulator (§2 model)
+- padding:       unfavorable grids + padding advisor (§6, Appendix B)
+- tiling:        TPU VMEM tile selection (DESIGN.md §2 adaptation)
+"""
+
+from .lattice import (  # noqa: F401
+    CacheGeometry,
+    InterferenceLattice,
+    interference_basis,
+    lattice_contains,
+    lll_reduce,
+    shortest_vector,
+)
+from .isoperimetric import (  # noqa: F401
+    lower_bound_loads,
+    octahedron_boundary,
+    octahedron_volume,
+    simplex_volume,
+)
+from .cache_fitting import (  # noqa: F401
+    access_stream,
+    box_stencil,
+    cache_fitting_order,
+    natural_order,
+    rhs_array_offsets,
+    star_stencil,
+    upper_bound_loads,
+)
+from .cache_sim import MissReport, simulate_loads, simulate_misses  # noqa: F401
+from .padding import (  # noqa: F401
+    advise_dim,
+    hyperbola_index,
+    is_unfavorable,
+    pad_grid,
+    shortest_len,
+    tpu_layout_waste,
+    tpu_pad_dim,
+)
+from .tiling import TileChoice, select_tile, tile_traffic_bytes  # noqa: F401

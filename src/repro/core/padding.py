@@ -1,0 +1,143 @@
+"""Unfavorable grid detection and padding advisor (paper §6, Appendix B).
+
+A grid is *unfavorable* when its interference lattice has a very short
+vector — shorter than the stencil diameter divided by the cache
+associativity — because then the scanning face self-interferes and misses
+spike (paper Fig. 4/5).  Empirically these grids satisfy
+``n1·n2 ≈ k·S/2`` (Fig. 5 hyperbolae).
+
+The advisor pads leading dimensions minimally until the shortest lattice
+vector clears the threshold, preferring the *shortest admissible* vector
+above it (wide pencils ⇒ fewer pencil walls, §6).  Appendix B guarantees a
+favorable padding exists.
+
+The TPU half of this module is the adapted notion from DESIGN.md §2: the
+"layout lattice" of the (sublane, lane) = (8, 128) register/VMEM tiling.
+Dims that are far from a multiple of the tile waste a predictable fraction
+of every DMA — the TPU analogue of conflict misses.
+"""
+
+from __future__ import annotations
+
+import itertools
+from math import prod
+from typing import Sequence
+
+import numpy as np
+
+from .lattice import InterferenceLattice
+
+__all__ = [
+    "shortest_len",
+    "is_unfavorable",
+    "hyperbola_index",
+    "pad_grid",
+    "tpu_pad_dim",
+    "tpu_layout_waste",
+    "advise_dim",
+]
+
+
+def shortest_len(dims: Sequence[int], S: int, norm: str = "l1") -> float:
+    return InterferenceLattice(tuple(int(n) for n in dims), S).shortest_len(norm)
+
+
+def is_unfavorable(
+    dims: Sequence[int], S: int, diameter: int, a: int = 1, norm: str = "l1"
+) -> bool:
+    """§6 criterion: shortest lattice vector < diameter / associativity."""
+    return shortest_len(dims, S, norm) < diameter / a
+
+
+def hyperbola_index(dims: Sequence[int], S: int) -> tuple[int, float]:
+    """Nearest k and relative distance for the Fig. 5 fit n1·n2 ≈ k·S/2."""
+    m = prod(int(n) for n in dims[:-1]) if len(dims) > 2 else int(dims[0]) * int(dims[1])
+    half = S / 2.0
+    k = max(1, round(m / half))
+    return k, abs(m - k * half) / half
+
+
+def pad_grid(
+    dims: Sequence[int],
+    S: int,
+    diameter: int,
+    a: int = 1,
+    max_pad: int = 16,
+    norm: str = "l1",
+) -> tuple[tuple[int, ...], dict]:
+    """Minimal padding of the leading d-1 dims making the grid favorable.
+
+    Only dims 1..d-1 (zero-indexed 0..d-2) enter the lattice (the last dim's
+    extent never appears in the address strides), so we search paddings of
+    those.  Objective: (1) satisfy shortest >= diameter/a, (2) minimize
+    extra memory, (3) tie-break toward the *smallest* admissible shortest
+    vector so pencils stay wide (§6).
+    """
+    dims = tuple(int(n) for n in dims)
+    d = len(dims)
+    target = diameter / a
+    best = None
+    for pads in itertools.product(range(max_pad + 1), repeat=max(d - 1, 1)):
+        cand = tuple(
+            dims[i] + (pads[i] if i < d - 1 else 0) for i in range(d)
+        )
+        ln = shortest_len(cand, S, norm)
+        if ln < target:
+            continue
+        extra = prod(cand) - prod(dims)
+        key = (extra, ln)
+        if best is None or key < best[0]:
+            best = (key, cand, ln)
+    if best is None:
+        raise ValueError(
+            f"no favorable padding within +{max_pad} per dim for {dims} (S={S})"
+        )
+    _, cand, ln = best
+    return cand, {
+        "original": dims,
+        "padded": cand,
+        "extra_words": prod(cand) - prod(dims),
+        "shortest_before": shortest_len(dims, S, norm),
+        "shortest_after": ln,
+        "threshold": target,
+    }
+
+
+# ---------------------------------------------------------------------------
+# TPU layout lattice (DESIGN.md §2 adaptation).
+# ---------------------------------------------------------------------------
+
+def tpu_pad_dim(n: int, unit: int) -> int:
+    """Round ``n`` up to a multiple of ``unit`` (lane=128 / sublane=8)."""
+    return -(-n // unit) * unit
+
+
+def tpu_layout_waste(shape: Sequence[int], tile: tuple[int, int] = (8, 128)) -> float:
+    """Fraction of a (sublane, lane)-tiled buffer that is padding.
+
+    Applies to the trailing two dims, the ones the TPU register file tiles.
+    1.0 - useful/allocated; 0.0 means perfectly aligned.
+    """
+    if len(shape) < 2:
+        s = (1,) + tuple(shape)
+    else:
+        s = tuple(shape)
+    sub, lane = s[-2], s[-1]
+    alloc = tpu_pad_dim(sub, tile[0]) * tpu_pad_dim(lane, tile[1])
+    return 1.0 - (sub * lane) / alloc
+
+
+def advise_dim(n: int, unit: int = 128, max_waste: float = 0.05) -> dict:
+    """Padding advice for a single model dim (vocab, d_ff, ...).
+
+    Returns the padded dim and whether the original was 'unfavorable' in
+    the layout-lattice sense (wasting more than max_waste of each DMA).
+    """
+    padded = tpu_pad_dim(n, unit)
+    waste = 1.0 - n / padded
+    return {
+        "dim": n,
+        "padded": padded,
+        "waste_if_padded_layout": waste,
+        "unfavorable": waste > max_waste,
+    }

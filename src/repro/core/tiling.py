@@ -1,0 +1,144 @@
+"""TPU VMEM tile selection — the cache-fitting argument on a software cache.
+
+This is the DESIGN.md §2 adaptation of the paper's §4: on TPU the fast
+memory is explicitly managed, so "cache loads" become HBM→VMEM DMA bytes
+and the fitting problem becomes *tile-shape selection*:
+
+    minimize   traffic(T) = |G| · prod_i (T_i + h_lo_i + h_hi_i) / prod_i T_i
+    subject to bytes(all operand tiles incl. halo) <= VMEM budget
+
+— exactly the paper's surface-to-volume argument with the fundamental
+parallelepiped replaced by an axis-aligned box (DMA engines move
+rectangles; a skew parallelepiped is not DMA-able).  The isoperimetric
+lower bound of §3 still applies and we report the achieved/optimal ratio.
+
+The multi-operand budget split mirrors §5 (p RHS arrays ⇒ S/p per array).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from math import prod
+from typing import Sequence
+
+from .isoperimetric import lower_bound_loads
+
+__all__ = ["TileChoice", "candidate_tiles", "tile_traffic_bytes", "select_tile"]
+
+VMEM_BYTES_V5E = 128 * 1024 * 1024  # v5e VMEM per core (target hardware)
+LANE = 128
+SUBLANE = 8
+
+
+@dataclass(frozen=True)
+class TileChoice:
+    tile: tuple[int, ...]
+    grid: tuple[int, ...]
+    traffic_bytes: int
+    vmem_bytes: int
+    surface_to_volume: float
+    lower_bound_bytes: float
+    efficiency: float  # lower_bound / achieved traffic  (1.0 = optimal)
+
+
+def _aligned_candidates(n: int, unit: int, cap: int) -> list[int]:
+    """Tile extents to consider for one dim: unit-aligned sizes plus n."""
+    cands = {min(n, cap)}
+    t = unit
+    while t < min(n, cap):
+        cands.add(t)
+        t *= 2
+    # Non-power-of-two aligned sizes help when n mod 2^k is bad.
+    for mult in (3, 5, 6, 12, 24):
+        v = unit * mult
+        if v <= min(n, cap):
+            cands.add(v)
+    cands.add(min(n, cap))
+    if n <= cap:
+        cands.add(n)
+    return sorted(cands)
+
+
+def candidate_tiles(
+    shape: Sequence[int], max_tile_elems: int
+) -> list[tuple[int, ...]]:
+    """Hardware-aligned candidate tiles: lane dim multiples of 128, sublane
+    dim multiples of 8, leading dims small integers."""
+    d = len(shape)
+    per_dim: list[list[int]] = []
+    for i, n in enumerate(shape):
+        if i == d - 1:
+            per_dim.append(_aligned_candidates(n, LANE, max_tile_elems))
+        elif i == d - 2:
+            per_dim.append(_aligned_candidates(n, SUBLANE, max_tile_elems))
+        else:
+            opts = sorted({1, 2, 4, 8, 16, 32, 64, 128, n})
+            per_dim.append([o for o in opts if o <= n])
+    return [t for t in itertools.product(*per_dim)]
+
+
+def tile_traffic_bytes(
+    shape: Sequence[int],
+    tile: Sequence[int],
+    halo: Sequence[tuple[int, int]],
+    dtype_bytes: int,
+) -> int:
+    """Total HBM→VMEM bytes to sweep the array once with halo'd tiles."""
+    ntiles = prod(-(-n // t) for n, t in zip(shape, tile))
+    per_tile = prod(t + lo + hi for t, (lo, hi) in zip(tile, halo))
+    return ntiles * per_tile * dtype_bytes
+
+
+def select_tile(
+    shape: Sequence[int],
+    halo: Sequence[tuple[int, int]],
+    dtype_bytes: int = 4,
+    vmem_budget: int = VMEM_BYTES_V5E // 2,
+    n_operands: int = 2,
+) -> TileChoice:
+    """Pick the traffic-minimizing VMEM tile (paper §4 adapted, §5 for the
+    per-operand budget split: budget/n_operands per array)."""
+    shape = tuple(int(n) for n in shape)
+    budget = vmem_budget // max(n_operands, 1)
+    max_elems = budget // dtype_bytes
+    best: TileChoice | None = None
+    for tile in candidate_tiles(shape, max_elems):
+        in_tile_bytes = (
+            prod(t + lo + hi for t, (lo, hi) in zip(tile, halo)) * dtype_bytes
+        )
+        if in_tile_bytes > budget:
+            continue
+        traffic = tile_traffic_bytes(shape, tile, halo, dtype_bytes)
+        s2v = prod(t + lo + hi for t, (lo, hi) in zip(tile, halo)) / prod(tile) - 1.0
+        if best is None or traffic < best.traffic_bytes:
+            r = max((lo + hi) // 2 for lo, hi in halo)
+            lb = _traffic_lower_bound(shape, budget // dtype_bytes, dtype_bytes, r)
+            best = TileChoice(
+                tile=tile,
+                grid=tuple(-(-n // t) for n, t in zip(shape, tile)),
+                traffic_bytes=traffic,
+                vmem_bytes=in_tile_bytes,
+                surface_to_volume=s2v,
+                lower_bound_bytes=lb,
+                efficiency=min(lb / traffic, 1.0) if traffic else 1.0,
+            )
+    if best is None:
+        raise ValueError(
+            f"no tile of {shape} (halo {halo}) fits VMEM budget {budget} B"
+        )
+    return best
+
+
+def _traffic_lower_bound(
+    shape: tuple[int, ...], vmem_words: int, dtype_bytes: int, r: int
+) -> float:
+    """Isoperimetric lower bound on bytes moved (Eq. 7 with S = VMEM words).
+
+    Collapse degenerate dims (extent 1) — the bound is dimensional.
+    """
+    eff = [n for n in shape if n > 1]
+    if len(eff) < 2 or r == 0:
+        return prod(shape) * dtype_bytes  # compulsory traffic only
+    lb = lower_bound_loads(eff, vmem_words, p=1)
+    return max(lb["bound"], lb["compulsory"]) * dtype_bytes

@@ -1,0 +1,62 @@
+"""Pallas depthwise causal conv1d — the Mamba2 / audio-frontend stencil.
+
+A width-W causal depthwise convolution is a 1-D stencil with halo (W-1, 0);
+the same cache-fitting tile logic applies (sequence-tiled, channel-lane
+aligned).  Used as a drop-in for ``models.ssm._causal_conv``'s math on the
+TPU target; validated against it in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["causal_conv1d"]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_s", "interpret"))
+def causal_conv1d(
+    x: jnp.ndarray,
+    conv_w: jnp.ndarray,
+    conv_b: jnp.ndarray,
+    tile_s: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """x: (B, S, C); conv_w: (W, C); conv_b: (C,).  Causal, silu-activated
+    (matches models.ssm._causal_conv with zero initial state)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, s, c = x.shape
+    width = conv_w.shape[0]
+    halo = width - 1
+    tile_s = min(tile_s, s)
+    pad_s = -(-s // tile_s) * tile_s
+    xp = jnp.pad(x, ((0, 0), (halo, pad_s - s), (0, 0)))
+
+    def body(x_ref, w_ref, b_ref, o_ref):
+        xt = x_ref[...]  # (1, tile_s + halo, C)
+        acc = jnp.zeros((1, tile_s, c), jnp.float32)
+        for i in range(width):
+            acc = acc + xt[:, i : i + tile_s, :].astype(jnp.float32) * w_ref[i]
+        acc = acc + b_ref[...]
+        o_ref[...] = jax.nn.silu(acc).astype(o_ref.dtype)
+
+    out = pl.pallas_call(
+        body,
+        grid=(b, pad_s // tile_s),
+        in_specs=[
+            pl.BlockSpec(
+                (pl.Element(1), pl.Element(tile_s + halo), pl.Element(c)),
+                lambda i, j: (i, j * tile_s, 0),
+            ),
+            pl.BlockSpec((width, c), lambda i, j: (0, 0)),
+            pl.BlockSpec((c,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_s, c), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, pad_s, c), x.dtype),
+        interpret=interpret,
+    )(xp, conv_w, conv_b)
+    return out[:, :s, :]

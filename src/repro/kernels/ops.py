@@ -1,0 +1,75 @@
+"""Public jit'd API for the stencil kernels.
+
+``apply_stencil`` is what the rest of the framework calls (examples,
+benchmarks, the Mamba2/Whisper conv frontends fall back to it for their
+1-D stencils).  It reports the tile decision so callers can log the
+cache-fitting statistics (traffic vs. isoperimetric bound).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiling import TileChoice, select_tile, VMEM_BYTES_V5E
+
+from .ref import star_weights_2nd_order, stencil_ref
+from .stencil import multi_stencil_pallas, stencil_pallas
+
+__all__ = [
+    "apply_stencil",
+    "apply_star_2nd_order",
+    "apply_multi_rhs",
+    "plan_tiles",
+    "stencil_ref",
+    "star_weights_2nd_order",
+]
+
+
+def plan_tiles(
+    shape: Sequence[int],
+    r: int,
+    dtype_bytes: int = 4,
+    n_operands: int = 2,
+    vmem_budget: int = VMEM_BYTES_V5E // 2,
+) -> TileChoice:
+    """Expose the cache-fitting tile decision (for logging / benchmarks)."""
+    return select_tile(
+        shape, [(r, r)] * len(shape), dtype_bytes=dtype_bytes,
+        vmem_budget=vmem_budget, n_operands=n_operands,
+    )
+
+
+def apply_stencil(
+    u: jnp.ndarray,
+    offsets: np.ndarray,
+    weights: Sequence[float],
+    tile: Sequence[int] | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """q = K u with zero boundary fill; Pallas-tiled per the paper."""
+    return stencil_pallas(u, offsets, weights, tile=tile, interpret=interpret)
+
+
+def apply_star_2nd_order(
+    u: jnp.ndarray, tile: Sequence[int] | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """The paper's measured operator: second-order star (13-point in 3-D)."""
+    offsets, weights = star_weights_2nd_order(u.ndim, r=2)
+    return apply_stencil(u, offsets, weights, tile=tile, interpret=interpret)
+
+
+def apply_multi_rhs(
+    us: Sequence[jnp.ndarray],
+    offsets_list: Sequence[np.ndarray],
+    weights_list: Sequence[Sequence[float]],
+    tile: Sequence[int] | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """q = Σ_p K_p u_p (§5) with the per-operand VMEM budget split."""
+    return multi_stencil_pallas(
+        us, offsets_list, weights_list, tile=tile, interpret=interpret
+    )

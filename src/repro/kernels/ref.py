@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the stencil kernels.
+
+Semantics: ``q = sum_k w_k * shift(u, k)`` with zero fill outside the array
+(convolution-'same' boundary).  This is the reference every Pallas kernel is
+allclose-tested against, and also the building block for the Mamba2 /
+Whisper conv frontends.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["stencil_ref", "star_weights_2nd_order"]
+
+
+def stencil_ref(
+    u: jnp.ndarray,
+    offsets: np.ndarray,
+    weights: Sequence[float],
+) -> jnp.ndarray:
+    """Apply a weighted stencil with zero boundary fill.
+
+    offsets: (s, d) integer array; weights: length-s floats.
+    """
+    d = u.ndim
+    offsets = np.asarray(offsets)
+    assert offsets.shape[1] == d, (offsets.shape, d)
+    r = int(np.abs(offsets).max()) if offsets.size else 0
+    pad = [(r, r)] * d
+    up = jnp.pad(u, pad)
+    out = jnp.zeros_like(u)
+    for off, w in zip(offsets.tolist(), weights):
+        sl = tuple(
+            slice(r + o, r + o + n) for o, n in zip(off, u.shape)
+        )
+        out = out + jnp.asarray(w, u.dtype) * up[sl]
+    return out
+
+
+def star_weights_2nd_order(d: int, r: int = 2) -> tuple[np.ndarray, list[float]]:
+    """The paper's experimental operator: a second-order star stencil
+    (13-point for d=3, r=2).  Coefficients follow the classic 4th-order
+    accurate Laplacian along each axis; exact values are irrelevant to the
+    cache analysis but give a realistic operator."""
+    from repro.core.cache_fitting import star_stencil
+
+    offsets = star_stencil(d, r)
+    weights: list[float] = []
+    for off in offsets:
+        nz = [o for o in off if o != 0]
+        if not nz:
+            weights.append(-2.5 * d)
+        elif abs(nz[0]) == 1:
+            weights.append(4.0 / 3.0)
+        else:
+            weights.append(-1.0 / 12.0)
+    return offsets, weights

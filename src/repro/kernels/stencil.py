@@ -1,0 +1,151 @@
+"""Pallas TPU stencil kernels with cache-fitting tile selection.
+
+The kernel realizes the paper's cache-fitting algorithm on the TPU memory
+hierarchy (DESIGN.md §2): the grid is swept tile-by-tile; each input tile is
+DMA'd into VMEM *with its halo* (the `pl.Element` indexing mode gives the
+overlapping windows the paper's scanning face provides), the stencil is
+evaluated entirely из VMEM, and the output tile is written back.  Tile
+shapes come from ``repro.core.tiling.select_tile`` — the surface-to-volume
+minimizer — so HBM traffic approaches the isoperimetric lower bound.
+
+Grid iteration order = sweep order: the minor-most grid axis is the one the
+tile selector marks widest, mirroring the paper's pencil sweep along the
+shortest lattice vector.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["stencil_pallas", "multi_stencil_pallas"]
+
+
+def _kernel_body(offsets, weights, r, tile, n_in, *refs):
+    """Generic d-dimensional weighted-stencil kernel body.
+
+    refs = (*in_refs, out_ref).  Each in_ref block is tile+2r per dim
+    (Element-indexed overlapping window); out block is `tile`.
+    """
+    *in_refs, out_ref = refs
+    acc = jnp.zeros(tuple(tile), dtype=jnp.float32)
+    for arr_i, in_ref in enumerate(in_refs):
+        x = in_ref[...].astype(jnp.float32)
+        for off, w in zip(offsets[arr_i], weights[arr_i]):
+            sl = tuple(
+                slice(r + int(o), r + int(o) + t) for o, t in zip(off, tile)
+            )
+            acc = acc + np.float32(w) * x[sl]
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _round_up(n: int, t: int) -> int:
+    return -(-n // t) * t
+
+
+@functools.partial(
+    jax.jit, static_argnames=("offsets_w", "tile", "interpret")
+)
+def _stencil_call(us, offsets_w, tile, interpret):
+    """us: tuple of p same-shape arrays.  offsets_w: tuple per array of
+    (offsets_tuple, weights_tuple) — hashable static spec."""
+    u0 = us[0]
+    d = u0.ndim
+    offsets = [np.asarray(ow[0], dtype=np.int64) for ow in offsets_w]
+    weights = [list(ow[1]) for ow in offsets_w]
+    r = int(max(np.abs(o).max() for o in offsets))
+    tile = tuple(int(t) for t in tile)
+    padded_shape = tuple(_round_up(n, t) for n, t in zip(u0.shape, tile))
+    grid = tuple(ps // t for ps, t in zip(padded_shape, tile))
+
+    ins = []
+    for u in us:
+        # zero-pad: r halo on the low side, r + round-up slack on the high.
+        pads = [
+            (r, r + ps - n) for ps, n in zip(padded_shape, u.shape)
+        ]
+        ins.append(jnp.pad(u, pads))
+
+    in_block = tuple(pl.Element(t + 2 * r) for t in tile)
+
+    def in_index_map(*g):
+        return tuple(gi * t for gi, t in zip(g, tile))
+
+    def out_index_map(*g):
+        return g
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_body, offsets, weights, r, tile, len(us)),
+        grid=grid,
+        in_specs=[pl.BlockSpec(in_block, in_index_map) for _ in us],
+        out_specs=pl.BlockSpec(tile, out_index_map),
+        out_shape=jax.ShapeDtypeStruct(padded_shape, u0.dtype),
+        interpret=interpret,
+    )(*ins)
+    return out[tuple(slice(0, n) for n in u0.shape)]
+
+
+def _auto_tile(shape, r, dtype_bytes, n_operands, vmem_budget=None):
+    from repro.core.tiling import VMEM_BYTES_V5E, select_tile
+
+    budget = vmem_budget or VMEM_BYTES_V5E // 2
+    halo = [(r, r)] * len(shape)
+    choice = select_tile(
+        shape,
+        halo,
+        dtype_bytes=dtype_bytes,
+        vmem_budget=budget,
+        n_operands=n_operands + 1,  # p inputs + the output tile (§5 split)
+    )
+    return choice
+
+
+def stencil_pallas(
+    u: jnp.ndarray,
+    offsets: np.ndarray,
+    weights: Sequence[float],
+    tile: Sequence[int] | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int | None = None,
+) -> jnp.ndarray:
+    """Single-array weighted stencil, zero boundary fill (matches ref)."""
+    return multi_stencil_pallas(
+        [u], [offsets], [weights], tile=tile, interpret=interpret,
+        vmem_budget=vmem_budget,
+    )
+
+
+def multi_stencil_pallas(
+    us: Sequence[jnp.ndarray],
+    offsets_list: Sequence[np.ndarray],
+    weights_list: Sequence[Sequence[float]],
+    tile: Sequence[int] | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int | None = None,
+) -> jnp.ndarray:
+    """p-RHS stencil  q = Σ_p K_p u_p  (paper §5): one VMEM budget split
+    across p operand tiles plus the output tile."""
+    us = tuple(us)
+    assert len({u.shape for u in us}) == 1, "RHS arrays must share a shape"
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    r = int(max(np.abs(np.asarray(o)).max() for o in offsets_list))
+    if tile is None:
+        choice = _auto_tile(
+            us[0].shape, r, us[0].dtype.itemsize, len(us),
+            vmem_budget=vmem_budget,
+        )
+        tile = choice.tile
+    offsets_w = tuple(
+        (
+            tuple(map(tuple, np.asarray(o).tolist())),
+            tuple(float(w) for w in ws),
+        )
+        for o, ws in zip(offsets_list, weights_list)
+    )
+    return _stencil_call(us, offsets_w, tuple(tile), interpret)

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell we build the real step function (train_step with AdamW, or
+prefill/serve_step with KV caches), lower it against sharded
+ShapeDtypeStructs (no allocation), compile for the production mesh, and
+record memory_analysis / cost_analysis / collective wire bytes into a
+JSONL artifact that EXPERIMENTS.md §Dry-run and §Roofline read.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import LM_SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rf
+from repro.models import batch_specs, count_params, get_model
+from repro.optim import OptConfig, adamw_update, adamw_init, opt_state_specs
+from repro.parallel.sharding import (
+    LOGICAL_RULES,
+    ParamSpec,
+    activate_mesh,
+    specs_to_shardings,
+    specs_to_structs,
+)
+
+# long_500k needs sub-quadratic decode: SSM state (mamba2, zamba2) or a
+# sliding window (mixtral).  Pure full-attention archs skip it — DESIGN.md §5.
+LONG_OK = {"mamba2-2.7b", "zamba2-2.7b", "mixtral-8x22b"}
+
+OPT = OptConfig()
+
+
+def rules_for(cfg):
+    rules = dict(LOGICAL_RULES)
+    if not cfg.fsdp:
+        rules["fsdp"] = ()
+    if cfg.act_shard == "seq":
+        rules["sequence"] = ("model",)
+    if cfg.moe is not None and cfg.moe.expert_parallel:
+        rules["expert"] = ("model",)
+    return rules
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (fn, example_structs, donate, cfg, model_flops)."""
+    shape = LM_SHAPES[shape_name]
+    tp = mesh.shape["model"]
+    dp = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    cfg = get_config(arch).bind(tp=tp, dp=dp)
+    model = get_model(cfg)
+    rules = rules_for(cfg)
+    pspecs = model.param_specs()
+    p_structs = specs_to_structs(pspecs, mesh, rules)
+    n_params = count_params(cfg)
+    n_active = count_params(cfg, active_only=True)
+
+    if shape.kind == "train":
+        o_structs = specs_to_structs(opt_state_specs(pspecs), mesh, rules)
+        b_structs = specs_to_structs(batch_specs(cfg, shape), mesh, rules)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            new_p, new_o, metrics = adamw_update(OPT, grads, opt_state, params)
+            metrics["loss"] = loss
+            return new_p, new_o, metrics
+
+        fn = train_step
+        args = (p_structs, o_structs, b_structs)
+        donate = (0, 1)
+        out_shardings = (
+            specs_to_shardings(pspecs, mesh, rules),
+            specs_to_shardings(opt_state_specs(pspecs), mesh, rules),
+            None,
+        )
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        b_structs = specs_to_structs(batch_specs(cfg, shape), mesh, rules)
+        c_specs = model.cache_specs(shape.global_batch, shape.seq_len, ring=False)
+        c_structs = specs_to_structs(c_specs, mesh, rules)
+
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        fn = prefill_step
+        args = (p_structs, b_structs, c_structs)
+        donate = (2,)
+        out_shardings = None
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:  # decode
+        b = shape.global_batch
+        c_specs = model.cache_specs(b, shape.seq_len)
+        c_structs = specs_to_structs(c_specs, mesh, rules)
+        tok = specs_to_structs(
+            {"token": ParamSpec((b, 1), jnp.int32, ("batch", ""))}, mesh, rules
+        )["token"]
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def serve_step(params, cache, token, pos):
+            return model.decode_step(params, cache, token, pos)
+
+        fn = serve_step
+        args = (p_structs, c_structs, tok, pos)
+        donate = (1,)
+        out_shardings = None
+        model_flops = 2.0 * n_active * b
+    return fn, args, donate, out_shardings, cfg, model_flops, n_params, n_active
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    world = int(len(mesh.devices.ravel()))
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "world": world,
+    }
+    t0 = time.time()
+    (fn, args, donate, out_sh, cfg, model_flops, n_params, n_active) = build_cell(
+        arch, shape_name, mesh
+    )
+    rec.update(n_params=n_params, n_active=n_active, model_flops=model_flops)
+    with activate_mesh(mesh, rules_for(cfg)):
+        jfn = jax.jit(fn, donate_argnums=donate, out_shardings=out_sh)
+        lowered = jfn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_rec[k] = int(v)
+    roof = rf.analyze(compiled, model_flops, world)
+    per_dev_bytes = (
+        mem_rec.get("argument_size_in_bytes", 0)
+        + mem_rec.get("temp_size_in_bytes", 0)
+        + mem_rec.get("output_size_in_bytes", 0)
+        - mem_rec.get("alias_size_in_bytes", 0)
+    )
+    # XLA:CPU has no bf16 GEMM: every bf16 dot is upcast to f32 (verified
+    # via the wrapped_convert pattern in the HLO), roughly doubling all
+    # activation/cotangent temporaries relative to the TPU target.  We
+    # record the raw CPU number AND a temp/2-corrected TPU estimate; the
+    # correction applies only to temps (params/opt args are f32 anyway).
+    import numpy as _np
+    bf16_compute = jnp.dtype(cfg.compute_dtype) == jnp.dtype(jnp.bfloat16)
+    temp = mem_rec.get("temp_size_in_bytes", 0)
+    tpu_est = per_dev_bytes - (temp // 2 if bf16_compute else 0)
+    # ideal step floor: every resident byte (params [+cache/opt]) must be
+    # touched once per step — the memory-roofline floor that decode cells
+    # are properly measured against (their FLOP floor is ~0)
+    t_ideal_mem = mem_rec.get("argument_size_in_bytes", 0) / rf.HBM_BW
+    t_ideal_comp = (model_flops / world) / rf.PEAK_FLOPS
+    rec.update(
+        memory=mem_rec,
+        bytes_per_device=per_dev_bytes,
+        bytes_per_device_tpu_est=int(tpu_est),
+        fits_16g=bool(per_dev_bytes < 16e9),
+        fits_16g_tpu_est=bool(tpu_est < 16e9),
+        t_ideal_memory_s=t_ideal_mem,
+        t_ideal_compute_s=t_ideal_comp,
+        roofline=roof.to_dict(),
+        trace_s=round(t1 - t0, 1),
+        compile_s=round(t2 - t1, 1),
+        ok=True,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun.jsonl")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    done = set()
+    if out.exists() and not args.force:
+        for line in out.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                if r.get("ok"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+            except json.JSONDecodeError:
+                pass
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(LM_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        arch_cfg_name = get_config(arch).name
+        for shape in shapes:
+            if shape == "long_500k" and arch_cfg_name not in LONG_OK:
+                print(f"SKIP {arch} {shape} (full attention — DESIGN.md §5)")
+                continue
+            for multi in meshes:
+                mname = "2x16x16" if multi else "16x16"
+                if (arch, shape, mname) in done:
+                    print(f"cached {arch} {shape} {mname}")
+                    continue
+                print(f"=== {arch} {shape} {mname}", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi)
+                    gb = rec["bytes_per_device"] / 1e9
+                    r = rec["roofline"]
+                    print(
+                        f"  ok mem/dev={gb:.2f}GB fits={rec['fits_16g']} "
+                        f"t_c={r['t_compute_s']:.4f}s t_m={r['t_memory_s']:.4f}s "
+                        f"t_x={r['t_collective_s']:.4f}s bound={r['bottleneck']} "
+                        f"(compile {rec['compile_s']}s)",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mname,
+                        "ok": False, "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    print(f"  FAIL {type(e).__name__}: {str(e)[:200]}", flush=True)
+                with out.open("a") as f:
+                    f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

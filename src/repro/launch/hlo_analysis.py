@@ -1,0 +1,313 @@
+"""While-loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` does not multiply the backward
+(remat'd) while loops by their trip counts (verified: an 8-layer
+grad-of-scan reports ~6× fewer FLOPs than the unrolled equivalent), so the
+roofline would be garbage for scanned models.  This module parses the
+optimized HLO text, builds the computation call graph, extracts while trip
+counts (``backend_config known_trip_count``, falling back to the loop
+condition's constant), and rolls up:
+
+    flops       — 2 · |result| · |contraction| per dot/convolution
+    hbm_bytes   — Σ (operands + result) over *top-level* fusion/dot/copy/
+                  collective/slice ops (fusion internals live in registers,
+                  matching the hardware's view of HBM traffic)
+    wire_bytes  — per-collective ring-model wire traffic (see roofline.py)
+
+All three are multiplied through while loops (nested included) and calls.
+Per-device semantics: the input is the SPMD-partitioned module.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_TYPE_RE = re.compile(
+    r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|"
+    r"pred|c64|c128|token)\[([0-9,]*)\]"
+)
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_WHILE_RE = re.compile(r"condition=(%[\w.\-]+),\s*body=(%[\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_OPND_RE = re.compile(r"%[\w.\-]+")
+_TO_APPLY_RE = re.compile(r"to_apply=(%[\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# Ops that must touch HBM on the TPU target.  CPU-only artifacts are
+# EXCLUDED on purpose: XLA:CPU wraps every elementwise chain in its own
+# 'fusion' and inserts bf16<->f32 convert copies around each dot (no bf16
+# GEMM on CPU) — counting those would overstate the TPU memory term ~5×
+# (measured 62/91 TB of pure fusion traffic on the llama3-405b cell).
+# What remains: dot/conv operands+results (operands traced through
+# convert/copy/bitcast chains back to their true dtype), collective
+# payloads, cache slice/update traffic, gather/scatter.  Standalone
+# norm/elementwise traffic is assumed fused into neighbors (TPU behavior);
+# the term is therefore a slight underestimate, consistently across
+# variants (documented in EXPERIMENTS.md §Roofline methodology).
+_HBM_OPS = set(
+    ("dot", "convolution", "dynamic-slice", "dynamic-update-slice",
+     "scatter", "gather", "sort", "custom-call") + _COLLECTIVES
+)
+_TRANSPARENT = ("convert", "copy", "bitcast", "transpose", "reshape")
+
+
+def _shape_info(type_str: str):
+    total = 0
+    shapes = []
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append(shape)
+    return total, shapes
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    per_coll: dict = field(default_factory=dict)
+    calls: list = field(default_factory=list)  # (computation_name, multiplier)
+
+
+@dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    per_coll: dict
+
+
+def _parse_computations(text: str):
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if not line.startswith((" ", "\t")) and line.rstrip().endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?(%[\w.\-]+)", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def analyze_hlo(text: str, world: int = 1) -> HloCost:
+    comps, entry = _parse_computations(text)
+
+    # global symbol table: op name -> (result bytes, op, first operand)
+    result_bytes: dict[str, int] = {}
+    op_of: dict[str, str] = {}
+    first_opnd: dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                b, _ = _shape_info(m.group(2))
+                name, op = m.group(1), m.group(3)
+                result_bytes[name] = b
+                op_of[name] = op
+                try:
+                    paren = line[line.index(op + "(") + len(op) + 1:]
+                    ops = _OPND_RE.findall(paren.split(")")[0])
+                    if ops:
+                        first_opnd[name] = ops[0]
+                except ValueError:
+                    pass
+
+    def true_bytes(name: str, hops: int = 4) -> int:
+        """Trace through CPU convert/copy chains to the tensor's true size
+        (undoes the bf16→f32 upcast XLA:CPU inserts around dots)."""
+        best = result_bytes.get(name, 0)
+        cur = name
+        for _ in range(hops):
+            op = op_of.get(cur, "")
+            if op in _TRANSPARENT or (op == "fusion" and "convert" in cur):
+                nxt = first_opnd.get(cur)
+                if nxt is None:
+                    break
+                nb = result_bytes.get(nxt, 0)
+                if 0 < nb < best:
+                    best = nb
+                cur = nxt
+            else:
+                break
+        return best
+
+    def cond_trip(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            for c in _CONST_RE.finditer(line):
+                best = max(best, int(c.group(1)))
+        return best
+
+    costs: dict[str, CompCost] = {}
+    for name, lines in comps.items():
+        cc = CompCost()
+        costs[name] = cc
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            out_name, out_type, op = m.groups()
+            out_bytes, out_shapes = _shape_info(out_type)
+            if op == "while":
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    tm = _TRIP_RE.search(line)
+                    t = int(tm.group(1)) if tm else cond_trip(cond)
+                    cc.calls.append((body, t))
+                continue
+            if op in ("call", "conditional", "async-start"):
+                tm = _TO_APPLY_RE.search(line)
+                if tm:
+                    cc.calls.append((tm.group(1), 1.0))
+                # conditional: branch computations — approximate with all
+                for bm in re.finditer(r"(?:true|false)_computation=(%[\w.\-]+)", line):
+                    cc.calls.append((bm.group(1), 1.0))
+                for bm in re.finditer(r"branch_computations=\{([^}]*)\}", line):
+                    for nm in _OPND_RE.findall(bm.group(1)):
+                        cc.calls.append((nm, 1.0))
+                continue
+            # ---- flops (dot / convolution)
+            if op in ("dot", "convolution"):
+                n_out = 1
+                for d in (out_shapes[0] if out_shapes else ()):
+                    n_out *= d
+                k = 1
+                cm = _CONTRACT_RE.search(line)
+                if cm:
+                    # lhs operand: first %name inside the op's parens
+                    paren = line[line.index(op + "(") + len(op) + 1:]
+                    names = _OPND_RE.findall(paren.split(")")[0])
+                    lhs_shape = ()
+                    if names:
+                        # re-find lhs def to get its shape
+                        lb = _lhs_shapes.get(names[0])
+                        if lb:
+                            lhs_shape = lb
+                    for ci in cm.group(1).split(","):
+                        if ci != "" and int(ci) < len(lhs_shape):
+                            k *= lhs_shape[int(ci)]
+                cc.flops += 2.0 * n_out * k
+            # ---- collectives
+            matched_coll = None
+            for coll in _COLLECTIVES:
+                if op == coll or op == coll + "-start":
+                    matched_coll = coll
+                    break
+            if matched_coll:
+                g = _group_size(line, world)
+                ring = (g - 1) / g if g > 1 else 0.0
+                if matched_coll == "all-reduce":
+                    wire = 2.0 * ring * out_bytes
+                elif matched_coll == "reduce-scatter":
+                    wire = ring * out_bytes * g
+                elif matched_coll == "collective-permute":
+                    wire = float(out_bytes)
+                else:
+                    wire = ring * out_bytes
+                cc.wire_bytes += wire
+                cc.per_coll[matched_coll] = (
+                    cc.per_coll.get(matched_coll, 0.0) + wire
+                )
+            # ---- hbm traffic (true-dtype sizes, see _HBM_OPS note)
+            if op in _HBM_OPS:
+                paren = line[line.index(op + "(") + len(op) + 1:]
+                arg_str = paren.split("), ")[0].split("), kind")[0]
+                opnd = sum(
+                    true_bytes(nm) for nm in _OPND_RE.findall(arg_str)
+                )
+                out_true = out_bytes
+                if op in ("dot", "convolution"):
+                    # XLA:CPU emits f32 dot outputs for bf16 operands (then
+                    # converts back); when every operand traces to a
+                    # smaller true dtype, count the bf16-sized output.
+                    names = [
+                        nm for nm in _OPND_RE.findall(arg_str)
+                        if result_bytes.get(nm, 0)
+                    ]
+                    if names and all(
+                        true_bytes(nm) < result_bytes[nm] for nm in names
+                    ):
+                        out_true = out_bytes // 2
+                cc.hbm_bytes += out_true + opnd
+
+    total = HloCost(0.0, 0.0, 0.0, {})
+
+    def roll(name: str, mult: float, depth: int = 0):
+        if depth > 16:
+            return
+        cc = costs.get(name)
+        if cc is None:
+            return
+        total.flops += mult * cc.flops
+        total.hbm_bytes += mult * cc.hbm_bytes
+        total.wire_bytes += mult * cc.wire_bytes
+        for k, v in cc.per_coll.items():
+            total.per_coll[k] = total.per_coll.get(k, 0.0) + mult * v
+        for callee, m2 in cc.calls:
+            roll(callee, mult * m2, depth + 1)
+
+    # pre-pass: shapes of every op (for dot lhs lookup)
+    if entry:
+        roll(entry, 1.0)
+    return total
+
+
+# shape table for dot-lhs lookups, built lazily per analyze call ------------
+_lhs_shapes: dict[str, tuple] = {}
+
+
+def _build_shape_table(text: str):
+    _lhs_shapes.clear()
+    for line in text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            _, shapes = _shape_info(m.group(2))
+            if shapes:
+                _lhs_shapes[m.group(1)] = shapes[0]
+
+
+_orig_analyze = analyze_hlo
+
+
+def analyze_hlo(text: str, world: int = 1) -> HloCost:  # noqa: F811
+    _build_shape_table(text)
+    return _orig_analyze(text, world)

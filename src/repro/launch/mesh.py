@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (required so smoke tests see 1 CPU device while
+the dry-run sees 512 placeholder devices).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 (2 pods, 512 chips).
+
+    With the dry-run's 512 placeholder devices the single-pod mesh uses the
+    first 256; on real hardware the slice is the pod's own device list.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devs)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import"
+        )
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — for unit tests."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"))

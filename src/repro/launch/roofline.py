@@ -1,0 +1,164 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs   / peak_FLOP/s          (per-device HLO)
+    memory     = HLO_bytes   / HBM_bw
+    collective = wire_bytes  / link_bw
+
+``cost_analysis()`` of the SPMD-partitioned executable is per-device, so no
+further division by chip count is needed.  Collective bytes are NOT in
+cost_analysis — we parse the optimized HLO and sum wire traffic per op with
+ring-algorithm factors:
+
+    all-gather(out N, group g):      (g-1)/g · N
+    reduce-scatter(in N, group g):   (g-1)/g · N
+    all-reduce(in N, group g):     2·(g-1)/g · N   (RS + AG)
+    all-to-all(in N, group g):       (g-1)/g · N
+    collective-permute(in N):        N
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _bytes_of_type(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[G,S] -> G groups of size S
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    per_op: dict = field(default_factory=dict)
+    count: int = 0
+
+
+def collective_bytes(hlo_text: str, world: int) -> CollectiveStats:
+    """Sum per-device wire bytes of every collective in the HLO."""
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        out_type, op = m.group(1), m.group(2)
+        g = _group_size(line, world)
+        nbytes = _bytes_of_type(out_type)
+        ring = (g - 1) / g if g > 1 else 0.0
+        if op == "all-reduce":
+            wire = 2.0 * ring * nbytes
+        elif op == "all-gather":
+            wire = ring * nbytes        # out-size based
+        elif op == "reduce-scatter":
+            wire = ring * nbytes * g    # out is 1/g of input; wire ~ in·(g-1)/g
+        elif op == "all-to-all":
+            wire = ring * nbytes
+        else:  # collective-permute
+            wire = float(nbytes)
+        stats.wire_bytes += wire
+        stats.per_op[op] = stats.per_op.get(op, 0.0) + wire
+        stats.count += 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_per_device: float
+    useful_ratio: float
+    collectives: dict
+
+    def to_dict(self):
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_per_device": self.model_flops_per_device,
+            "useful_flop_ratio": self.useful_ratio,
+            "collectives": self.collectives,
+        }
+
+
+def analyze(compiled, model_flops_total: float, world: int) -> Roofline:
+    """Roofline terms from the while-aware HLO analyzer (hlo_analysis.py).
+
+    XLA's own cost_analysis undercounts remat'd backward loops, so all
+    three terms come from our analyzer over the SPMD-partitioned module
+    (per-device by construction).
+    """
+    from .hlo_analysis import analyze_hlo
+
+    cost = analyze_hlo(compiled.as_text(), world)
+    flops = cost.flops
+    hbm = cost.hbm_bytes
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = cost.wire_bytes / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_total / world
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, wire_bytes=cost.wire_bytes,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops_per_device=mf,
+        useful_ratio=(mf / flops) if flops else 0.0,
+        collectives=cost.per_coll,
+    )

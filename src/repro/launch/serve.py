@@ -1,0 +1,69 @@
+"""Batched serving driver: prefill + greedy decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import get_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+
+    b, s = args.batch, args.prompt_len
+    max_len = s + args.gen
+    prompts = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.random.normal(
+            key, (b, cfg.frontend_len, cfg.d_model), cfg.compute_dtype
+        )
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.frontend_len, cfg.d_model), cfg.compute_dtype
+        )
+
+    cache = model.init_cache(b, max_len)
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    t0 = time.time()
+    logits, cache = model.prefill(params, batch, cache)
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
+    t1 = time.time()
+    out = [tok]
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok, jnp.int32(s + i))
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
+        out.append(tok)
+    toks = jnp.concatenate(out, axis=1).block_until_ready()
+    t2 = time.time()
+    print(f"prefill {b}x{s} in {t1-t0:.2f}s; "
+          f"decoded {args.gen-1} steps in {t2-t1:.2f}s "
+          f"({(t2-t1)/max(args.gen-1,1)*1000:.0f} ms/step/batch)")
+    print("sample tokens:", toks[0, :10].tolist())
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .model_api import Model, batch_specs, count_params, get_model  # noqa: F401

@@ -1,0 +1,528 @@
+"""Model building blocks, sharding-aware and memory-rooflined.
+
+Design notes (DESIGN.md §4/§6):
+
+* Attention is **query-chunked** (lax.scan over q chunks, jax.checkpoint per
+  chunk): peak activation memory is O(q_chunk·S) instead of O(S²) — the
+  memory-roofline analogue of the paper's pencil sweep (only a face of the
+  iteration space is live in fast memory at a time).
+* GQA head handling: parameters keep the *true* head counts; compute pads /
+  replicates heads **in-graph** to counts divisible by the tensor-parallel
+  degree — the paper's §6 padding remedy applied to the TP mesh axis.
+  (`ModelCfg.padded_heads` / `stored_kv_heads` define the mapping.)
+* MoE uses sort-based capacity dispatch (no dense all-experts compute, so
+  HLO FLOPs stay honest for the roofline).
+* Every block is pure: (cfg, params, x, ...) -> y.  Params are dicts of
+  jnp arrays; ParamSpec trees with logical axes live next to the init fns.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.parallel.sharding import ParamSpec
+
+f32 = jnp.float32
+
+# ---------------------------------------------------------------------------
+# Norms / activations / rope.
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(f32)
+    y = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(f32)).astype(x.dtype)
+
+
+def gated_rms_norm(x, z, w, eps: float = 1e-6):
+    """Mamba2's RMSNormGated: norm(x * silu(z))."""
+    return rms_norm(x * jax.nn.silu(z.astype(f32)).astype(x.dtype), w, eps)
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D), pos: (B, S) or (S,).  Rotates pairs (x_i, x_{i+D/2})."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=f32) / half)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = pos.astype(f32)[:, :, None] * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(f32), x[..., half:].astype(f32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Head padding for TP (paper §6 applied to the mesh).
+# ---------------------------------------------------------------------------
+
+def pad_heads(t: jnp.ndarray, target: int) -> jnp.ndarray:
+    """(B, S, H, D) -> (B, S, target, D) zero-padded (tail)."""
+    h = t.shape[2]
+    if h == target:
+        return t
+    return jnp.pad(t, ((0, 0), (0, 0), (0, target - h), (0, 0)))
+
+
+def pad_q_heads(t: jnp.ndarray, cfg, axis: int = 2) -> jnp.ndarray:
+    """Pad the q-head axis to cfg.padded_heads.
+
+    MHA: tail pad.  GQA (arctic 56→64): pad *within each kv group* so the
+    q→kv map stays a consecutive repeat (see ModelCfg.padded_heads).
+    """
+    hq, hp, hkv = cfg.n_heads, cfg.padded_heads, cfg.n_kv_heads
+    if hp == hq:
+        return t
+    if hq == hkv:
+        pads = [(0, 0)] * t.ndim
+        pads[axis] = (0, hp - hq)
+        return jnp.pad(t, pads)
+    g, gp = hq // hkv, hp // hkv
+    shape = list(t.shape)
+    grouped = t.reshape(*shape[:axis], hkv, g, *shape[axis + 1:])
+    pads = [(0, 0)] * grouped.ndim
+    pads[axis + 1] = (0, gp - g)
+    padded = jnp.pad(grouped, pads)
+    return padded.reshape(*shape[:axis], hp, *shape[axis + 1:])
+
+
+def to_stored_kv(t: jnp.ndarray, cfg) -> jnp.ndarray:
+    """True kv heads -> stored (shardable) kv heads: consecutive repeat or
+    zero pad, per ModelCfg.stored_kv_heads."""
+    hkv, hs = t.shape[2], cfg.stored_kv_heads
+    if hs == hkv:
+        return t
+    if cfg.n_heads == cfg.n_kv_heads:
+        return pad_heads(t, hs)  # padded-MHA: zero tail, aligned with q pad
+    return jnp.repeat(t, hs // hkv, axis=2)  # GQA replication
+
+
+def expand_kv(t: jnp.ndarray, hq: int) -> jnp.ndarray:
+    """Stored kv heads -> one kv head per q head (consecutive repeat —
+    composes with to_stored_kv to the true GQA mapping).
+
+    NOTE: no longer used by attention itself (the grouped einsum in
+    _attn_chunk avoids materializing the repeat — §Perf global it.1);
+    kept as the reference semantics the property tests check against."""
+    hs = t.shape[2]
+    if hs == hq:
+        return t
+    return jnp.repeat(t, hq // hs, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Attention.
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attn_chunk(q, k, v, pos_q, pos_k, causal, window, dtype):
+    """q: (B,C,Hq,D); k,v: (B,T,Hs,D) with Hs | Hq (GQA groups).
+
+    Grouped einsum — the stored kv heads are NEVER materialized at Hq
+    width (a jnp.repeat there would multiply KV bytes moved by the group
+    size, 8× on llama3: exactly the waste the paper's traffic bounds
+    count).  pos_q: (B,C); pos_k: (B,T)."""
+    b, c, hq, d = q.shape
+    hs = k.shape[2]
+    g = hq // hs
+    scale = d ** -0.5
+    qg = q.reshape(b, c, hs, g, d)
+    scores = jnp.einsum(
+        "bchgd,bthd->bhgct", qg, k, preferred_element_type=f32
+    ) * scale
+    mask = jnp.ones((), dtype=bool)
+    pq = pos_q[:, None, None, :, None]  # (B,1,1,C,1)
+    pk = pos_k[:, None, None, None, :]  # (B,1,1,1,T)
+    if causal:
+        mask = mask & (pq >= pk)
+    else:
+        mask = mask & (pk >= 0)  # pos_k < 0 marks unwritten cache slots
+    if window is not None:
+        mask = mask & (pq - pk < window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgct,bthd->bchgd", probs.astype(dtype), v,
+        preferred_element_type=f32,
+    ).astype(dtype)
+    return out.reshape(b, c, hq, d)
+
+
+def chunked_attention(
+    q, k, v, pos_q, pos_k, *, causal: bool, window: Optional[int],
+    q_chunk: int, dtype,
+):
+    """Query-chunked attention (memory: O(q_chunk * T) scores)."""
+    b, s, h, d = q.shape
+    if pos_q.ndim == 1:
+        pos_q = jnp.broadcast_to(pos_q[None], (b, s))
+    if pos_k.ndim == 1:
+        pos_k = jnp.broadcast_to(pos_k[None], (b, k.shape[1]))
+    if s <= q_chunk or s % q_chunk != 0:
+        return _attn_chunk(q, k, v, pos_q, pos_k, causal, window, dtype)
+    nc = s // q_chunk
+    qs = q.reshape(b, nc, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    ps = pos_q.reshape(b, nc, q_chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        qc, pc = inp
+        return carry, _attn_chunk(qc, k, v, pc, pos_k, causal, window, dtype)
+
+    _, outs = lax.scan(body, None, (qs, ps))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+def attention_param_specs(cfg, d_in: int | None = None) -> dict[str, ParamSpec]:
+    d = d_in or cfg.d_model
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kv_tensor = "tensor" if (cfg.n_kv_heads % max(cfg.tp, 1) == 0) else ""
+    pd = cfg.param_dtype
+    specs = {
+        "wq": ParamSpec((d, hq, hd), pd, ("fsdp", "tensor", "")),
+        "wk": ParamSpec((d, hkv, hd), pd, ("fsdp", kv_tensor, "")),
+        "wv": ParamSpec((d, hkv, hd), pd, ("fsdp", kv_tensor, "")),
+        "wo": ParamSpec((hq, hd, d), pd, ("tensor", "", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        specs |= {
+            "bq": ParamSpec((hq, hd), pd, ("tensor", "")),
+            "bk": ParamSpec((hkv, hd), pd, (kv_tensor, "")),
+            "bv": ParamSpec((hkv, hd), pd, (kv_tensor, "")),
+        }
+    return specs
+
+
+INVALID_POS = jnp.int32(2**30)  # causal mask (pq >= pk) always rejects it
+
+
+def attention_block(
+    cfg,
+    p: dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+    cache: Optional[dict] = None,
+    x_kv: Optional[jnp.ndarray] = None,
+    cross: bool = False,
+):
+    """Full attention sublayer.  Returns (out, new_cache).
+
+    Self-attn KV cache protocol (ring buffer — SWA uses Tc = window):
+      cache = {'k': (B,Tc,Hs,D), 'v': ..., 'positions': (Tc,), 'pos': scalar}
+    Unwritten slots carry INVALID_POS in 'positions' so the causal mask
+    rejects them.  Write slot = pos % Tc.
+    Cross-attention (cross=True): kv from x_kv (train/prefill) or from the
+    precomputed cache {'k','v'} (decode).
+    """
+    cdt = cfg.compute_dtype
+    hq_p = cfg.padded_heads
+    cross = cross or (x_kv is not None)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+    if use_rope and not cross:
+        pos_q = pos if pos.ndim else pos + jnp.arange(x.shape[1])
+        q = rope(q, pos_q, cfg.rope_theta)
+    else:
+        pos_q = pos if pos.ndim else pos + jnp.arange(x.shape[1])
+
+    if cross and cache is not None and x_kv is None:
+        k_st, v_st = cache["k"], cache["v"]
+        new_cache = cache
+        pos_k = jnp.arange(k_st.shape[1])
+    else:
+        src = x_kv if cross else x
+        k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(cdt))
+        v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(cdt))
+        if "bk" in p:
+            k = k + p["bk"].astype(cdt)
+            v = v + p["bv"].astype(cdt)
+        if use_rope and not cross:
+            k = rope(k, pos_q, cfg.rope_theta)
+        k_st, v_st = to_stored_kv(k, cfg), to_stored_kv(v, cfg)
+        if cache is not None and not cross:
+            tc = cache["k"].shape[1]
+            s = x.shape[1]
+            idx = cache["pos"] % tc  # ring write (no-op for full caches)
+            k_st = lax.dynamic_update_slice_in_dim(cache["k"], k_st, idx, axis=1)
+            v_st = lax.dynamic_update_slice_in_dim(cache["v"], v_st, idx, axis=1)
+            positions = lax.dynamic_update_slice_in_dim(
+                cache["positions"], cache["pos"] + jnp.arange(s, dtype=jnp.int32),
+                idx, axis=0,
+            )
+            new_cache = {
+                "k": k_st, "v": v_st, "positions": positions,
+                "pos": cache["pos"] + s,
+            }
+            pos_k = positions
+        elif cache is not None:
+            new_cache = {"k": k_st, "v": v_st}
+            pos_k = jnp.arange(k_st.shape[1])
+        else:
+            new_cache = None
+            pos_k = jnp.arange(k_st.shape[1]) if cross else pos_q
+    q = pad_q_heads(q, cfg)
+    out = chunked_attention(
+        q, k_st, v_st, pos_q, pos_k, causal=causal and not cross,
+        window=window, q_chunk=cfg.q_chunk, dtype=cdt,
+    )
+    wo = pad_q_heads(p["wo"].astype(cdt), cfg, axis=0)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU).
+# ---------------------------------------------------------------------------
+
+def mlp_param_specs(cfg, d: int | None = None, d_ff: int | None = None,
+                    gated: bool = True) -> dict[str, ParamSpec]:
+    d = d or cfg.d_model
+    ff = d_ff or cfg.d_ff
+    pd = cfg.param_dtype
+    specs = {
+        "w_up": ParamSpec((d, ff), pd, ("fsdp", "tensor")),
+        "w_down": ParamSpec((ff, d), pd, ("tensor", "fsdp")),
+    }
+    if gated:
+        specs["w_gate"] = ParamSpec((d, ff), pd, ("fsdp", "tensor"))
+    return specs
+
+
+def mlp_block(cfg, p, x, act=jax.nn.silu):
+    cdt = cfg.compute_dtype
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cdt))
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cdt))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cdt))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based capacity dispatch).
+# ---------------------------------------------------------------------------
+
+def moe_param_specs(cfg) -> dict[str, ParamSpec]:
+    m = cfg.moe
+    d, ff, e = cfg.d_model, cfg.d_ff, m.n_experts
+    pd = cfg.param_dtype
+    if m.expert_parallel:
+        ax = ("expert", "", "")
+        ax_t = ("expert", "", "")
+    else:
+        ax = ("", "fsdp", "tensor")
+        ax_t = ("", "tensor", "fsdp")
+    specs = {
+        "router": ParamSpec((d, e), pd, ("fsdp", "")),
+        "w1": ParamSpec((e, d, ff), pd, ax),
+        "w3": ParamSpec((e, d, ff), pd, ax),
+        "w2": ParamSpec((e, ff, d), pd, ax_t),
+    }
+    if m.dense_residual:
+        specs["dense"] = mlp_param_specs(cfg)
+    return specs
+
+
+def _moe_route(cfg, p, xf):
+    """Sort-based capacity routing for one token group.  xf: (n, d).
+    Returns (dispatch buffer (E, cap, d), slot_of (n,k), gates (n,k))."""
+    m = cfg.moe
+    cdt = cfg.compute_dtype
+    n, d = xf.shape
+    e, k = m.n_experts, m.top_k
+    logits = jnp.einsum("nd,de->ne", xf, p["router"].astype(cdt)).astype(f32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = lax.top_k(probs, k)  # (n, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    cap = max(int(math.ceil(n * k / e * m.capacity_factor)), 4)
+    flat_e = eidx.reshape(-1)  # (n*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(n * k) - first
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, e * cap)  # overflow slot
+    token_of = order // k
+    disp = jnp.zeros((e * cap + 1, d), dtype=cdt)
+    disp = disp.at[slot].set(xf[token_of].astype(cdt), mode="drop")
+    slot_of = jnp.zeros((n * k,), dtype=jnp.int32).at[order].set(
+        slot.astype(jnp.int32)
+    )
+    return disp[: e * cap].reshape(e, cap, d), slot_of.reshape(n, k), gates
+
+
+def _moe_combine(cfg, y, slot_of, gates):
+    """y: (E, cap, d) expert outputs; gather back per token."""
+    cdt = cfg.compute_dtype
+    e, cap, d = y.shape
+    yf = jnp.concatenate([y.reshape(e * cap, d), jnp.zeros((1, d), cdt)])
+    picked = yf[slot_of]  # (n, k, d)
+    return jnp.sum(picked * gates.astype(cdt)[..., None], axis=1)
+
+
+def moe_block(cfg, p, x):
+    """Top-k capacity MoE with *data-parallel-local* dispatch: tokens are
+    grouped by DP shard (leading batch rows) and each group sorts/dispatches
+    independently (vmap) — the scatter/argsort never crosses shards, so
+    GSPMD keeps dispatch buffers (G, E·cap, d) batch-sharded instead of
+    replicating a global (N·k,) sort.  The §5 multi-RHS budget split, on
+    the token axis.
+
+    Expert compute happens OUTSIDE the vmap so its sharding is explicit:
+    TP (default) shards the expert ff dim over 'model'; EP
+    (cfg.moe.expert_parallel + the 'expert' rule) shards the expert axis
+    instead — GSPMD then moves tokens with an all-to-all, the Switch/GShard
+    schedule."""
+    from repro.parallel.sharding import constrain
+
+    m = cfg.moe
+    cdt = cfg.compute_dtype
+    b, s, d = x.shape
+    g = cfg.dp if (cfg.dp > 1 and b % cfg.dp == 0) else 1
+    xg = constrain(x.reshape(g, (b // g) * s, d), ("batch", "", ""))
+    h, slot_of, gates = jax.vmap(lambda xf: _moe_route(cfg, p, xf))(xg)
+    h = constrain(h, ("batch", "expert", "", ""))  # (G, E, cap, d)
+    a1 = jnp.einsum("gecd,edf->gecf", h, p["w1"].astype(cdt))
+    a3 = jnp.einsum("gecd,edf->gecf", h, p["w3"].astype(cdt))
+    y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(a1) * a3, p["w2"].astype(cdt))
+    # (§Perf it.4, REFUTED: constraining this contraction output d-sharded
+    # did not turn the all-reduce into a reduce-scatter — GSPMD kept the AR
+    # and added 300 GB of gathers.  Kept batch/expert-sharded.)
+    y = constrain(y, ("batch", "expert", "", ""))
+    out = jax.vmap(lambda yi, si, gi: _moe_combine(cfg, yi, si, gi))(
+        y, slot_of, gates
+    )
+    out = constrain(out, ("batch", "", "")).reshape(b, s, d)
+    if m.dense_residual:
+        out = out + mlp_block(cfg, p["dense"], x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with paper-§6 vocab padding + chunked loss.
+# ---------------------------------------------------------------------------
+
+def embed_param_specs(cfg) -> dict[str, ParamSpec]:
+    pd = cfg.param_dtype
+    specs = {
+        "embedding": ParamSpec(
+            (cfg.vocab_padded, cfg.d_model), pd, ("tensor", "fsdp")
+        ),
+        "final_norm": ParamSpec((cfg.d_model,), pd, ("",)),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec(
+            (cfg.d_model, cfg.vocab_padded), pd, ("fsdp", "tensor")
+        )
+    return specs
+
+
+def embed_tokens(cfg, p, tokens):
+    """Token embedding.  For multi-token (train/prefill) inputs the lookup
+    is a one-hot matmul: its VJP is a dot (vocab-sharded reduce) instead of
+    the gather VJP's giant scatter-add — the single biggest bwd buffer on
+    large-vocab archs.  Single-token decode keeps the cheap gather."""
+    table = p["embedding"].astype(cfg.compute_dtype)
+    if tokens.shape[-1] > 1:
+        onehot = jax.nn.one_hot(
+            tokens, cfg.vocab_padded, dtype=cfg.compute_dtype
+        )
+        return jnp.einsum("bsv,vd->bsd", onehot, table)
+    return table[tokens]
+
+
+def unembed(cfg, p, x):
+    """Logits in compute dtype.  Deliberately NOT preferred_element_type=
+    f32: jax reuses the preferred type on the transpose dots, which would
+    seed an f32 cotangent chain through every layer (2× activation memory
+    — measured on the llama3-405b dry-run).  On the TPU target the MXU
+    accumulates bf16 dots in f32 internally regardless."""
+    cdt = cfg.compute_dtype
+    if cfg.tie_embeddings:
+        w = p["embedding"].astype(cdt).T
+    else:
+        w = p["lm_head"].astype(cdt)
+    return jnp.einsum("bsd,dv->bsv", x, w)
+
+
+def chunked_xent(cfg, p, x, targets, mask):
+    """Sequence-chunked softmax cross-entropy: logits (B, S, V) are never
+    materialized — only (B, loss_chunk, V) per scan step (memory roofline;
+    same idea as the attention pencil sweep)."""
+    b, s, d = x.shape
+    c = cfg.loss_chunk
+    if s % c != 0 or s <= c:
+        return _xent_chunk(cfg, p, x, targets, mask)
+    nc = s // c
+    xr = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    tr = targets.reshape(b, nc, c).transpose(1, 0, 2)
+    mr = mask.reshape(b, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xc, tc, mc = inp
+        num, den = _xent_chunk(cfg, p, xc, tc, mc, reduce=False)
+        return (carry[0] + num, carry[1] + den), None
+
+    (num, den), _ = lax.scan(body, (jnp.zeros((), f32), jnp.zeros((), f32)),
+                             (xr, tr, mr))
+    return num / jnp.maximum(den, 1.0)
+
+
+def _xent_chunk(cfg, p, x, targets, mask, reduce=True):
+    """Sharding-friendly CE: every op on the vocab axis is elementwise or a
+    reduction, so vocab-sharded (TP) logits never all-gather.  The padded
+    vocab entries (paper §6 padding) are neutralized with an iota compare,
+    and the gold logit is extracted with a masked sum instead of a gather."""
+    logits = unembed(cfg, p, x).astype(f32)
+    iota = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    if cfg.vocab_padded != cfg.vocab:
+        logits = jnp.where(iota < cfg.vocab, logits, NEG_INF)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.sum(
+        jnp.where(iota == targets[..., None], logits, 0.0), axis=-1
+    )
+    nll = (logz - gold) * mask
+    num, den = jnp.sum(nll), jnp.sum(mask)
+    if reduce:
+        return num / jnp.maximum(den, 1.0)
+    return num, den
+
+
+# ---------------------------------------------------------------------------
+# Param init from spec trees.
+# ---------------------------------------------------------------------------
+
+def init_from_specs(specs, key, scale: float = 0.02):
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = []
+    for k, spec in zip(keys, leaves):
+        if len(spec.shape) <= 1 or spec.shape[-1] == 1:
+            vals.append(jnp.ones(spec.shape, spec.dtype))
+        else:
+            vals.append(
+                (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(
+                    spec.dtype
+                )
+            )
+    return jax.tree.unflatten(treedef, vals)

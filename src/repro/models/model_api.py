@@ -1,0 +1,166 @@
+"""Unified model protocol: every family exposes the same five functions.
+
+    specs   = model.param_specs()                 # ParamSpec tree
+    params  = model.init(key)
+    loss    = model.loss(params, batch)           # train objective
+    logits, cache = model.prefill(params, batch, cache)
+    logits, cache = model.decode_step(params, cache, token, pos)
+
+plus ``cache_specs`` / ``batch_specs`` so the launcher can build sharded
+ShapeDtypeStructs for the dry-run without allocating anything.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from math import prod
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg, ShapeCfg
+from repro.parallel.sharding import ParamSpec
+
+from . import encdec, ssm, transformer
+from .layers import init_from_specs
+
+__all__ = ["Model", "get_model", "count_params", "batch_specs"]
+
+
+@dataclass
+class Model:
+    cfg: ModelCfg
+    _specs: Callable
+    _loss: Callable
+    _prefill: Callable
+    _decode: Callable
+    _cache_specs: Callable
+    _init_cache: Callable
+
+    def param_specs(self):
+        return self._specs(self.cfg)
+
+    def init(self, key):
+        return init_from_specs(self.param_specs(), key)
+
+    def loss(self, params, batch):
+        return self._loss(self.cfg, params, batch)
+
+    def prefill(self, params, batch, cache):
+        return self._prefill(self.cfg, params, batch, cache)
+
+    def decode_step(self, params, cache, token, pos):
+        return self._decode(self.cfg, params, cache, token, pos)
+
+    def cache_specs(self, batch: int, max_len: int, ring: bool = True):
+        return self._cache_specs(self.cfg, batch, max_len, ring=ring)
+
+    def init_cache(self, batch: int, max_len: int):
+        return self._init_cache(self.cfg, batch, max_len)
+
+
+def _lm_prefill(cfg, params, batch, cache):
+    return transformer.lm_prefill(
+        cfg, params, batch["tokens"], cache,
+        prefix_embeds=batch.get("prefix_embeds"),
+    )
+
+
+def _ssm_prefill(cfg, params, batch, cache):
+    return ssm.ssm_prefill(cfg, params, batch["tokens"], cache)
+
+
+def get_model(cfg: ModelCfg) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "hybrid-attn"):
+        return Model(
+            cfg, transformer.lm_param_specs, transformer.lm_loss,
+            _lm_prefill, transformer.lm_decode_step,
+            transformer.lm_cache_specs, transformer.lm_init_cache,
+        )
+    if fam in ("ssm", "hybrid"):
+        return Model(
+            cfg, ssm.ssm_param_specs, ssm.ssm_loss,
+            _ssm_prefill, ssm.ssm_decode_step,
+            ssm.ssm_cache_specs, ssm.ssm_init_cache,
+        )
+    if fam == "encdec":
+        return Model(
+            cfg, encdec.encdec_param_specs, encdec.encdec_loss,
+            encdec.encdec_prefill, encdec.encdec_decode_step,
+            encdec.encdec_cache_specs, encdec.encdec_init_cache,
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (for MODEL_FLOPS = 6·N·D in the roofline).
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelCfg, active_only: bool = False) -> int:
+    model = get_model(cfg)
+    specs = model.param_specs()
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    total = sum(prod(s.shape) for s in leaves)
+    if active_only and cfg.moe is not None:
+        # expert weights count at top_k / n_experts utilization
+        expert = sum(
+            prod(s.shape)
+            for path, s in jax.tree.flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+            )[0]
+            if any(getattr(k, "key", None) in ("w1", "w2", "w3") for k in path)
+        )
+        total = total - expert + expert * cfg.moe.top_k // cfg.moe.n_experts
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Batch specs per (arch × shape) — the dry-run inputs.
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelCfg, shape: ShapeCfg) -> dict:
+    """ParamSpec tree for the input batch of a given shape config.
+
+    train/prefill: full (B, S) token batch [+ stub frontend embeddings].
+    decode: one token per sequence + the KV/SSM cache specs.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            f = cfg.frontend_len
+            batch = {
+                "tokens": ParamSpec((b, s - f), i32, ("batch", "")),
+                "targets": ParamSpec((b, s - f), i32, ("batch", "")),
+                "mask": ParamSpec((b, s - f), jnp.float32, ("batch", "")),
+                "prefix_embeds": ParamSpec(
+                    (b, f, cfg.d_model), cfg.compute_dtype, ("batch", "", "")
+                ),
+            }
+        elif cfg.family == "encdec":
+            batch = {
+                "tokens": ParamSpec((b, s), i32, ("batch", "")),
+                "targets": ParamSpec((b, s), i32, ("batch", "")),
+                "mask": ParamSpec((b, s), jnp.float32, ("batch", "")),
+                "frames": ParamSpec(
+                    (b, cfg.frontend_len, cfg.d_model), cfg.compute_dtype,
+                    ("batch", "", ""),
+                ),
+            }
+        else:
+            batch = {
+                "tokens": ParamSpec((b, s), i32, ("batch", "")),
+                "targets": ParamSpec((b, s), i32, ("batch", "")),
+                "mask": ParamSpec((b, s), jnp.float32, ("batch", "")),
+            }
+        if shape.kind == "prefill":
+            batch.pop("targets")
+            batch.pop("mask")
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "token": ParamSpec((b, 1), i32, ("batch", "")),
+        "pos": ParamSpec((), i32, ()),
+    }

@@ -1,0 +1,360 @@
+"""Mamba2 (SSD, state-space duality) and the Zamba2 hybrid.
+
+SSD is implemented with the chunked algorithm of the Mamba2 paper: the
+sequence is split into chunks of Q tokens; within a chunk the dual
+(quadratic-attention) form is used, between chunks the recurrent state is
+propagated.  The chunking IS a 1-D instance of the paper's cache-fitting
+pencil decomposition — Q plays the role of the scanning-face extent and is
+chosen by the same VMEM surface-to-volume trade (see configs).
+
+Zamba2 = stack of Mamba2 blocks with one *shared* attention+MLP block
+applied every ``attn_every`` layers (parameters shared across
+applications; each application has its own KV cache).  Simplification vs.
+the released model: we apply the shared block to the hidden state directly
+(no concat-with-embedding / per-application LoRA) — noted in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import ParamSpec
+
+from .layers import (
+    INVALID_POS,
+    attention_block,
+    attention_param_specs,
+    chunked_xent,
+    embed_param_specs,
+    embed_tokens,
+    gated_rms_norm,
+    mlp_block,
+    mlp_param_specs,
+    rms_norm,
+    unembed,
+)
+from .transformer import stack_specs
+
+f32 = jnp.float32
+
+__all__ = [
+    "mamba_layer_specs",
+    "ssm_param_specs",
+    "ssm_loss",
+    "ssm_prefill",
+    "ssm_decode_step",
+    "ssm_cache_specs",
+    "ssm_init_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block.
+# ---------------------------------------------------------------------------
+
+def mamba_layer_specs(cfg) -> dict[str, ParamSpec]:
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm.state, cfg.ssm_heads
+    w = cfg.ssm.conv_width
+    pd = cfg.param_dtype
+    conv_ch = din + 2 * n
+    h_ax = "tensor" if h % max(cfg.tp, 1) == 0 else ""
+    return {
+        "ln": ParamSpec((d,), pd, ("",)),
+        "w_zx": ParamSpec((d, 2 * din), pd, ("fsdp", "tensor")),
+        "w_bc": ParamSpec((d, 2 * n), pd, ("fsdp", "")),
+        "w_dt": ParamSpec((d, h), pd, ("fsdp", h_ax)),
+        "dt_bias": ParamSpec((h,), pd, ("",)),
+        "A_log": ParamSpec((h,), pd, ("",)),
+        "D": ParamSpec((h,), pd, ("",)),
+        "conv_w": ParamSpec((w, conv_ch), pd, ("", "tensor")),
+        "conv_b": ParamSpec((conv_ch,), pd, ("tensor",)),
+        "norm_w": ParamSpec((din,), pd, ("",)),
+        "out_proj": ParamSpec((din, d), pd, ("tensor", "fsdp")),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b, state: Optional[jnp.ndarray]):
+    """Depthwise causal conv, width W.  xbc: (B,S,C).
+    state: (B, W-1, C) tail of the previous sequence (decode) or None.
+    Returns (out, new_state)."""
+    w = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)  # (B, S+W-1, C)
+    out = jnp.zeros_like(xbc)
+    for i in range(w):  # width is 4 — unrolled stencil (1-D, radius w-1)
+        out = out + full[:, i : i + xbc.shape[1], :] * conv_w[i]
+    out = out + conv_b
+    new_state = full[:, -(w - 1):, :]
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(x, dt, A, B_, C_, chunk):
+    """Streaming chunked SSD.  x: (B,L,H,P); dt: (B,L,H); A: (H,) (neg);
+    B_, C_: (B,L,N).  Returns (y: (B,L,H,P), final_state: (B,H,P,N)).
+
+    One chunk is live at a time (lax.scan over chunks, jax.checkpoint per
+    chunk): the intra-chunk quadratic factor (B,Q,Q,H) never materializes
+    for the whole sequence — the SSD equivalent of the paper's pencil
+    sweep, with Q chosen by the tile selector (configs).
+    """
+    b, l, h, p = x.shape
+    n = B_.shape[-1]
+    q = min(chunk, l)
+    while l % q:  # largest divisor of l ≤ chunk (exactness over speed for
+        q -= 1    # odd prompt lengths; assigned shapes divide evenly)
+    nc = l // q
+    # (nc, B, Q, ...) scan-major layout
+    xs = x.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    dts = dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    Bs = B_.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    Cs = C_.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    ii = jnp.arange(q)
+    tri = (ii[:, None] >= ii[None, :])[None, :, :, None]  # (1,Qi,Qj,1)
+
+    @jax.checkpoint
+    def step(hprev, inp):
+        xc, dtc, Bc, Cc = inp  # (B,Q,...)
+        dA = dtc * A  # (B,Q,H)
+        dA_cs = jnp.cumsum(dA, axis=1)
+        # contribution of the incoming state
+        y_off = jnp.einsum(
+            "bin,bhpn,bih->bihp", Cc, hprev, jnp.exp(dA_cs),
+            preferred_element_type=f32,
+        )
+        # intra-chunk dual form
+        diff = dA_cs[:, :, None, :] - dA_cs[:, None, :, :]  # (B,Qi,Qj,H)
+        lmat = jnp.where(tri, jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", Cc, Bc, preferred_element_type=f32)
+        w = scores[..., None] * lmat * dtc[:, None, :, :]  # (B,Qi,Qj,H)
+        y = jnp.einsum("bijh,bjhp->bihp", w, xc, preferred_element_type=f32)
+        # state update
+        decay_out = jnp.exp(dA_cs[:, -1:, :] - dA_cs)  # (B,Q,H)
+        states = jnp.einsum(
+            "bjn,bjh,bjhp->bhpn", Bc, dtc * decay_out, xc,
+            preferred_element_type=f32,
+        )
+        hnew = hprev * jnp.exp(dA_cs[:, -1, :])[:, :, None, None] + states
+        return hnew, y + y_off
+
+    h0 = jnp.zeros((b, h, p, n), f32)
+    hlast, ys = lax.scan(step, h0, (xs, dts, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, l, h, p)
+    return y, hlast
+
+
+def mamba_block(cfg, p, x, ssm_state=None, conv_state=None):
+    """x: (B,S,D).  Returns (y, new_ssm_state, new_conv_state)."""
+    cdt = cfg.compute_dtype
+    b, s, d = x.shape
+    din, n, h = cfg.d_inner, cfg.ssm.state, cfg.ssm_heads
+    ph = cfg.ssm.head_dim
+    zx = jnp.einsum("bsd,de->bse", x, p["w_zx"].astype(cdt))
+    z, xin = zx[..., :din], zx[..., din:]
+    bc = jnp.einsum("bsd,de->bse", x, p["w_bc"].astype(cdt))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(cdt))
+    dt = jax.nn.softplus(dt.astype(f32) + p["dt_bias"].astype(f32))
+    xbc = jnp.concatenate([xin, bc], axis=-1)
+    xbc, new_conv = _causal_conv(
+        xbc, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt), conv_state
+    )
+    xin, B_, C_ = xbc[..., :din], xbc[..., din:din + n], xbc[..., din + n:]
+    A = -jnp.exp(p["A_log"].astype(f32))
+    xh = xin.reshape(b, s, h, ph).astype(f32)
+    if s == 1 and ssm_state is not None:
+        # recurrent decode step
+        dA = jnp.exp(dt[:, 0] * A)  # (B,H)
+        dx = dt[:, 0, :, None] * xh[:, 0]  # (B,H,P)
+        new_state = ssm_state * dA[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", dx, B_[:, 0].astype(f32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", new_state, C_[:, 0].astype(f32))
+        y = y[:, None]  # (B,1,H,P)
+    else:
+        y, new_state = _ssd_chunked(
+            xh, dt, A, B_.astype(f32), C_.astype(f32), cfg.ssm.chunk
+        )
+    y = y + p["D"].astype(f32)[:, None] * xh
+    y = y.reshape(b, s, din).astype(cdt)
+    y = gated_rms_norm(y, z, p["norm_w"])
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cdt)), new_state, new_conv
+
+
+# ---------------------------------------------------------------------------
+# Full SSM / hybrid model.
+# ---------------------------------------------------------------------------
+
+def _n_attn_apps(cfg) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+def ssm_param_specs(cfg) -> dict:
+    specs = {
+        "embed": embed_param_specs(cfg),
+        "layers": stack_specs(mamba_layer_specs(cfg), cfg.n_layers),
+    }
+    if cfg.attn_every:
+        specs["shared_attn"] = {
+            "ln1": ParamSpec((cfg.d_model,), cfg.param_dtype, ("",)),
+            "ln2": ParamSpec((cfg.d_model,), cfg.param_dtype, ("",)),
+            "attn": attention_param_specs(cfg),
+            "ffn": mlp_param_specs(cfg),
+        }
+    return specs
+
+
+def _shared_attn_apply(cfg, sp, x, pos, cache):
+    h, new_cache = attention_block(
+        cfg, sp["attn"], rms_norm(x, sp["ln1"]), pos, causal=True,
+        window=cfg.window, cache=cache,
+    )
+    x = x + h
+    x = x + mlp_block(cfg, sp["ffn"], rms_norm(x, sp["ln2"]))
+    return x, new_cache
+
+
+def ssm_forward(cfg, params, tokens, pos, cache=None):
+    """cache = None (train) or the dict from ssm_init_cache."""
+    x = embed_tokens(cfg, params["embed"], tokens)
+    pos = jnp.asarray(pos, jnp.int32)
+    k_every = cfg.attn_every
+    sp = params.get("shared_attn")
+    have_cache = cache is not None
+    ssm_states = cache["ssm"] if have_cache else None
+    conv_states = cache["conv"] if have_cache else None
+    attn_cache = cache["attn"] if (have_cache and k_every) else None
+
+    def body(carry, layer):
+        x, attn_c = carry
+        p_i, i, ssm_s, conv_s = layer
+        from .transformer import _constrain_act
+
+        x = _constrain_act(cfg, x)
+        y, new_ssm, new_conv = mamba_block(
+            cfg, p_i, rms_norm(x, p_i["ln"]), ssm_s, conv_s
+        )
+        x = x + y
+        if k_every:
+            def with_attn(operand):
+                x, attn_c = operand
+                app = i // k_every
+                c_app = jax.tree.map(
+                    lambda a: lax.dynamic_index_in_dim(a, app, 0, keepdims=False),
+                    attn_c,
+                ) if attn_c is not None else None
+                x2, new_c = _shared_attn_apply(cfg, sp, x, pos, c_app)
+                if attn_c is not None:
+                    attn_c = jax.tree.map(
+                        lambda full, new: lax.dynamic_update_index_in_dim(
+                            full, new.astype(full.dtype), app, 0
+                        ),
+                        attn_c, new_c,
+                    )
+                return x2, attn_c
+
+            x, attn_c = lax.cond(
+                (i + 1) % k_every == 0, with_attn, lambda o: o, (x, attn_c)
+            )
+        # Only emit recurrent states when serving — stacking (L,B,H,P,N)
+        # states during training would waste memory (they are throwaway).
+        emit = (new_ssm, new_conv) if have_cache else None
+        return (x, attn_c), emit
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    idx = jnp.arange(cfg.n_layers)
+    g = cfg.remat_groups
+    if g > 1 and not have_cache and cfg.n_layers % g == 0:
+        # two-level scan: whole-group remat (see transformer._scan_blocks)
+        lg = cfg.n_layers // g
+        grouped = jax.tree.map(
+            lambda a: a.reshape((g, lg) + a.shape[1:]), params["layers"]
+        )
+
+        @jax.checkpoint
+        def group_body(carry, inp):
+            from .transformer import _constrain_act
+
+            gp, gi = inp
+            (xc, ac), _ = lax.scan(body, carry, (gp, gi, None, None))
+            return (_constrain_act(cfg, xc), ac), None
+
+        (x, attn_cache), _ = lax.scan(
+            group_body, (x, attn_cache), (grouped, idx.reshape(g, lg))
+        )
+        emitted = None
+    else:
+        (x, attn_cache), emitted = lax.scan(
+            body, (x, attn_cache),
+            (params["layers"], idx, ssm_states, conv_states),
+        )
+    x = rms_norm(x, params["embed"]["final_norm"])
+    new_cache = None
+    if have_cache:
+        new_ssm, new_conv = emitted
+        new_cache = {"ssm": new_ssm, "conv": new_conv}
+        if k_every:
+            new_cache["attn"] = attn_cache
+    return x, new_cache
+
+
+def ssm_loss(cfg, params, batch):
+    x, _ = ssm_forward(cfg, params, batch["tokens"], jnp.int32(0))
+    return chunked_xent(cfg, params["embed"], x, batch["targets"], batch["mask"])
+
+
+def ssm_cache_specs(cfg, batch: int, max_len: int, ring: bool = True) -> dict:
+    n, h, p = cfg.ssm.state, cfg.ssm_heads, cfg.ssm.head_dim
+    w = cfg.ssm.conv_width
+    conv_ch = cfg.d_inner + 2 * n
+    h_ax = "tensor" if h % max(cfg.tp, 1) == 0 else ""
+    specs = {
+        "ssm": ParamSpec((cfg.n_layers, batch, h, p, n), f32,
+                         ("layers", "batch", h_ax, "", "")),
+        "conv": ParamSpec((cfg.n_layers, batch, w - 1, conv_ch), cfg.compute_dtype,
+                          ("layers", "batch", "", "tensor")),
+    }
+    if cfg.attn_every:
+        napp = _n_attn_apps(cfg)
+        hs, hd = cfg.stored_kv_heads, cfg.head_dim
+        specs["attn"] = {
+            "k": ParamSpec((napp, batch, max_len, hs, hd), cfg.compute_dtype,
+                           ("", "batch", "", "tensor", "")),
+            "v": ParamSpec((napp, batch, max_len, hs, hd), cfg.compute_dtype,
+                           ("", "batch", "", "tensor", "")),
+            "positions": ParamSpec((napp, max_len), jnp.int32, ("", "")),
+            "pos": ParamSpec((napp,), jnp.int32, ("",)),
+        }
+    return specs
+
+
+def ssm_init_cache(cfg, batch: int, max_len: int) -> dict:
+    specs = ssm_cache_specs(cfg, batch, max_len)
+    cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    if cfg.attn_every:
+        cache["attn"]["positions"] = jnp.full(
+            specs["attn"]["positions"].shape, INVALID_POS, jnp.int32
+        )
+    return cache
+
+
+def ssm_prefill(cfg, params, tokens, cache):
+    x, new_cache = ssm_forward(cfg, params, tokens, jnp.int32(0), cache=cache)
+    logits = unembed(cfg, params["embed"], x[:, -1:, :])
+    return logits, new_cache
+
+
+def ssm_decode_step(cfg, params, cache, token, pos):
+    x, new_cache = ssm_forward(cfg, params, token, pos, cache=cache)
+    logits = unembed(cfg, params["embed"], x)
+    return logits, new_cache

@@ -1,0 +1,224 @@
+"""Decoder-only transformer LM (dense + MoE + SWA + VLM-prefix variants).
+
+Layers are stacked on a leading 'layers' axis and executed with
+``lax.scan`` (+ per-layer ``jax.checkpoint`` when cfg.remat) so that the
+HLO stays one-layer-sized even for the 126-layer llama3-405b dry-run, and
+XLA can overlap the next layer's FSDP all-gather with the current layer's
+compute (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import ParamSpec
+
+from .layers import (
+    INVALID_POS,
+    attention_block,
+    attention_param_specs,
+    chunked_xent,
+    embed_param_specs,
+    embed_tokens,
+    mlp_block,
+    mlp_param_specs,
+    moe_block,
+    moe_param_specs,
+    rms_norm,
+    unembed,
+)
+
+__all__ = [
+    "stack_specs",
+    "lm_param_specs",
+    "lm_forward",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode_step",
+    "lm_cache_specs",
+]
+
+
+def stack_specs(specs: Any, n: int) -> Any:
+    """Add a leading 'layers' axis to every ParamSpec leaf."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, s.dtype, ("layers",) + s.axes),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _layer_specs(cfg) -> dict:
+    specs = {
+        "ln1": ParamSpec((cfg.d_model,), cfg.param_dtype, ("",)),
+        "ln2": ParamSpec((cfg.d_model,), cfg.param_dtype, ("",)),
+        "attn": attention_param_specs(cfg),
+    }
+    if cfg.moe is not None:
+        specs["ffn"] = moe_param_specs(cfg)
+    else:
+        specs["ffn"] = mlp_param_specs(cfg)
+    return specs
+
+
+def lm_param_specs(cfg) -> dict:
+    return {
+        "embed": embed_param_specs(cfg),
+        "layers": stack_specs(_layer_specs(cfg), cfg.n_layers),
+    }
+
+
+def _block(cfg, p, x, pos, cache):
+    h, new_cache = attention_block(
+        cfg, p["attn"], rms_norm(x, p["ln1"]), pos,
+        causal=True, window=cfg.window, cache=cache,
+    )
+    x = x + h
+    ffn_in = rms_norm(x, p["ln2"])
+    if cfg.moe is not None:
+        x = x + moe_block(cfg, p["ffn"], ffn_in)
+    else:
+        x = x + mlp_block(cfg, p["ffn"], ffn_in)
+    return x, new_cache
+
+
+def _constrain_act(cfg, x):
+    """Residual-stream sharding constraint (SP): 'seq' shards the sequence
+    over 'model' (dense archs), 'dmodel' shards d_model (MoE archs, whose
+    grouped dispatch reshapes away the seq axis)."""
+    from repro.parallel.sharding import constrain
+
+    if cfg.act_shard == "seq":
+        return constrain(x, ("batch", "sequence", ""))
+    if cfg.act_shard == "dmodel":
+        return constrain(x, ("batch", "", "tensor"))
+    return constrain(x, ("batch", "", ""))
+
+
+def _scan_blocks(cfg, layers_p, x, pos, caches):
+    """Run the stacked layers; caches may be None (train) or stacked.
+
+    Two-level scan (cfg.remat_groups > 0, train only): outer scan over
+    groups of layers with whole-group remat, inner scan per layer with
+    per-layer remat — peak saved activations drop from L·|x| to
+    (G + L/G)·|x| (see DESIGN.md §6 memory plan).
+    """
+
+    def body(carry, layer):
+        p, cache = layer
+        y, new_cache = _block(cfg, p, _constrain_act(cfg, carry), pos, cache)
+        return y, new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    g = cfg.remat_groups
+    if cfg.scan_layers and caches is None and g > 1 and cfg.n_layers % g == 0:
+        lg = cfg.n_layers // g
+        grouped = jax.tree.map(
+            lambda a: a.reshape((g, lg) + a.shape[1:]), layers_p
+        )
+
+        @jax.checkpoint
+        def group_body(carry, gparams):
+            y, _ = lax.scan(body, carry, (gparams, None))
+            # constrain the group boundary: this is the tensor the outer
+            # remat saves, so its sharding decides the activation stack size
+            return _constrain_act(cfg, y), None
+
+        x, _ = lax.scan(group_body, _constrain_act(cfg, x), grouped)
+        return x, None
+
+    if cfg.scan_layers:
+        x, new_caches = lax.scan(body, x, (layers_p, caches))
+        return x, new_caches
+    # Unrolled path (debug / HLO inspection).
+    new_caches = []
+    for i in range(cfg.n_layers):
+        p_i = jax.tree.map(lambda a: a[i], layers_p)
+        c_i = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+        x, nc = body(x, (p_i, c_i))
+        new_caches.append(nc)
+    if caches is None:
+        return x, None
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+    return x, stacked
+
+
+def lm_forward(cfg, params, tokens, pos, caches=None, prefix_embeds=None):
+    """tokens: (B, S) int32; pos: scalar int32 (start position).
+
+    prefix_embeds: (B, F, D) soft prefix (VLM patches / audio frames stub),
+    prepended before the token embeddings.
+    """
+    x = embed_tokens(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    pos = jnp.asarray(pos, jnp.int32)
+    x, new_caches = _scan_blocks(cfg, params["layers"], x, pos, caches)
+    x = rms_norm(x, params["embed"]["final_norm"])
+    return x, new_caches
+
+
+def lm_loss(cfg, params, batch):
+    """batch: tokens (B,S), targets (B,S), mask (B,S) [+ prefix_embeds]."""
+    prefix = batch.get("prefix_embeds")
+    x, _ = lm_forward(
+        cfg, params, batch["tokens"], jnp.int32(0), prefix_embeds=prefix
+    )
+    if prefix is not None:
+        x = x[:, prefix.shape[1]:, :]
+    return chunked_xent(cfg, params["embed"], x, batch["targets"], batch["mask"])
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with ring KV caches.
+# ---------------------------------------------------------------------------
+
+def lm_cache_specs(cfg, batch: int, max_len: int, ring: bool = True) -> dict:
+    """Stacked (layers-leading) KV cache specs.
+
+    ring=True (decode): SWA archs allocate only `window` slots (the ring).
+    ring=False (prefill): full length — a window-sized ring cannot absorb a
+    whole-prompt write in one step."""
+    tc = min(max_len, cfg.window) if (cfg.window and ring) else max_len
+    hs, hd = cfg.stored_kv_heads, cfg.head_dim
+    cd = cfg.compute_dtype
+    return {
+        "k": ParamSpec((cfg.n_layers, batch, tc, hs, hd), cd,
+                       ("layers", "batch", "", "tensor", "")),
+        "v": ParamSpec((cfg.n_layers, batch, tc, hs, hd), cd,
+                       ("layers", "batch", "", "tensor", "")),
+        "positions": ParamSpec((cfg.n_layers, tc), jnp.int32, ("layers", "")),
+        "pos": ParamSpec((cfg.n_layers,), jnp.int32, ("layers",)),
+    }
+
+
+def lm_init_cache(cfg, batch: int, max_len: int, ring: bool = False) -> dict:
+    specs = lm_cache_specs(cfg, batch, max_len, ring=ring)
+    c = {
+        k: jnp.zeros(s.shape, s.dtype) for k, s in specs.items()
+    }
+    c["positions"] = jnp.full(specs["positions"].shape, INVALID_POS, jnp.int32)
+    return c
+
+
+def lm_prefill(cfg, params, tokens, cache, prefix_embeds=None):
+    """Run the full prompt, writing KV caches.  Returns (last_logits, cache)."""
+    x, new_caches = lm_forward(
+        cfg, params, tokens, jnp.int32(0), caches=cache,
+        prefix_embeds=prefix_embeds,
+    )
+    logits = unembed(cfg, params["embed"], x[:, -1:, :])
+    return logits, new_caches
+
+
+def lm_decode_step(cfg, params, cache, token, pos):
+    """One token for the whole batch.  token: (B, 1); pos: scalar int32."""
+    x, new_caches = lm_forward(cfg, params, token, pos, caches=cache)
+    logits = unembed(cfg, params["embed"], x)
+    return logits, new_caches

@@ -1,0 +1,9 @@
+from .optimizer import (  # noqa: F401
+    OptConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+    opt_state_specs,
+)
+from .compression import compressed_mean, CompressionState  # noqa: F401

@@ -1,0 +1,95 @@
+"""AdamW + schedules + clipping, spec-shaped for sharded optimizer state.
+
+Optimizer moments inherit the parameter's logical axes (so FSDP shards the
+optimizer state too — ZeRO style); ``opt_state_specs`` produces the
+ParamSpec tree the launcher uses for the dry-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamSpec
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def cosine_schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(f32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(f32) ** 2) for l in leaves))
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, f32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs):
+    as_f32 = lambda s: ParamSpec(s.shape, f32, s.axes)
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    return {
+        "m": jax.tree.map(as_f32, param_specs, is_leaf=is_spec),
+        "v": jax.tree.map(as_f32, param_specs, is_leaf=is_spec),
+        "count": ParamSpec((), jnp.int32, ()),
+    }
+
+
+def adamw_update(cfg: OptConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    lr = cosine_schedule(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        g = g.astype(f32) * scale
+        m_ = b1 * m + (1 - b1) * g
+        v_ = b2 * v + (1 - b2) * g * g
+        mhat = m_ / (1 - b1 ** count.astype(f32))
+        vhat = v_ / (1 - b2 ** count.astype(f32))
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim > 1:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * p.astype(f32)
+        return (p.astype(f32) - lr * step).astype(p.dtype), m_, v_
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

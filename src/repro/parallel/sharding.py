@@ -1,0 +1,188 @@
+"""Logical-axis sharding: one place that maps model dims to mesh axes.
+
+Every parameter/activation dim carries a *logical* name; a rule table maps
+names to mesh axes.  The same model code therefore runs on the single-pod
+(data, model) mesh, the multi-pod (pod, data, model) mesh, and the 1-device
+CPU test mesh — only the rules change.  This is the DP/FSDP/TP/EP/SP switch
+board (DESIGN.md §6).
+
+Dims whose extent does not divide the assigned mesh axes fall back to
+replication *after consulting the paper's padding advisor* — unfavorable
+dims (paper §6) should instead be padded upstream in the config; we log
+them loudly.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import logging
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger(__name__)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "ParamSpec",
+    "logical_sharding",
+    "sharded_struct",
+    "specs_to_shardings",
+    "specs_to_structs",
+    "pad_to_multiple",
+    "activate_mesh",
+    "current_mesh",
+    "current_rules",
+    "constrain",
+]
+
+# Baseline rule table.  'fsdp' is the weight-shard axis (ZeRO-3 style);
+# 'tensor' is TP; 'batch' is DP.  Meshes name their axes (pod, data, model);
+# multi-pod FSDP/DP span (pod, data).
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "tensor": ("model",),
+    "expert": (),            # EP opt-in: rules_for() maps to ('model',)
+    "sequence": (),          # SP off by default; hillclimb turns it on
+    "layers": (),
+    "replicated": (),
+}
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Shape/dtype/logical-axes of one parameter leaf."""
+
+    shape: tuple[int, ...]
+    dtype: Any
+    axes: tuple[str, ...]  # logical name per dim ('' = replicated)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _mesh_axes_for(
+    logical: str, rules: Mapping[str, tuple[str, ...]], mesh: Mesh
+) -> tuple[str, ...]:
+    wanted = rules.get(logical, ())
+    return tuple(a for a in wanted if a in mesh.axis_names)
+
+
+def logical_sharding(
+    axes: Sequence[str],
+    mesh: Mesh,
+    shape: Sequence[int] | None = None,
+    rules: Mapping[str, tuple[str, ...]] | None = None,
+) -> NamedSharding:
+    """Map logical axis names to a NamedSharding on ``mesh``.
+
+    If ``shape`` is given, any dim that does not divide its mesh-axis
+    product is demoted to replicated (with a warning — the padding advisor
+    should have fixed it upstream).
+    """
+    rules = rules or LOGICAL_RULES
+    parts: list[Any] = []
+    used: set[str] = set()
+    for i, name in enumerate(axes):
+        mesh_axes = tuple(a for a in _mesh_axes_for(name, rules, mesh) if a not in used)
+        if not mesh_axes:
+            parts.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in mesh_axes]))
+        if shape is not None and shape[i] % size != 0:
+            # try a prefix of the axes (e.g. ('pod','data') -> ('pod',))
+            ok = None
+            for j in range(len(mesh_axes) - 1, 0, -1):
+                sz = int(np.prod([mesh.shape[a] for a in mesh_axes[:j]]))
+                if shape[i] % sz == 0:
+                    ok = mesh_axes[:j]
+                    break
+            if ok is None:
+                log.warning(
+                    "dim %d (=%s, extent %s) does not divide mesh axes %s; "
+                    "replicating — consider padding (paper §6)",
+                    i, name, None if shape is None else shape[i], mesh_axes,
+                )
+                parts.append(None)
+                continue
+            mesh_axes = ok
+        used.update(mesh_axes)
+        parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return NamedSharding(mesh, P(*parts))
+
+
+def sharded_struct(
+    spec: ParamSpec, mesh: Mesh, rules=None
+) -> jax.ShapeDtypeStruct:
+    """ShapeDtypeStruct carrying its NamedSharding — dry-run currency."""
+    return jax.ShapeDtypeStruct(
+        spec.shape,
+        spec.dtype,
+        sharding=logical_sharding(spec.axes, mesh, spec.shape, rules),
+    )
+
+
+def specs_to_shardings(specs, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: logical_sharding(s.axes, mesh, s.shape, rules),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def specs_to_structs(specs, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: sharded_struct(s, mesh, rules),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def pad_to_multiple(n: int, unit: int) -> int:
+    return -(-n // unit) * unit
+
+
+# ---------------------------------------------------------------------------
+# Active mesh/rules context: lets model code add sharding constraints on
+# activations without threading the mesh through every call.
+# ---------------------------------------------------------------------------
+
+_MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar(
+    "repro_mesh", default=None
+)
+_RULES: contextvars.ContextVar[Mapping[str, tuple[str, ...]] | None] = (
+    contextvars.ContextVar("repro_rules", default=None)
+)
+
+
+@contextlib.contextmanager
+def activate_mesh(mesh: Mesh, rules: Mapping[str, tuple[str, ...]] | None = None):
+    t1 = _MESH.set(mesh)
+    t2 = _RULES.set(dict(rules) if rules else None)
+    try:
+        yield
+    finally:
+        _MESH.reset(t1)
+        _RULES.reset(t2)
+
+
+def current_mesh() -> Mesh | None:
+    return _MESH.get()
+
+
+def current_rules() -> Mapping[str, tuple[str, ...]]:
+    return _RULES.get() or LOGICAL_RULES
+
+
+def constrain(x, axes: Sequence[str]):
+    """with_sharding_constraint by logical axis names (no-op w/o a mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    sh = logical_sharding(axes, mesh, x.shape, current_rules())
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,9 @@
+from .fault_tolerance import (  # noqa: F401
+    Action,
+    ClusterMonitor,
+    ElasticPlan,
+    HeartbeatTracker,
+    HostState,
+    StragglerPolicy,
+    plan_elastic_remesh,
+)

@@ -1,0 +1,62 @@
+"""Property tests: chunked attention == unchunked; GQA grouping == expand."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import _attn_chunk, chunked_attention
+
+f32 = jnp.float32
+
+
+def ref_attention(q, k, v, causal):
+    b, s, hq, d = q.shape
+    hs = k.shape[2]
+    kx = jnp.repeat(k, hq // hs, axis=2)
+    vx = jnp.repeat(v, hq // hs, axis=2)
+    scores = jnp.einsum("bchd,bthd->bhct", q, kx) * d ** -0.5
+    if causal:
+        ii = jnp.arange(s)
+        mask = ii[:, None] >= ii[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores.astype(f32), axis=-1)
+    return jnp.einsum("bhct,bthd->bchd", p.astype(q.dtype), vx)
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    st.sampled_from([(1, 8, 4, 2), (2, 16, 4, 4), (2, 32, 8, 2)]),
+    st.booleans(),
+    st.sampled_from([8, 16, 1024]),
+)
+def test_chunked_equals_reference(shape, causal, q_chunk):
+    b, s, hq, g = shape
+    hs = hq // g
+    d = 8
+    key = jax.random.PRNGKey(s * 7 + hq)
+    q = jax.random.normal(key, (b, s, hq, d), f32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hs, d), f32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hs, d), f32)
+    pos = jnp.arange(s)
+    out = chunked_attention(
+        q, k, v, pos, pos, causal=causal, window=None,
+        q_chunk=q_chunk, dtype=f32,
+    )
+    ref = ref_attention(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_swa_window_masks_past():
+    b, s, h, d, w = 1, 16, 2, 8, 4
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, d), f32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d), f32)
+    v0 = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d), f32)
+    pos = jnp.arange(s)
+    out0 = chunked_attention(q, k, v0, pos, pos, causal=True, window=w,
+                             q_chunk=1024, dtype=f32)
+    # perturbing v beyond the window must not change the last query's output
+    v1 = v0.at[:, : s - w, :, :].set(99.0)
+    out1 = chunked_attention(q, k, v1, pos, pos, causal=True, window=w,
+                             q_chunk=1024, dtype=f32)
+    np.testing.assert_allclose(out0[:, -1], out1[:, -1], atol=1e-5)

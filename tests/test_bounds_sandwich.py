@@ -1,0 +1,37 @@
+"""The paper's headline: lower <= measured(fitting) and fitting beats natural."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    access_stream, lower_bound_loads, natural_order,
+    simulate_loads, simulate_misses, star_stencil, upper_bound_loads,
+)
+from repro.core.cache_fitting import plan_schedule
+from repro.core.lattice import CacheGeometry
+
+GEOM = CacheGeometry(2, 512, 4)
+S = GEOM.size_words
+
+
+@pytest.mark.parametrize("dims,minratio", [
+    ((64, 91, 40), 1.8), ((84, 77, 32), 1.4), ((96, 91, 24), 1.5),
+    ((52, 60, 40), 1.3),
+])
+def test_fitting_beats_natural(dims, minratio):
+    K = star_stencil(3, 2)
+    order, bq, _ = plan_schedule(dims, S, 2, geom=GEOM)
+    sn = access_stream(dims, natural_order(dims, 2), K, base_q=bq)
+    sf = access_stream(dims, order, K, base_q=bq)
+    mn, mf = simulate_misses(sn, GEOM), simulate_misses(sf, GEOM)
+    assert mn / mf > minratio, (mn, mf)
+
+
+@pytest.mark.parametrize("dims", [(64, 91, 40)])
+def test_lower_bound_below_measured(dims):
+    K = star_stencil(3, 2)
+    order, bq, _ = plan_schedule(dims, S, 2, geom=GEOM)
+    measured_u_loads = simulate_loads(access_stream(dims, order, K, base_q=bq), GEOM)
+    lb = lower_bound_loads(dims, S)["bound"]
+    assert lb <= measured_u_loads
+    ub = upper_bound_loads(dims, S, 2)["bound"]
+    assert lb <= ub

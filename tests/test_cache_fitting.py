@@ -1,0 +1,53 @@
+"""Cache-fitting order (§4) and upper bounds (Eq. 12/14)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_fitting import (
+    access_stream, box_stencil, cache_fitting_order, natural_order,
+    rhs_array_offsets, star_stencil, upper_bound_loads,
+)
+
+DIMS = st.tuples(st.integers(10, 40), st.integers(10, 40), st.integers(10, 24))
+
+
+def test_star_stencil_sizes():
+    assert len(star_stencil(3, 2)) == 13  # the paper's 13-point star
+    assert len(star_stencil(2, 1)) == 5
+    assert len(box_stencil(2, 1)) == 9
+
+
+@settings(deadline=None, max_examples=10)
+@given(DIMS, st.sampled_from([256, 1024]))
+def test_fitting_order_is_permutation(dims, S):
+    nat = natural_order(dims, 1)
+    fit = cache_fitting_order(dims, S, 1)
+    assert nat.shape == fit.shape
+    assert set(map(tuple, nat.tolist())) == set(map(tuple, fit.tolist()))
+
+
+@settings(deadline=None, max_examples=10)
+@given(DIMS)
+def test_access_stream_layout(dims):
+    K = star_stencil(3, 1)
+    pts = natural_order(dims, 1)[:50]
+    stream = access_stream(dims, pts, K)
+    assert len(stream) == 50 * (len(K) + 1)
+    # q writes (every (s+1)th) are in the q array segment
+    q_addrs = stream[len(K)::len(K) + 1]
+    assert (q_addrs >= np.prod(dims)).all()
+
+
+@settings(deadline=None, max_examples=15)
+@given(DIMS, st.sampled_from([1024, 4096]), st.integers(1, 4))
+def test_upper_bound_above_compulsory(dims, S, p):
+    ub = upper_bound_loads(dims, S, r=2, p=p)
+    assert ub["bound"] >= ub["compulsory"]
+
+
+def test_rhs_offsets_strictly_increasing():
+    offs = rhs_array_offsets((64, 64, 64), 4096, 4)
+    assert offs[0] == 0
+    assert all(b > a for a, b in zip(offs, offs[1:]))
+    stride = 4096 // 4
+    for i, o in enumerate(offs):
+        assert o % 4096 == (i * stride) % 4096  # §5 cache-image offsets

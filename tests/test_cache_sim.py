@@ -1,0 +1,48 @@
+"""Exactness of the vectorized LRU simulator."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_sim import _scan_lru, simulate_loads, simulate_misses
+from repro.core.lattice import CacheGeometry
+
+
+def brute_force_lru(addr, a, z, w):
+    sets = {}
+    misses = 0
+    for A in addr:
+        line = A // w
+        s, t = line % z, line // z
+        lru = sets.setdefault(s, [])
+        if t in lru:
+            lru.remove(t)
+            lru.append(t)
+        else:
+            misses += 1
+            lru.append(t)
+            if len(lru) > a:
+                lru.pop(0)
+    return misses
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    st.lists(st.integers(0, 4000), min_size=1, max_size=400),
+    st.sampled_from([1, 2, 4]),
+    st.sampled_from([4, 16]),
+    st.sampled_from([1, 4]),
+)
+def test_simulator_exact(addrs, a, z, w):
+    addr = np.asarray(addrs, dtype=np.int64)
+    geom = CacheGeometry(a, z, w)
+    assert simulate_misses(addr, geom) == brute_force_lru(addr, a, z, w)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.lists(st.integers(0, 2000), min_size=1, max_size=300))
+def test_loads_vs_misses_interval(addrs):
+    """paper §2: mu <= w*phi (loads bounded by line-width x misses)."""
+    addr = np.asarray(addrs, dtype=np.int64)
+    geom = CacheGeometry(2, 16, 4)
+    phi = simulate_misses(addr, geom)
+    mu = simulate_loads(addr, geom)
+    assert mu <= geom.w * phi

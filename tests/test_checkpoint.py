@@ -1,0 +1,69 @@
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, CheckpointConfig
+
+
+@pytest.fixture
+def tree():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones(4)},
+        "opt": {"m": jnp.zeros((3, 4)), "count": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path, tree):
+    ck = Checkpointer(CheckpointConfig(str(tmp_path)))
+    ck.save(10, tree)
+    restored, step = ck.restore(tree)
+    assert step == 10
+    np.testing.assert_array_equal(restored["params"]["w"], tree["params"]["w"])
+    assert int(restored["opt"]["count"]) == 7
+
+
+def test_async_save_then_wait(tmp_path, tree):
+    ck = Checkpointer(CheckpointConfig(str(tmp_path)))
+    ck.save(1, tree, blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_atomic_latest_and_gc(tmp_path, tree):
+    ck = Checkpointer(CheckpointConfig(str(tmp_path), keep=2))
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    assert ck.latest_step() == 4
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+
+
+def test_restore_missing_raises(tmp_path, tree):
+    ck = Checkpointer(CheckpointConfig(str(tmp_path)))
+    with pytest.raises(FileNotFoundError):
+        ck.restore(tree)
+
+
+def test_elastic_restore_reshard(tmp_path, tree):
+    """Logical arrays restore regardless of the saving mesh (elastic)."""
+    import jax
+    from repro.launch.mesh import make_test_mesh
+    from repro.parallel.sharding import logical_sharding
+
+    ck = Checkpointer(CheckpointConfig(str(tmp_path)))
+    ck.save(5, tree)
+    mesh = make_test_mesh()
+    sh = {
+        "params": {
+            "w": logical_sharding(("batch", ""), mesh, (3, 4)),
+            "b": logical_sharding(("",), mesh, (4,)),
+        },
+        "opt": {
+            "m": logical_sharding(("", ""), mesh, (3, 4)),
+            "count": logical_sharding((), mesh, ()),
+        },
+    }
+    restored, _ = ck.restore(tree, shardings=sh)
+    assert restored["params"]["w"].sharding == sh["params"]["w"]

@@ -1,0 +1,59 @@
+from repro.runtime.fault_tolerance import (
+    Action, ClusterMonitor, HeartbeatTracker, HostState, StragglerPolicy,
+    plan_elastic_remesh,
+)
+
+
+def drive(tracker, host, times):
+    for step, t in enumerate(times):
+        tracker.report(host, step, t)
+
+
+def test_healthy_cluster():
+    tr = HeartbeatTracker()
+    for h in range(4):
+        drive(tr, h, [i * 1.0 for i in range(6)])
+    states = tr.classify(now=5.5)
+    assert all(s == HostState.HEALTHY for s in states.values())
+
+
+def test_straggler_and_dead_detection():
+    tr = HeartbeatTracker(straggler_factor=2.0, dead_factor=6.0)
+    for h in range(3):
+        drive(tr, h, [i * 1.0 for i in range(6)])
+    tr.report(3, 0, 0.0)  # host 3 stops reporting after step 0
+    states = tr.classify(now=3.0)
+    assert states[3] == HostState.STRAGGLER
+    states = tr.classify(now=30.0)
+    assert states[3] == HostState.DEAD
+
+
+def test_policy_actions():
+    p = StragglerPolicy(spare_hosts=1)
+    assert p.decide({0: HostState.HEALTHY}) == Action.CONTINUE
+    assert p.decide({0: HostState.STRAGGLER}) == Action.WAIT
+    assert p.decide({0: HostState.DEAD}) == Action.EVICT
+    p0 = StragglerPolicy(spare_hosts=0)
+    assert p0.decide({0: HostState.DEAD}) == Action.RESTART_FROM_CKPT
+
+
+def test_checkpoint_interval_youngs_formula():
+    p = StragglerPolicy()
+    n = p.checkpoint_interval(step_time_s=10.0, mtbf_s=3600.0, write_time_s=30.0)
+    assert 40 <= n <= 50  # sqrt(2*30*3600)/10 ~ 46
+
+
+def test_elastic_remesh_plans():
+    plan = plan_elastic_remesh(world=512, model_parallel=16, pods=2)
+    assert plan.new_mesh == (2, 16, 16)
+    plan = plan_elastic_remesh(world=128, model_parallel=16)
+    assert plan.new_mesh == (8, 16)
+    import pytest
+    with pytest.raises(ValueError):
+        plan_elastic_remesh(world=100, model_parallel=16)
+
+
+def test_monitor_glue():
+    m = ClusterMonitor()
+    a = m.tick(host=0, step=0, t=0.0)
+    assert a in (Action.CONTINUE, Action.WAIT)

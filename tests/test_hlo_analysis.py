@@ -1,0 +1,55 @@
+"""The while-aware analyzer must match analytic FLOP counts exactly."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _layer(x, w):
+    return jnp.tanh(x @ w), None
+
+
+def test_scan_flops_exact():
+    n, L = 128, 6
+
+    def loss(x, ws):
+        y, _ = jax.lax.scan(jax.checkpoint(_layer), x, ws)
+        return jnp.sum(y * y)
+
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, n, n), jnp.float32)
+    txt = jax.jit(jax.grad(loss, argnums=(0, 1))).lower(x, ws).compile().as_text()
+    got = analyze_hlo(txt).flops
+    # fwd L + remat L + bwd 2L dots
+    expected = 2 * (n ** 3) * (4 * L)
+    assert abs(got - expected) / expected < 1e-6, (got, expected)
+
+
+def test_unrolled_flops_exact():
+    n, L = 128, 4
+
+    def loss(x, ws):
+        for i in range(L):
+            x, _ = _layer(x, ws[i])
+        return jnp.sum(x * x)
+
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, n, n), jnp.float32)
+    txt = jax.jit(jax.grad(loss, argnums=(0, 1))).lower(x, ws).compile().as_text()
+    got = analyze_hlo(txt).flops
+    expected = 2 * (n ** 3) * (3 * L)
+    assert abs(got - expected) / expected < 1e-6
+
+
+def test_collective_parsing_synthetic():
+    hlo = """
+HloModule m
+
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16] parameter(0)
+  ROOT %ar = f32[16,16] all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+    c = analyze_hlo(hlo, world=4)
+    # all-reduce wire = 2*(g-1)/g*bytes = 2*0.75*1024
+    assert abs(c.wire_bytes - 2 * 0.75 * 1024) < 1e-6

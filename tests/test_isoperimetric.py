@@ -1,0 +1,53 @@
+"""Octahedron/simplex identities (Appendix A) and the Eq. 7/13 bounds."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.isoperimetric import (
+    boundary_recurrence_holds, c_d, choose_sigma_t, lower_bound_loads,
+    octahedron_boundary, octahedron_volume, octahedron_volume_recurrence,
+    simplex_volume,
+)
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.integers(1, 6), st.integers(0, 12))
+def test_volume_recurrence_eq17(d, t):
+    assert octahedron_volume(d, t) == octahedron_volume_recurrence(d, t)
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.integers(1, 6), st.integers(0, 12))
+def test_boundary_recurrence_eq20(d, t):
+    assert boundary_recurrence_holds(d, t)
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.integers(2, 6), st.integers(1, 12))
+def test_simplex_octahedron_sandwich_eq24(d, t):
+    """2|S(d-1,t)| <= |dO(d,t-1)| <= 2^d |S(d-1,t)|."""
+    lo = 2 * simplex_volume(d - 1, t)
+    mid = octahedron_boundary(d, t - 1)
+    hi = (2 ** d) * simplex_volume(d - 1, t)
+    assert lo <= mid <= hi
+
+
+def test_known_values():
+    assert octahedron_volume(3, 0) == 1
+    assert octahedron_volume(3, 1) == 7
+    assert octahedron_volume(3, 2) == 25
+    assert simplex_volume(2, 2) == 6
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(2, 4), st.sampled_from([1024, 4096, 16384]))
+def test_sigma_choice_eq4(d, S):
+    t, sigma = choose_sigma_t(d, S)
+    assert sigma >= 8 * d * S
+    assert sigma < 8 * d * (2 * d + 1) * S  # Eq. 21 consequence
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(1, 8))
+def test_lower_bound_multi_rhs_scales(p):
+    one = lower_bound_loads((64, 64, 64), 4096, p=1)["bound"]
+    many = lower_bound_loads((64, 64, 64), 4096, p=p)["bound"]
+    assert many >= one * p * 0.9  # p arrays: at least ~p x the loads

@@ -1,0 +1,61 @@
+"""Property tests for the interference lattice (paper §4, Eq. 8/9)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lattice import (
+    CacheGeometry, InterferenceLattice, interference_basis, lattice_contains,
+    lll_reduce, shortest_vector,
+)
+
+DIMS3 = st.tuples(st.integers(8, 120), st.integers(8, 120), st.integers(8, 120))
+CACHES = st.sampled_from([256, 1024, 4096])
+
+
+@settings(deadline=None, max_examples=25)
+@given(DIMS3, CACHES)
+def test_basis_vectors_satisfy_eq8(dims, S):
+    B = interference_basis(dims, S)
+    for row in B:
+        assert lattice_contains(dims, S, row)
+
+
+@settings(deadline=None, max_examples=25)
+@given(DIMS3, CACHES)
+def test_lll_preserves_lattice(dims, S):
+    lat = InterferenceLattice(dims, S)
+    # reduced rows still satisfy Eq. 8 and det is preserved (= S)
+    for row in lat.reduced:
+        assert lattice_contains(dims, S, row)
+    assert lat.det() == S
+
+
+@settings(deadline=None, max_examples=25)
+@given(DIMS3, CACHES)
+def test_lll_reduction_bound(dims, S):
+    """prod ||b_i|| <= 2^{d(d-1)/4} * det L (paper's c_d, footnote ‡)."""
+    lat = InterferenceLattice(dims, S)
+    lens = np.sqrt((lat.reduced.astype(float) ** 2).sum(1))
+    assert np.prod(lens) <= 2 ** (3 * 2 / 4) * S * 1.0001
+
+
+@settings(deadline=None, max_examples=25)
+@given(DIMS3, CACHES)
+def test_shortest_vector_in_lattice(dims, S):
+    lat = InterferenceLattice(dims, S)
+    sv = lat.shortest()
+    assert np.any(sv != 0)
+    assert lat.contains(sv)
+
+
+def test_paper_examples():
+    """§6: n1=45 -> ±(1,0,1); n1=90 -> ±(2,0,1) for n2=91, S=4096."""
+    sv45 = InterferenceLattice((45, 91, 100), 4096).shortest(norm="l1")
+    assert sorted(np.abs(sv45).tolist()) == [0, 1, 1]
+    sv90 = InterferenceLattice((90, 91, 100), 4096).shortest(norm="l1")
+    assert sorted(np.abs(sv90).tolist()) == [0, 1, 2]
+
+
+def test_cache_geometry_r10000():
+    g = CacheGeometry(2, 512, 4)
+    assert g.size_words == 4096
+    assert g.set_span_words == 2048

@@ -1,0 +1,59 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import OptConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim.compression import _quantize
+
+
+def test_adamw_converges_quadratic():
+    cfg = OptConfig(lr=0.05, warmup_steps=0, total_steps=200, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - 1.0) ** 2)
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, opt, m = adamw_update(cfg, g, opt, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_clipping_bounds_update():
+    cfg = OptConfig(lr=1.0, clip_norm=1e-3, warmup_steps=0)
+    params = {"w": jnp.zeros(3)}
+    opt = adamw_init(params)
+    g = {"w": jnp.array([1e6, 1e6, 1e6])}
+    _, _, m = adamw_update(cfg, g, opt, params)
+    assert float(m["grad_norm"]) > 1e5  # norm reported pre-clip
+
+
+def test_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(cosine_schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 50, 100)]
+    assert lrs[1] < lrs[2]          # warmup rising
+    assert lrs[3] < lrs[2]          # cosine decaying
+    assert lrs[4] < 1e-6 + lrs[3]
+
+
+def test_quantize_error_bounded():
+    g = jnp.array(np.random.default_rng(0).normal(size=512), jnp.float32)
+    q, scale = _quantize(g)
+    err = np.abs(np.asarray(q, np.float32) * scale - np.asarray(g))
+    assert err.max() <= scale * 0.5 + 1e-6
+
+
+def test_error_feedback_mean_preserved():
+    """Compression with EF: running sum of dequantized ≈ true sum."""
+    rng = np.random.default_rng(1)
+    g_true = jnp.array(rng.normal(size=256), jnp.float32) * 1e-3
+    residual = jnp.zeros_like(g_true)
+    acc = np.zeros(256)
+    for _ in range(50):
+        g = g_true + residual
+        q, scale = _quantize(g)
+        deq = np.asarray(q, np.float32) * scale
+        residual = g - deq
+        acc += deq
+    np.testing.assert_allclose(acc / 50, np.asarray(g_true), atol=2e-5)

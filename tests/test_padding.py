@@ -1,0 +1,44 @@
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.padding import (
+    advise_dim, hyperbola_index, is_unfavorable, pad_grid, shortest_len,
+    tpu_layout_waste, tpu_pad_dim,
+)
+
+S = 4096
+
+
+def test_unfavorable_from_paper():
+    assert is_unfavorable((45, 91, 100), S, diameter=5)
+    assert is_unfavorable((90, 91, 100), S, diameter=5)
+    assert not is_unfavorable((64, 91, 100), S, diameter=5)
+
+
+def test_padding_fixes_unfavorable():
+    padded, info = pad_grid((45, 91, 100), S, diameter=5)
+    assert not is_unfavorable(padded, S, diameter=5)
+    assert info["extra_words"] > 0
+    assert padded[2] == 100  # last dim never padded (not in the lattice)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.tuples(st.integers(40, 99), st.integers(40, 99), st.integers(40, 60)))
+def test_padding_always_found(dims):
+    padded, info = pad_grid(dims, S, diameter=5, max_pad=16)
+    assert info["shortest_after"] >= 5
+
+
+def test_hyperbola_index():
+    k, dist = hyperbola_index((45, 91, 100), S)  # 45*91=4095 ~ 2*(S/2)
+    assert k == 2 and dist < 0.01
+
+
+def test_tpu_padding():
+    assert tpu_pad_dim(92553, 128) == 92672
+    assert tpu_layout_waste((8, 128)) == 0.0
+    assert tpu_layout_waste((9, 129)) > 0.4
+    # small dims land badly on the 128-lane layout; big dims amortize
+    assert advise_dim(129)["unfavorable"]
+    assert not advise_dim(92544)["unfavorable"]
+    assert not advise_dim(92553)["unfavorable"]  # 0.13% waste once padded

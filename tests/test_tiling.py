@@ -1,0 +1,27 @@
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tiling import select_tile, tile_traffic_bytes
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    st.tuples(st.integers(64, 512), st.integers(128, 1024)),
+    st.integers(1, 3),
+    st.sampled_from([2, 4]),
+)
+def test_select_tile_fits_and_bounded(shape, r, dtype_bytes):
+    halo = [(r, r)] * len(shape)
+    budget = 1 << 20
+    c = select_tile(shape, halo, dtype_bytes, vmem_budget=budget, n_operands=2)
+    assert c.vmem_bytes <= budget // 2
+    assert 0 < c.efficiency <= 1.0
+    # traffic at least the compulsory read of the array
+    import math
+    assert c.traffic_bytes >= math.prod(shape) * dtype_bytes
+
+
+def test_traffic_monotone_in_halo():
+    shape = (256, 512)
+    t1 = tile_traffic_bytes(shape, (64, 256), [(1, 1), (1, 1)], 4)
+    t2 = tile_traffic_bytes(shape, (64, 256), [(4, 4), (4, 4)], 4)
+    assert t2 > t1
