@@ -2,23 +2,49 @@
 
 Prints ``name,us_per_call,derived`` CSV per benchmark (spec format).
 ``--full`` runs paper-scale sweeps; default is the quick CI-sized pass.
+``--json [PATH]`` runs only the PR-tracked sweep-traffic record and writes
+it to PATH (default: ``BENCH_PR1.json`` at the repo root) — the perf
+trajectory artifact scripts/ci.sh checks on every PR.
 """
 from __future__ import annotations
 
+import os
 import sys
 
 
 def main() -> None:
-    quick = "--full" not in sys.argv
+    argv = sys.argv[1:]
+    quick = "--full" not in argv
+    if "--json" in argv:
+        from . import sweep_traffic
+
+        i = argv.index("--json")
+        if i + 1 < len(argv) and not argv[i + 1].startswith("--"):
+            path = argv[i + 1]
+        else:
+            path = os.path.join(
+                os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                "BENCH_PR1.json",
+            )
+        report = sweep_traffic.main(quick, json_path=path)
+        ok = report["acceptance"]
+        print(
+            f"wrote {path}: traffic x{ok['achieved_traffic_ratio']:.2f} "
+            f"(ok={ok['traffic_ok']}) speed[{ok['speed_mode']}] ok={ok['speed_ok']}"
+        )
+        if not (ok["traffic_ok"] and ok["speed_ok"]):
+            sys.exit(1)  # the perf gate IS the CI signal — fail loudly
+        return
     from . import (
         bounds_table, fig4_miss_reduction, fig5_unfavorable,
-        padding_effect, roofline_report, tpu_tiling,
+        padding_effect, roofline_report, sweep_traffic, tpu_tiling,
     )
     fig4_miss_reduction.main(quick)
     fig5_unfavorable.main(quick)
     bounds_table.main(quick)
     padding_effect.main(quick)
     tpu_tiling.main(quick)
+    sweep_traffic.main(quick)
     roofline_report.main(quick)
 
 

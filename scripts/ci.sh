@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the full test suite plus the PR-tracked perf record.
+#
+#   scripts/ci.sh            # tests + quick benchmark JSON (BENCH_PR1.json)
+#
+# The JSON pass re-derives the modeled-traffic numbers checked in at
+# BENCH_PR1.json; a drift there is a perf regression, not flake.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python -m pytest -x -q
+python -m benchmarks.run --json

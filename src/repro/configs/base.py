@@ -39,6 +39,8 @@ class SSMCfg:
     expand: int = 2        # d_inner = expand * d_model
     conv_width: int = 4
     chunk: int = 128       # SSD chunk length Q
+    pallas_conv: bool = False  # route the causal conv through the Pallas
+                               # sweep kernel (kernels.conv1d) when S > 1
 
 
 @dataclass(frozen=True)

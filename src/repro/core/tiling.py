@@ -2,17 +2,33 @@
 
 This is the DESIGN.md §2 adaptation of the paper's §4: on TPU the fast
 memory is explicitly managed, so "cache loads" become HBM→VMEM DMA bytes
-and the fitting problem becomes *tile-shape selection*:
+and the fitting problem becomes *tile-shape selection*.
 
-    minimize   traffic(T) = |G| · prod_i (T_i + h_lo_i + h_hi_i) / prod_i T_i
-    subject to bytes(all operand tiles incl. halo) <= VMEM budget
+Two traffic models are supported (DESIGN.md §3):
 
-— exactly the paper's surface-to-volume argument with the fundamental
-parallelepiped replaced by an axis-aligned box (DMA engines move
-rectangles; a skew parallelepiped is not DMA-able).  The isoperimetric
-lower bound of §3 still applies and we report the achieved/optimal ratio.
+* **per-tile-halo** (``sweep_axis=None``): every tile is DMA'd with its
+  full halo, so each interior face is fetched twice (once by each
+  neighbor).  This was the seed's only model.
 
-The multi-operand budget split mirrors §5 (p RHS arrays ⇒ S/p per array).
+      traffic(T) = prod_i ceil(N_i/T_i) · prod_i (T_i + h_lo_i + h_hi_i)
+
+* **sweep-reuse** (``sweep_axis=s``): tiles are swept along axis ``s``
+  and the overlap between consecutive tiles along the sweep axis is kept
+  resident in VMEM (the paper's §4 scanning face), so the sweep-axis halo
+  is charged once per sweep column instead of once per tile:
+
+      traffic(T) = prod_{i≠s} ceil(N_i/T_i)
+                   · (N'_s + h_lo_s + h_hi_s) · prod_{i≠s} (T_i + h_lo_i + h_hi_i)
+
+  with N'_s the sweep extent rounded up to T_s (the kernel's pad path).
+
+Both minimize subject to bytes(operand tile incl. halo and the prefetch
+slabs) ≤ VMEM budget / n_operands — the paper's surface-to-volume
+argument with the fundamental parallelepiped replaced by an axis-aligned
+box (DMA engines move rectangles; a skew parallelepiped is not DMA-able).
+The isoperimetric lower bound of §3 still applies and we report the
+achieved/optimal ratio.  The multi-operand budget split mirrors §5
+(p RHS arrays ⇒ S/p per array).
 """
 
 from __future__ import annotations
@@ -24,7 +40,14 @@ from typing import Sequence
 
 from .isoperimetric import lower_bound_loads
 
-__all__ = ["TileChoice", "candidate_tiles", "tile_traffic_bytes", "select_tile"]
+__all__ = [
+    "TileChoice",
+    "candidate_tiles",
+    "tile_traffic_bytes",
+    "tile_vmem_bytes",
+    "surface_to_volume",
+    "select_tile",
+]
 
 VMEM_BYTES_V5E = 128 * 1024 * 1024  # v5e VMEM per core (target hardware)
 LANE = 128
@@ -40,6 +63,15 @@ class TileChoice:
     surface_to_volume: float
     lower_bound_bytes: float
     efficiency: float  # lower_bound / achieved traffic  (1.0 = optimal)
+    sweep_axis: int | None = None  # axis with halo reuse; None = per-tile halo
+
+    def __post_init__(self):
+        # The isoperimetric bound is a true lower bound on any schedule, so
+        # the modeled traffic of a concrete legal schedule can never beat it.
+        assert 0.0 <= self.efficiency <= 1.0, (
+            f"efficiency {self.efficiency} > 1: traffic model fell below the "
+            f"isoperimetric lower bound (tile={self.tile})"
+        )
 
 
 def _aligned_candidates(n: int, unit: int, cap: int) -> list[int]:
@@ -60,22 +92,68 @@ def _aligned_candidates(n: int, unit: int, cap: int) -> list[int]:
     return sorted(cands)
 
 
+def _free_candidates(n: int, cap: int) -> list[int]:
+    """Unaligned extents (powers of two + n) — for modeling a scalar cache
+    (the paper's S) where no lane/sublane constraint applies."""
+    cands = {min(n, cap)}
+    t = 1
+    while t < min(n, cap):
+        cands.add(t)
+        t *= 2
+    if n <= cap:
+        cands.add(n)
+    return sorted(cands)
+
+
 def candidate_tiles(
-    shape: Sequence[int], max_tile_elems: int
+    shape: Sequence[int],
+    max_tile_elems: int,
+    sweep_axis: int | None = None,
+    aligned: bool = True,
 ) -> list[tuple[int, ...]]:
-    """Hardware-aligned candidate tiles: lane dim multiples of 128, sublane
-    dim multiples of 8, leading dims small integers."""
+    """Candidate tiles.  ``aligned=True`` restricts to hardware-aligned
+    extents (lane dim multiples of 128, sublane dim multiples of 8, leading
+    dims small integers).  The sweep axis additionally admits small extents:
+    with halo reuse the sweep tile only amortizes the window shift, so thin
+    slabs (the paper's scanning face) are often optimal.
+    """
     d = len(shape)
     per_dim: list[list[int]] = []
     for i, n in enumerate(shape):
-        if i == d - 1:
-            per_dim.append(_aligned_candidates(n, LANE, max_tile_elems))
+        if not aligned:
+            opts = set(_free_candidates(n, max_tile_elems))
+        elif i == d - 1:
+            opts = set(_aligned_candidates(n, LANE, max_tile_elems))
         elif i == d - 2:
-            per_dim.append(_aligned_candidates(n, SUBLANE, max_tile_elems))
+            opts = set(_aligned_candidates(n, SUBLANE, max_tile_elems))
         else:
-            opts = sorted({1, 2, 4, 8, 16, 32, 64, 128, n})
-            per_dim.append([o for o in opts if o <= n])
+            opts = {o for o in (1, 2, 4, 8, 16, 32, 64, 128, n) if o <= n}
+        if i == sweep_axis and (not aligned or i < d - 2):
+            # Thin sweep slabs — but never below the lane/sublane grain
+            # when hardware alignment is requested: a 1-wide lane DMA
+            # still moves a full vector, so the thin-tile traffic model
+            # would be unachievable there.
+            opts |= {o for o in (1, 2, 4, 8) if o <= n}
+        per_dim.append(sorted(opts))
     return [t for t in itertools.product(*per_dim)]
+
+
+def surface_to_volume(
+    tile: Sequence[int], halo: Sequence[tuple[int, int]]
+) -> float:
+    """Halo-weighted surface-to-volume ratio of an axis-aligned tile:
+
+        Σ_i (h_lo_i + h_hi_i) · prod_{j≠i} T_j  /  prod_i T_i
+
+    i.e. the face loads proper, without the corner/edge cross terms the
+    (halo'd volume)/volume − 1 expression over-counts.
+    """
+    vol = prod(tile)
+    surf = sum(
+        (lo + hi) * prod(t for j, t in enumerate(tile) if j != i)
+        for i, (lo, hi) in enumerate(halo)
+    )
+    return surf / vol
 
 
 def tile_traffic_bytes(
@@ -83,11 +161,49 @@ def tile_traffic_bytes(
     tile: Sequence[int],
     halo: Sequence[tuple[int, int]],
     dtype_bytes: int,
+    sweep_axis: int | None = None,
 ) -> int:
-    """Total HBM→VMEM bytes to sweep the array once with halo'd tiles."""
-    ntiles = prod(-(-n // t) for n, t in zip(shape, tile))
-    per_tile = prod(t + lo + hi for t, (lo, hi) in zip(tile, halo))
-    return ntiles * per_tile * dtype_bytes
+    """Total HBM→VMEM bytes to sweep the array once with halo'd tiles.
+
+    ``sweep_axis=None`` charges the full halo on every tile (per-tile-halo
+    model).  ``sweep_axis=s`` reuses the overlap between consecutive tiles
+    along axis ``s`` so its halo is charged once per sweep column.
+    """
+    ntiles = [-(-n // t) for n, t in zip(shape, tile)]
+    if sweep_axis is None:
+        per_tile = prod(t + lo + hi for t, (lo, hi) in zip(tile, halo))
+        return prod(ntiles) * per_tile * dtype_bytes
+    s = sweep_axis
+    cross = prod(
+        t + lo + hi
+        for i, (t, (lo, hi)) in enumerate(zip(tile, halo))
+        if i != s
+    )
+    ncols = prod(nt for i, nt in enumerate(ntiles) if i != s)
+    swept = ntiles[s] * tile[s] + halo[s][0] + halo[s][1]
+    return ncols * swept * cross * dtype_bytes
+
+
+def tile_vmem_bytes(
+    tile: Sequence[int],
+    halo: Sequence[tuple[int, int]],
+    dtype_bytes: int,
+    sweep_axis: int | None = None,
+    prefetch: bool = True,
+) -> int:
+    """Per-operand VMEM footprint: the halo'd window, plus — when sweeping
+    with prefetch — two landing slabs for the double-buffered next-tile DMA.
+    """
+    window = prod(t + lo + hi for t, (lo, hi) in zip(tile, halo))
+    slabs = 0
+    if sweep_axis is not None and prefetch:
+        cross = prod(
+            t + lo + hi
+            for i, (t, (lo, hi)) in enumerate(zip(tile, halo))
+            if i != sweep_axis
+        )
+        slabs = 2 * tile[sweep_axis] * cross
+    return (window + slabs) * dtype_bytes
 
 
 def select_tile(
@@ -96,32 +212,55 @@ def select_tile(
     dtype_bytes: int = 4,
     vmem_budget: int = VMEM_BYTES_V5E // 2,
     n_operands: int = 2,
+    sweep_axis: int | None | str = "auto",
+    aligned: bool = True,
+    prefetch: bool = True,
 ) -> TileChoice:
     """Pick the traffic-minimizing VMEM tile (paper §4 adapted, §5 for the
-    per-operand budget split: budget/n_operands per array)."""
+    per-operand budget split: budget/n_operands per array).
+
+    ``sweep_axis``: ``"auto"`` tries every axis with halo reuse (and the
+    per-tile-halo fallback) and keeps the cheapest; an int forces that
+    sweep axis; ``None`` forces the seed's per-tile-halo model.
+    """
     shape = tuple(int(n) for n in shape)
+    halo = [(int(lo), int(hi)) for lo, hi in halo]
     budget = vmem_budget // max(n_operands, 1)
     max_elems = budget // dtype_bytes
+    if sweep_axis == "auto":
+        axes: list[int | None] = [None] + [
+            i for i, n in enumerate(shape) if n > 1
+        ]
+    else:
+        axes = [sweep_axis]
+    # The radius fed to the lower bound must dominate the halo: an
+    # asymmetric halo like conv1d's (W-1, 0) has radius max(lo, hi), NOT
+    # (lo+hi)//2 (integer floor under-estimates it).
+    r = max(max(lo, hi) for lo, hi in halo)
+    lb = _traffic_lower_bound(shape, budget // dtype_bytes, dtype_bytes, r)
     best: TileChoice | None = None
-    for tile in candidate_tiles(shape, max_elems):
-        in_tile_bytes = (
-            prod(t + lo + hi for t, (lo, hi) in zip(tile, halo)) * dtype_bytes
-        )
-        if in_tile_bytes > budget:
-            continue
-        traffic = tile_traffic_bytes(shape, tile, halo, dtype_bytes)
-        s2v = prod(t + lo + hi for t, (lo, hi) in zip(tile, halo)) / prod(tile) - 1.0
-        if best is None or traffic < best.traffic_bytes:
-            r = max((lo + hi) // 2 for lo, hi in halo)
-            lb = _traffic_lower_bound(shape, budget // dtype_bytes, dtype_bytes, r)
+    for axis in axes:
+        for tile in candidate_tiles(shape, max_elems, axis, aligned):
+            vmem = tile_vmem_bytes(tile, halo, dtype_bytes, axis, prefetch)
+            if vmem > budget:
+                continue
+            traffic = tile_traffic_bytes(shape, tile, halo, dtype_bytes, axis)
+            if best is not None and traffic >= best.traffic_bytes:
+                continue
+            eff = lb / traffic if traffic else 1.0
+            assert eff <= 1.0 + 1e-9, (
+                f"traffic model below isoperimetric bound: tile={tile} "
+                f"axis={axis} traffic={traffic} lb={lb}"
+            )
             best = TileChoice(
                 tile=tile,
                 grid=tuple(-(-n // t) for n, t in zip(shape, tile)),
                 traffic_bytes=traffic,
-                vmem_bytes=in_tile_bytes,
-                surface_to_volume=s2v,
+                vmem_bytes=vmem,
+                surface_to_volume=surface_to_volume(tile, halo),
                 lower_bound_bytes=lb,
-                efficiency=min(lb / traffic, 1.0) if traffic else 1.0,
+                efficiency=min(eff, 1.0),
+                sweep_axis=axis,
             )
     if best is None:
         raise ValueError(

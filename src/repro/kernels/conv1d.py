@@ -1,9 +1,18 @@
-"""Pallas depthwise causal conv1d — the Mamba2 / audio-frontend stencil.
+"""Sweep-pipelined Pallas depthwise causal conv1d — the Mamba2 stencil.
 
-A width-W causal depthwise convolution is a 1-D stencil with halo (W-1, 0);
-the same cache-fitting tile logic applies (sequence-tiled, channel-lane
-aligned).  Used as a drop-in for ``models.ssm._causal_conv``'s math on the
-TPU target; validated against it in interpret mode.
+A width-W causal depthwise convolution is the 1-D instantiation of the
+sweep engine in ``kernels.stencil``: a stencil with the asymmetric halo
+(W-1, 0) on the sequence axis.  The sequence is swept in tiles of
+``tile_s`` tokens per batch row; the W-1-token overlap between consecutive
+tiles is shifted inside VMEM (DESIGN.md §4) instead of re-fetched, and the
+next slab is prefetched into a double buffer while the current tile
+computes.  Channels ride whole in the lane dimension.
+
+Matches ``models.ssm._causal_conv`` (causal, silu-activated); the optional
+``state`` argument supplies the previous sequence's W-1-token tail so the
+kernel drops into the serving path's chunked prefill.  A custom VJP backs
+the kernel with the reference gradient, so it is safe under ``jax.grad``
+(training uses it when ``SSMCfg.pallas_conv`` is set).
 """
 
 from __future__ import annotations
@@ -13,50 +22,169 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["causal_conv1d"]
 
 
 @functools.partial(jax.jit, static_argnames=("tile_s", "interpret"))
+def _conv_call(xp, conv_w, conv_b, tile_s, interpret):
+    """xp: (B, halo + padded S, C) — halo rows already prepended.  Sweeps
+    tiles of ``tile_s`` tokens with halo reuse + double-buffered prefetch."""
+    b, sp, c = xp.shape
+    width = conv_w.shape[0]
+    halo = width - 1
+    pad_s = sp - halo
+    nswp = pad_s // tile_s
+    pipelined = nswp > 1 and halo > 0
+
+    def body(*refs):
+        if pipelined:
+            x_hbm, w_ref, b_ref, o_ref, win, slab, wsem, ssem = refs
+        else:
+            x_hbm, w_ref, b_ref, o_ref, win, wsem = refs
+        i = pl.program_id(0)  # batch row
+        k = pl.program_id(1)  # sweep step (minor-most: fastest-varying)
+
+        def slab_copy(kk, slot):
+            return pltpu.make_async_copy(
+                x_hbm.at[i, pl.ds(kk * tile_s + halo, tile_s)],
+                slab.at[slot],
+                ssem.at[slot],
+            )
+
+        if not pipelined:
+            cp = pltpu.make_async_copy(
+                x_hbm.at[i, pl.ds(k * tile_s, tile_s + halo)], win, wsem
+            )
+            cp.start()
+            cp.wait()
+        else:
+            @pl.when(k == 0)
+            def _():
+                cp = pltpu.make_async_copy(
+                    x_hbm.at[i, pl.ds(0, tile_s + halo)], win, wsem
+                )
+                cp.start()
+                slab_copy(1, 1 % 2).start()
+                cp.wait()
+
+            @pl.when(k > 0)
+            def _():
+                win[0:halo, :] = win[tile_s : tile_s + halo, :]
+                slab_copy(k, k % 2).wait()
+
+                @pl.when(k + 1 < nswp)
+                def _():
+                    slab_copy(k + 1, (k + 1) % 2).start()
+                win[halo : halo + tile_s, :] = slab[k % 2]
+
+        acc = jnp.zeros((tile_s, c), jnp.float32)
+        for t in range(width):
+            acc = acc + win[t : t + tile_s, :].astype(jnp.float32) * w_ref[t]
+        acc = acc + b_ref[...]
+        o_ref[...] = jax.nn.silu(acc).astype(o_ref.dtype)[None]
+
+    scratch = [pltpu.VMEM((tile_s + halo, c), xp.dtype)]
+    if pipelined:
+        scratch.append(pltpu.VMEM((2, tile_s, c), xp.dtype))
+    scratch.append(pltpu.SemaphoreType.DMA)
+    if pipelined:
+        scratch.append(pltpu.SemaphoreType.DMA((2,)))
+
+    out = pl.pallas_call(
+        body,
+        grid=(b, nswp),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((width, c), lambda i, k: (0, 0)),
+            pl.BlockSpec((c,), lambda i, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_s, c), lambda i, k: (i, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, pad_s, c), xp.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(xp, conv_w, conv_b)
+    return out
+
+
+def _prepend_halo(x, conv_w, state, tile_s):
+    """Concat the W-1 halo (zeros or the previous tail) and round S up."""
+    b, s, c = x.shape
+    width = conv_w.shape[0]
+    halo = width - 1
+    tile_s = min(tile_s, s)
+    pad_s = -(-s // tile_s) * tile_s
+    if state is None:
+        head = jnp.zeros((b, halo, c), x.dtype)
+    else:
+        head = state.astype(x.dtype)
+    xp = jnp.concatenate(
+        [head, x, jnp.zeros((b, pad_s - s, c), x.dtype)], axis=1
+    )
+    return xp, tile_s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _conv_grad(x, conv_w, conv_b, tile_s, interpret):
+    xp, tile_s = _prepend_halo(x, conv_w, None, tile_s)
+    return _conv_call(xp, conv_w, conv_b, tile_s, interpret)[:, : x.shape[1]]
+
+
+def _conv_grad_fwd(x, conv_w, conv_b, tile_s, interpret):
+    return _conv_grad(x, conv_w, conv_b, tile_s, interpret), (x, conv_w, conv_b)
+
+
+def _conv_grad_bwd(tile_s, interpret, res, g):
+    # Reference-math backward: recompute the pre-activation, silu', then the
+    # transposed (anti-causal) correlation.  out[t] = silu(Σ_i full[t+i] w_i)
+    # with full = [0^(W-1), x], so x[u] feeds out[u-(W-1)+i·] ⇒ the grad is
+    # the same stencil with flipped offsets.
+    x, conv_w, conv_b = res
+    b, s, c = x.shape
+    width = conv_w.shape[0]
+    halo = width - 1
+    full = jnp.concatenate([jnp.zeros((b, halo, c), x.dtype), x], axis=1)
+    pre = jnp.zeros((b, s, c), jnp.float32)
+    for i in range(width):
+        pre = pre + full[:, i : i + s, :].astype(jnp.float32) * conv_w[i]
+    pre = pre + conv_b
+    sig = jax.nn.sigmoid(pre)
+    gpre = g.astype(jnp.float32) * sig * (1.0 + pre * (1.0 - sig))
+    gp = jnp.concatenate([gpre, jnp.zeros((b, halo, c), gpre.dtype)], axis=1)
+    dx = jnp.zeros((b, s, c), jnp.float32)
+    for i in range(width):
+        dx = dx + gp[:, halo - i : halo - i + s, :] * conv_w[i]
+    dw = jnp.stack(
+        [
+            jnp.einsum("btc,btc->c", gpre, full[:, i : i + s, :].astype(jnp.float32))
+            for i in range(width)
+        ]
+    )
+    db = gpre.sum(axis=(0, 1))
+    return dx.astype(x.dtype), dw.astype(conv_w.dtype), db.astype(conv_b.dtype)
+
+
+_conv_grad.defvjp(_conv_grad_fwd, _conv_grad_bwd)
+
+
 def causal_conv1d(
     x: jnp.ndarray,
     conv_w: jnp.ndarray,
     conv_b: jnp.ndarray,
     tile_s: int = 256,
     interpret: bool | None = None,
+    state: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """x: (B, S, C); conv_w: (W, C); conv_b: (C,).  Causal, silu-activated
-    (matches models.ssm._causal_conv with zero initial state)."""
+    (matches models.ssm._causal_conv).  ``state``: optional (B, W-1, C)
+    tail of the previous sequence used as the leading halo (serving path;
+    not differentiated)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    b, s, c = x.shape
-    width = conv_w.shape[0]
-    halo = width - 1
-    tile_s = min(tile_s, s)
-    pad_s = -(-s // tile_s) * tile_s
-    xp = jnp.pad(x, ((0, 0), (halo, pad_s - s), (0, 0)))
-
-    def body(x_ref, w_ref, b_ref, o_ref):
-        xt = x_ref[...]  # (1, tile_s + halo, C)
-        acc = jnp.zeros((1, tile_s, c), jnp.float32)
-        for i in range(width):
-            acc = acc + xt[:, i : i + tile_s, :].astype(jnp.float32) * w_ref[i]
-        acc = acc + b_ref[...]
-        o_ref[...] = jax.nn.silu(acc).astype(o_ref.dtype)
-
-    out = pl.pallas_call(
-        body,
-        grid=(b, pad_s // tile_s),
-        in_specs=[
-            pl.BlockSpec(
-                (pl.Element(1), pl.Element(tile_s + halo), pl.Element(c)),
-                lambda i, j: (i, j * tile_s, 0),
-            ),
-            pl.BlockSpec((width, c), lambda i, j: (0, 0)),
-            pl.BlockSpec((c,), lambda i, j: (0,)),
-        ],
-        out_specs=pl.BlockSpec((1, tile_s, c), lambda i, j: (i, j, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, pad_s, c), x.dtype),
-        interpret=interpret,
-    )(xp, conv_w, conv_b)
-    return out[:, :s, :]
+    if state is None:
+        return _conv_grad(x, conv_w, conv_b, int(tile_s), bool(interpret))
+    xp, tile_s = _prepend_halo(x, conv_w, state, tile_s)
+    return _conv_call(xp, conv_w, conv_b, tile_s, bool(interpret))[
+        :, : x.shape[1]
+    ]

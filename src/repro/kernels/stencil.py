@@ -1,16 +1,24 @@
-"""Pallas TPU stencil kernels with cache-fitting tile selection.
+"""Sweep-pipelined Pallas TPU stencil kernels with halo reuse.
 
 The kernel realizes the paper's cache-fitting algorithm on the TPU memory
-hierarchy (DESIGN.md §2): the grid is swept tile-by-tile; each input tile is
-DMA'd into VMEM *with its halo* (the `pl.Element` indexing mode gives the
-overlapping windows the paper's scanning face provides), the stencil is
-evaluated entirely из VMEM, and the output tile is written back.  Tile
-shapes come from ``repro.core.tiling.select_tile`` — the surface-to-volume
-minimizer — so HBM traffic approaches the isoperimetric lower bound.
+hierarchy (DESIGN.md §2): inputs stay *unblocked* in HBM (ANY memory
+space); a VMEM *window* — the tile plus its halo — is the software cache.
+The grid sweeps tiles along one axis (the paper's §4 scanning face, chosen
+by ``repro.core.tiling.select_tile``'s sweep-aware traffic model), and at
+each sweep step the overlap between consecutive windows is **shifted
+inside VMEM** instead of re-fetched, so each interior sweep-axis face
+crosses the HBM↔VMEM boundary once per sweep instead of twice.  Only the
+new slab of ``tile[sweep]`` rows is DMA'd per step — double-buffered into
+a landing slab so the next step's fetch overlaps the current compute.
 
-Grid iteration order = sweep order: the minor-most grid axis is the one the
-tile selector marks widest, mirroring the paper's pencil sweep along the
-shortest lattice vector.
+Grid iteration order = sweep order: the sweep axis is the minor-most
+(fastest-varying) grid dimension, so scratch windows stay coherent across
+consecutive grid steps; every other tile coordinate restarts the sweep
+(``k == 0`` reloads the whole window).
+
+Boundary semantics match ``kernels.ref.stencil_ref``: zero fill, via a
+host-side ``jnp.pad`` that also rounds each extent up to the tile (grids
+not divisible by the tile take this round-up path).
 """
 
 from __future__ import annotations
@@ -22,87 +30,233 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["stencil_pallas", "multi_stencil_pallas"]
+__all__ = ["stencil_pallas", "multi_stencil_pallas", "halo_from_offsets"]
 
 
-def _kernel_body(offsets, weights, r, tile, n_in, *refs):
-    """Generic d-dimensional weighted-stencil kernel body.
-
-    refs = (*in_refs, out_ref).  Each in_ref block is tile+2r per dim
-    (Element-indexed overlapping window); out block is `tile`.
-    """
-    *in_refs, out_ref = refs
-    acc = jnp.zeros(tuple(tile), dtype=jnp.float32)
-    for arr_i, in_ref in enumerate(in_refs):
-        x = in_ref[...].astype(jnp.float32)
-        for off, w in zip(offsets[arr_i], weights[arr_i]):
-            sl = tuple(
-                slice(r + int(o), r + int(o) + t) for o, t in zip(off, tile)
-            )
-            acc = acc + np.float32(w) * x[sl]
-    out_ref[...] = acc.astype(out_ref.dtype)
+def halo_from_offsets(
+    offsets_list: Sequence[np.ndarray], d: int
+) -> list[tuple[int, int]]:
+    """Per-dim asymmetric halo (lo, hi) covering every offset of every RHS:
+    lo_i = max(0, -min o_i), hi_i = max(0, max o_i)."""
+    lo = [0] * d
+    hi = [0] * d
+    for offs in offsets_list:
+        offs = np.asarray(offs).reshape(-1, d)
+        for i in range(d):
+            lo[i] = max(lo[i], int(max(0, -offs[:, i].min(initial=0))))
+            hi[i] = max(hi[i], int(max(0, offs[:, i].max(initial=0))))
+    return list(zip(lo, hi))
 
 
 def _round_up(n: int, t: int) -> int:
     return -(-n // t) * t
 
 
+def _sweep_kernel(
+    offsets, weights, lo, hi, tile, sweep, nswp, pipelined, *refs
+):
+    """Generic d-dim, p-RHS sweep kernel.
+
+    refs = (*x_hbm, out_ref, *windows, [*slabs,] win_sem, [slab_sem]).
+    Each x_hbm is the whole padded array (ANY memory space); windows are
+    VMEM refs of the halo'd tile; slabs are the 2-slot landing buffers for
+    the double-buffered next-slab prefetch.
+    """
+    d = len(tile)
+    p = len(offsets)
+    cross_axes = [i for i in range(d) if i != sweep]
+    x_hbm = refs[:p]
+    out_ref = refs[p]
+    windows = refs[p + 1 : 2 * p + 1]
+    if pipelined:
+        slabs = refs[2 * p + 1 : 3 * p + 1]
+        win_sem, slab_sem = refs[3 * p + 1 :]
+    else:
+        slabs = None
+        (win_sem,) = refs[2 * p + 1 :]
+
+    gids = [pl.program_id(j) for j in range(len(cross_axes))]
+    k = pl.program_id(len(cross_axes))
+    t_s = tile[sweep]
+    h_s = lo[sweep] + hi[sweep]
+    reuse = h_s > 0 and nswp > 1
+
+    def src_index(kk, start, size):
+        """HBM index tuple for rows [kk*t_s+start, +size) of the sweep axis
+        and the full halo'd cross extents of the current tile."""
+        idx = [None] * d
+        for j, i in enumerate(cross_axes):
+            idx[i] = pl.ds(gids[j] * tile[i], tile[i] + lo[i] + hi[i])
+        idx[sweep] = pl.ds(kk * t_s + start, size)
+        return tuple(idx)
+
+    def win_part(start, size):
+        idx = [slice(None)] * d
+        idx[sweep] = pl.ds(start, size)
+        return tuple(idx)
+
+    def window_load(kk):
+        copies = [
+            pltpu.make_async_copy(
+                x_hbm[a].at[src_index(kk, 0, t_s + h_s)],
+                windows[a],
+                win_sem.at[a],
+            )
+            for a in range(p)
+        ]
+        for cp in copies:
+            cp.start()
+        return copies
+
+    def slab_copy(a, kk, slot):
+        return pltpu.make_async_copy(
+            x_hbm[a].at[src_index(kk, h_s, t_s)],
+            slabs[a].at[slot],
+            slab_sem.at[a, slot],
+        )
+
+    if not reuse:
+        # No overlap to reuse (h_s == 0 or a single sweep step): every step
+        # fetches its full window.
+        for cp in window_load(k):
+            cp.wait()
+    else:
+        @pl.when(k == 0)
+        def _():
+            copies = window_load(0)
+            if pipelined:
+                for a in range(p):  # prefetch step 1's slab during compute
+                    slab_copy(a, 1, 1 % 2).start()
+            for cp in copies:
+                cp.wait()
+
+        @pl.when(k > 0)
+        def _():
+            # Scanning-face reuse: the trailing h_s rows of the previous
+            # window become the leading halo of this one — a VMEM-internal
+            # shift, no HBM traffic.
+            for a in range(p):
+                windows[a][win_part(0, h_s)] = windows[a][win_part(t_s, h_s)]
+            if pipelined:
+                for a in range(p):
+                    slab_copy(a, k, k % 2).wait()
+
+                @pl.when(k + 1 < nswp)
+                def _():
+                    for a in range(p):
+                        slab_copy(a, k + 1, (k + 1) % 2).start()
+                for a in range(p):
+                    windows[a][win_part(h_s, t_s)] = slabs[a][k % 2]
+            else:
+                copies = [
+                    pltpu.make_async_copy(
+                        x_hbm[a].at[src_index(k, h_s, t_s)],
+                        windows[a].at[win_part(h_s, t_s)],
+                        win_sem.at[a],
+                    )
+                    for a in range(p)
+                ]
+                for cp in copies:
+                    cp.start()
+                for cp in copies:
+                    cp.wait()
+
+    acc = jnp.zeros(tuple(tile), dtype=jnp.float32)
+    for a in range(p):
+        x = windows[a][...].astype(jnp.float32)
+        for off, w in zip(offsets[a], weights[a]):
+            sl = tuple(
+                slice(l + int(o), l + int(o) + t)
+                for o, l, t in zip(off, lo, tile)
+            )
+            acc = acc + np.float32(w) * x[sl]
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("offsets_w", "tile", "interpret")
+    jax.jit,
+    static_argnames=("offsets_w", "tile", "sweep", "pipelined", "interpret"),
 )
-def _stencil_call(us, offsets_w, tile, interpret):
+def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret):
     """us: tuple of p same-shape arrays.  offsets_w: tuple per array of
     (offsets_tuple, weights_tuple) — hashable static spec."""
     u0 = us[0]
     d = u0.ndim
-    offsets = [np.asarray(ow[0], dtype=np.int64) for ow in offsets_w]
-    weights = [list(ow[1]) for ow in offsets_w]
-    r = int(max(np.abs(o).max() for o in offsets))
     tile = tuple(int(t) for t in tile)
+    offsets = [np.asarray(ow[0], dtype=np.int64).reshape(-1, d)
+               for ow in offsets_w]
+    weights = [list(ow[1]) for ow in offsets_w]
+    halo = halo_from_offsets(offsets, d)
+    lo = tuple(h[0] for h in halo)
+    hi = tuple(h[1] for h in halo)
     padded_shape = tuple(_round_up(n, t) for n, t in zip(u0.shape, tile))
-    grid = tuple(ps // t for ps, t in zip(padded_shape, tile))
+    ntiles = tuple(ps // t for ps, t in zip(padded_shape, tile))
+    nswp = ntiles[sweep]
+    cross_axes = [i for i in range(d) if i != sweep]
+    grid = tuple(ntiles[i] for i in cross_axes) + (nswp,)
+    pipelined = bool(pipelined) and nswp > 1 and (lo[sweep] + hi[sweep]) > 0
 
     ins = []
     for u in us:
-        # zero-pad: r halo on the low side, r + round-up slack on the high.
+        # zero-pad: lo halo on the low side, hi + round-up slack on the high.
         pads = [
-            (r, r + ps - n) for ps, n in zip(padded_shape, u.shape)
+            (l, h + ps - n)
+            for l, h, ps, n in zip(lo, hi, padded_shape, u.shape)
         ]
         ins.append(jnp.pad(u, pads))
 
-    in_block = tuple(pl.Element(t + 2 * r) for t in tile)
-
-    def in_index_map(*g):
-        return tuple(gi * t for gi, t in zip(g, tile))
+    window_shape = tuple(t + l + h for t, l, h in zip(tile, lo, hi))
+    slab_shape = tuple(
+        tile[sweep] if i == sweep else window_shape[i] for i in range(d)
+    )
+    p = len(us)
+    scratch = [pltpu.VMEM(window_shape, u0.dtype) for _ in range(p)]
+    if pipelined:
+        scratch += [pltpu.VMEM((2,) + slab_shape, u0.dtype) for _ in range(p)]
+    scratch.append(pltpu.SemaphoreType.DMA((p,)))
+    if pipelined:
+        scratch.append(pltpu.SemaphoreType.DMA((p, 2)))
 
     def out_index_map(*g):
-        return g
+        idx = [None] * d
+        for j, i in enumerate(cross_axes):
+            idx[i] = g[j]
+        idx[sweep] = g[-1]
+        return tuple(idx)
 
     out = pl.pallas_call(
-        functools.partial(_kernel_body, offsets, weights, r, tile, len(us)),
+        functools.partial(
+            _sweep_kernel, offsets, weights, lo, hi, tile, sweep, nswp,
+            pipelined,
+        ),
         grid=grid,
-        in_specs=[pl.BlockSpec(in_block, in_index_map) for _ in us],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY) for _ in us],
         out_specs=pl.BlockSpec(tile, out_index_map),
         out_shape=jax.ShapeDtypeStruct(padded_shape, u0.dtype),
+        scratch_shapes=scratch,
         interpret=interpret,
     )(*ins)
     return out[tuple(slice(0, n) for n in u0.shape)]
 
 
-def _auto_tile(shape, r, dtype_bytes, n_operands, vmem_budget=None):
+def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None):
     from repro.core.tiling import VMEM_BYTES_V5E, select_tile
 
     budget = vmem_budget or VMEM_BYTES_V5E // 2
-    halo = [(r, r)] * len(shape)
-    choice = select_tile(
+    halo = halo_from_offsets(
+        [np.asarray(o).reshape(-1, len(shape)) for o in offsets_list],
+        len(shape),
+    )
+    return select_tile(
         shape,
         halo,
         dtype_bytes=dtype_bytes,
         vmem_budget=budget,
-        n_operands=n_operands + 1,  # p inputs + the output tile (§5 split)
+        n_operands=n_arrays + 1,  # p inputs + the output tile (§5 split)
+        sweep_axis="auto",
     )
-    return choice
 
 
 def stencil_pallas(
@@ -112,11 +266,13 @@ def stencil_pallas(
     tile: Sequence[int] | None = None,
     interpret: bool | None = None,
     vmem_budget: int | None = None,
+    sweep_axis: int | None = None,
+    pipelined: bool = True,
 ) -> jnp.ndarray:
     """Single-array weighted stencil, zero boundary fill (matches ref)."""
     return multi_stencil_pallas(
         [u], [offsets], [weights], tile=tile, interpret=interpret,
-        vmem_budget=vmem_budget,
+        vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
     )
 
 
@@ -127,20 +283,25 @@ def multi_stencil_pallas(
     tile: Sequence[int] | None = None,
     interpret: bool | None = None,
     vmem_budget: int | None = None,
+    sweep_axis: int | None = None,
+    pipelined: bool = True,
 ) -> jnp.ndarray:
     """p-RHS stencil  q = Σ_p K_p u_p  (paper §5): one VMEM budget split
-    across p operand tiles plus the output tile."""
+    across p operand windows plus the output tile, one shared sweep."""
     us = tuple(us)
     assert len({u.shape for u in us}) == 1, "RHS arrays must share a shape"
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    r = int(max(np.abs(np.asarray(o)).max() for o in offsets_list))
     if tile is None:
         choice = _auto_tile(
-            us[0].shape, r, us[0].dtype.itemsize, len(us),
+            us[0].shape, offsets_list, us[0].dtype.itemsize, len(us),
             vmem_budget=vmem_budget,
         )
         tile = choice.tile
+        if sweep_axis is None:
+            sweep_axis = choice.sweep_axis
+    if sweep_axis is None:
+        sweep_axis = 0
     offsets_w = tuple(
         (
             tuple(map(tuple, np.asarray(o).tolist())),
@@ -148,4 +309,7 @@ def multi_stencil_pallas(
         )
         for o, ws in zip(offsets_list, weights_list)
     )
-    return _stencil_call(us, offsets_w, tuple(tile), interpret)
+    return _stencil_call(
+        us, offsets_w, tuple(int(t) for t in tile), int(sweep_axis),
+        bool(pipelined), interpret,
+    )

@@ -107,7 +107,7 @@ def count_params(cfg: ModelCfg, active_only: bool = False) -> int:
         # expert weights count at top_k / n_experts utilization
         expert = sum(
             prod(s.shape)
-            for path, s in jax.tree.flatten_with_path(
+            for path, s in jax.tree_util.tree_flatten_with_path(
                 specs, is_leaf=lambda x: isinstance(x, ParamSpec)
             )[0]
             if any(getattr(k, "key", None) in ("w1", "w2", "w3") for k in path)

@@ -77,21 +77,32 @@ def mamba_layer_specs(cfg) -> dict[str, ParamSpec]:
     }
 
 
-def _causal_conv(xbc, conv_w, conv_b, state: Optional[jnp.ndarray]):
+def _causal_conv(xbc, conv_w, conv_b, state: Optional[jnp.ndarray],
+                 use_pallas: bool = False):
     """Depthwise causal conv, width W.  xbc: (B,S,C).
     state: (B, W-1, C) tail of the previous sequence (decode) or None.
-    Returns (out, new_state)."""
+    Returns (out, new_state).
+
+    ``use_pallas`` routes the math through the sweep-pipelined Pallas
+    kernel (kernels.conv1d) — the 1-D instantiation of the paper's
+    cache-fitting sweep.  The single-token decode step (S == 1) stays on
+    the unrolled reference: there is no sweep to pipeline."""
     w = conv_w.shape[0]
     if state is None:
         pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
     else:
         pad = state.astype(xbc.dtype)
     full = jnp.concatenate([pad, xbc], axis=1)  # (B, S+W-1, C)
+    new_state = full[:, -(w - 1):, :]
+    if use_pallas and xbc.shape[1] > 1:
+        from repro.kernels.conv1d import causal_conv1d
+
+        out = causal_conv1d(xbc, conv_w, conv_b, state=state)
+        return out, new_state
     out = jnp.zeros_like(xbc)
     for i in range(w):  # width is 4 — unrolled stencil (1-D, radius w-1)
         out = out + full[:, i : i + xbc.shape[1], :] * conv_w[i]
     out = out + conv_b
-    new_state = full[:, -(w - 1):, :]
     return jax.nn.silu(out), new_state
 
 
@@ -162,7 +173,8 @@ def mamba_block(cfg, p, x, ssm_state=None, conv_state=None):
     dt = jax.nn.softplus(dt.astype(f32) + p["dt_bias"].astype(f32))
     xbc = jnp.concatenate([xin, bc], axis=-1)
     xbc, new_conv = _causal_conv(
-        xbc, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt), conv_state
+        xbc, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt), conv_state,
+        use_pallas=getattr(cfg.ssm, "pallas_conv", False),
     )
     xin, B_, C_ = xbc[..., :din], xbc[..., din:din + n], xbc[..., din + n:]
     A = -jnp.exp(p["A_log"].astype(f32))

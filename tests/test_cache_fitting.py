@@ -1,5 +1,8 @@
 """Cache-fitting order (§4) and upper bounds (Eq. 12/14)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache_fitting import (

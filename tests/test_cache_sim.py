@@ -1,5 +1,8 @@
 """Exactness of the vectorized LRU simulator."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache_sim import _scan_lru, simulate_loads, simulate_misses

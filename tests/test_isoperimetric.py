@@ -1,4 +1,7 @@
 """Octahedron/simplex identities (Appendix A) and the Eq. 7/13 bounds."""
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.isoperimetric import (

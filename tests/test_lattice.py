@@ -1,5 +1,8 @@
 """Property tests for the interference lattice (paper §4, Eq. 8/9)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lattice import (

@@ -1,0 +1,196 @@
+"""Sweep-pipelined halo-reuse engine: kernel parity + traffic model.
+
+Covers the sweep-specific surface the seed suite didn't: forced sweep
+axes, pipelined vs. synchronous slab fetch, asymmetric halos, multi-RHS
+with one VMEM budget, tiles that don't divide the grid (the jnp.pad
+round-up path), the conv state path, and the sweep-aware cost model.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache_fitting import star_stencil
+from repro.core.tiling import (
+    select_tile, surface_to_volume, tile_traffic_bytes, tile_vmem_bytes,
+)
+from repro.kernels.ops import apply_stencil, traffic_report
+from repro.kernels.ref import stencil_ref
+from repro.kernels.stencil import halo_from_offsets, multi_stencil_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,tile,axis", [
+    ((70,), (16,), 0),                 # 1-D, non-divisible (pad round-up)
+    ((33, 129), (8, 64), 0),           # 2-D, both dims non-divisible
+    ((33, 129), (8, 64), 1),           # sweep along the lane axis
+    ((10, 24, 130), (4, 8, 64), 0),    # 3-D
+    ((10, 24, 130), (4, 8, 64), 1),    # 3-D, middle-axis sweep
+])
+@pytest.mark.parametrize("pipelined", [True, False])
+def test_sweep_axis_parity(shape, tile, axis, pipelined):
+    d = len(shape)
+    u = jax.random.normal(KEY, shape, jnp.float32)
+    offs = star_stencil(d, 2)
+    w = np.linspace(-1, 1, len(offs)).tolist()
+    out = apply_stencil(u, offs, w, tile=tile, sweep_axis=axis,
+                        pipelined=pipelined)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(stencil_ref(u, offs, w)),
+        atol=2e-5, rtol=2e-5,
+    )
+
+
+def test_asymmetric_halo_parity():
+    """Causal-style offsets: halo (3,0) on the sweep axis, (0,1) cross."""
+    offs = np.array([[-3, 0], [-2, 0], [-1, 0], [0, 0], [0, 1]])
+    w = [0.1, 0.2, 0.3, 0.4, 0.5]
+    u = jax.random.normal(KEY, (50, 40), jnp.float32)
+    assert halo_from_offsets([offs], 2) == [(3, 0), (0, 1)]
+    out = apply_stencil(u, offs, w, tile=(8, 16), sweep_axis=0)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(stencil_ref(u, offs, w)), atol=1e-5)
+
+
+def test_multi_rhs_shared_sweep():
+    """§5: p RHS arrays share the sweep; one VMEM budget split p+1 ways."""
+    u1 = jax.random.normal(KEY, (30, 70), jnp.float32)
+    u2 = jax.random.normal(jax.random.PRNGKey(1), (30, 70), jnp.float32)
+    o1, o2 = star_stencil(2, 1), star_stencil(2, 2)
+    w1, w2 = [0.3] * len(o1), [0.1] * len(o2)
+    out = multi_stencil_pallas(
+        [u1, u2], [o1, o2], [w1, w2], tile=(8, 32), sweep_axis=0)
+    ref = stencil_ref(u1, o1, w1) + stencil_ref(u2, o2, w2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_explicit_tile_not_dividing_grid():
+    u = jax.random.normal(KEY, (21, 45), jnp.float32)
+    offs = star_stencil(2, 1)
+    w = [1.0, 0.25, 0.25, 0.25, 0.25]
+    out = apply_stencil(u, offs, w, tile=(6, 17), sweep_axis=0)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(stencil_ref(u, offs, w)), atol=1e-5)
+
+
+def test_conv_state_path():
+    from repro.kernels.conv1d import causal_conv1d
+    from repro.models.ssm import _causal_conv
+
+    b, s, c, w = 2, 48, 8, 4
+    x = jax.random.normal(KEY, (b, s, c), jnp.float32)
+    cw = jax.random.normal(jax.random.PRNGKey(1), (w, c), jnp.float32) * 0.3
+    cb = jax.random.normal(jax.random.PRNGKey(2), (c,), jnp.float32) * 0.1
+    st = jax.random.normal(jax.random.PRNGKey(3), (b, w - 1, c), jnp.float32)
+    ref, _ = _causal_conv(x, cw, cb, st)
+    out = causal_conv1d(x, cw, cb, tile_s=16, state=st)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_conv_grad_matches_reference():
+    from repro.kernels.conv1d import causal_conv1d
+    from repro.models.ssm import _causal_conv
+
+    x = jax.random.normal(KEY, (2, 32, 8), jnp.float32)
+    cw = jax.random.normal(jax.random.PRNGKey(1), (4, 8), jnp.float32) * 0.3
+    cb = jnp.zeros((8,))
+    gk = jax.grad(lambda *a: jnp.sum(jnp.sin(causal_conv1d(*a, tile_s=16))),
+                  argnums=(0, 1, 2))(x, cw, cb)
+    gr = jax.grad(lambda *a: jnp.sum(jnp.sin(_causal_conv(*a, None)[0])),
+                  argnums=(0, 1, 2))(x, cw, cb)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=2e-5)
+
+
+def test_ssm_pallas_conv_parity():
+    """SSMCfg.pallas_conv routes the Mamba2 conv through the sweep kernel
+    without changing the forward pass."""
+    from repro.configs.mamba2_2p7b import smoke
+    from repro.models import ssm as S
+    from repro.parallel.sharding import ParamSpec
+
+    cfg0 = smoke()
+    cfg1 = dataclasses.replace(
+        cfg0, ssm=dataclasses.replace(cfg0.ssm, pallas_conv=True))
+    specs = S.ssm_param_specs(cfg0)
+    treedef = jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.tree.unflatten(
+        treedef, list(jax.random.split(KEY, treedef.num_leaves)))
+    params = jax.tree.map(
+        lambda s, k: jax.random.normal(k, s.shape, jnp.float32) * 0.02,
+        specs, keys, is_leaf=lambda x: isinstance(x, ParamSpec))
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg0.vocab)
+    x0, _ = S.ssm_forward(cfg0, params, toks, jnp.int32(0))
+    x1, _ = S.ssm_forward(cfg1, params, toks, jnp.int32(0))
+    np.testing.assert_allclose(
+        np.asarray(x0, np.float32), np.asarray(x1, np.float32),
+        atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Sweep-aware traffic model.
+# ---------------------------------------------------------------------------
+
+def test_sweep_traffic_drops_sweep_halo():
+    shape, tile, halo = (256, 256), (16, 64), [(2, 2), (2, 2)]
+    full = tile_traffic_bytes(shape, tile, halo, 4)
+    swept = tile_traffic_bytes(shape, tile, halo, 4, sweep_axis=0)
+    assert swept < full
+    # exact: the axis-0 halo is charged once per column instead of per tile
+    ncols = 256 // 64
+    assert swept == ncols * (256 + 4) * (64 + 4) * 4
+
+
+def test_surface_to_volume_is_faces_only():
+    # (halo'd volume)/volume - 1 over-counts corner terms; the fixed form
+    # is the face sum.
+    tile, halo = (10, 20), [(1, 1), (2, 2)]
+    s2v = surface_to_volume(tile, halo)
+    assert s2v == pytest.approx((2 * 20 + 4 * 10) / 200)
+    overcount = (12 * 24) / 200 - 1.0
+    assert s2v < overcount
+
+
+def test_asymmetric_halo_radius_not_floored():
+    """conv1d's (W-1, 0) halo: radius must be W-1, not (W-1)//2 — the
+    floored radius inflates the reported lower bound/efficiency."""
+    shape = (1024, 128)
+    good = select_tile(shape, [(3, 0), (0, 0)], 4, vmem_budget=1 << 18)
+    sym = select_tile(shape, [(1, 1), (0, 0)], 4, vmem_budget=1 << 18)
+    # same traffic shape, but the bound is computed at r=3 vs r=1 — the
+    # asymmetric choice must NOT report a higher efficiency than its
+    # floored-radius variant would (both are <= 1 by the invariant).
+    assert 0 < good.efficiency <= 1.0
+    assert 0 < sym.efficiency <= 1.0
+
+
+def test_select_tile_prefers_sweep_reuse():
+    c = select_tile((256, 256, 256), [(2, 2)] * 3, 4, vmem_budget=1 << 17,
+                    n_operands=2, aligned=False)
+    cn = select_tile((256, 256, 256), [(2, 2)] * 3, 4, vmem_budget=1 << 17,
+                     n_operands=2, sweep_axis=None, aligned=False)
+    assert c.sweep_axis is not None
+    assert c.traffic_bytes < cn.traffic_bytes
+    assert 0 < c.efficiency <= 1.0
+
+
+def test_vmem_accounting_includes_prefetch_slabs():
+    tile, halo = (4, 32), [(2, 2), (2, 2)]
+    base = tile_vmem_bytes(tile, halo, 4, sweep_axis=None)
+    pre = tile_vmem_bytes(tile, halo, 4, sweep_axis=0, prefetch=True)
+    assert pre == base + 2 * 4 * (32 + 4) * 4
+
+
+def test_traffic_report_ratio():
+    rep = traffic_report((256, 256, 256), 2, vmem_budget=16 * 1024,
+                         aligned=False)
+    assert rep["traffic_ratio"] >= 1.5  # the PR's acceptance floor
+    assert rep["sweep_reuse"]["traffic_bytes"] >= rep["lower_bound_bytes"]

@@ -1,3 +1,6 @@
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.tiling import select_tile, tile_traffic_bytes
