@@ -10,11 +10,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (
-    access_stream, natural_order, simulate_misses, star_stencil, shortest_len,
-    hyperbola_index,
-)
+from repro.core import access_stream, natural_order, simulate_misses, star_stencil
 from repro.core.lattice import CacheGeometry
+from repro.plan import Planner
 
 from .common import emit, timed
 
@@ -27,6 +25,7 @@ def run(quick: bool = True):
     step = 2 if quick else 1
     n3 = 8 if quick else 16
     K = star_stencil(3, 2)
+    planner = Planner()  # lattice diagnostics via the plan compiler
     recs = []
     for n1 in range(40, 100, step):
         for n2 in range(40, 100, step):
@@ -34,9 +33,9 @@ def run(quick: bool = True):
             stream = access_stream(dims, natural_order(dims, 2), K)
             m = simulate_misses(stream, GEOM)
             per_pt = m / ((n1 - 4) * (n2 - 4) * max(n3 - 4, 1))
-            short = shortest_len(dims, S, "l1") < 8
-            k, hdist = hyperbola_index(dims, S)
-            recs.append((n1, n2, per_pt, short, hdist))
+            rep = planner.lattice_report(dims, S, diameter=8)
+            short = rep.shortest_l1 < 8
+            recs.append((n1, n2, per_pt, short, rep.hyperbola_dist))
     return recs
 
 

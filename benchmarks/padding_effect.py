@@ -1,11 +1,15 @@
-"""§6 remedy: pad unfavorable grids, measure the miss reduction."""
+"""§6 remedy: pad unfavorable grids, measure the miss reduction.
+
+The pad decision comes from the plan compiler (``repro.plan``) — the same
+`PadPlan` the production kernels consume — so this figure and the serving
+path cannot diverge.
+"""
 from __future__ import annotations
 
-from repro.core import (
-    access_stream, natural_order, pad_grid, simulate_misses, star_stencil,
-)
+from repro.core import access_stream, simulate_misses, star_stencil
 from repro.core.cache_fitting import plan_schedule
 from repro.core.lattice import CacheGeometry
+from repro.plan import PlanCache, Planner
 
 from .common import emit, timed
 
@@ -16,9 +20,15 @@ UNFAV = [(45, 91, 24), (90, 91, 24), (64, 64, 24)]
 
 def run():
     K = star_stencil(3, 2)
+    planner = Planner(cache=PlanCache(persistent=False))
     rows = []
     for dims in UNFAV:
-        padded, info = pad_grid(dims, S, diameter=5)
+        plan = planner.plan(
+            shape=dims, offsets=K, geometry=(GEOM.a, GEOM.z, GEOM.w),
+            vmem_budget=S * 4, aligned=False,
+        )
+        assert plan.pad.nonzero, f"planner found {dims} favorable?"
+        padded = plan.pad.padded_shape
         o0, b0, _ = plan_schedule(dims, S, 2, geom=GEOM)
         o1, b1, _ = plan_schedule(padded, S, 2, geom=GEOM)
         m0 = simulate_misses(access_stream(dims, o0, K, base_q=b0), GEOM)

@@ -1,0 +1,164 @@
+"""PR-tracked perf record: plan-compiler tiles vs. the legacy heuristic.
+
+Emits the machine-readable ``BENCH_PR2.json`` consumed by scripts/ci.sh:
+
+* **Planned vs. legacy modeled HBM traffic** for the paper's 13-point star
+  on a spread of shapes (cube, slab, odd extents) at the cache-fitting
+  16 KiB and TPU-VMEM 16 MiB budgets.  The planner scores a strict
+  superset of the legacy candidates under the same §4 traffic model, so
+  ``planned/legacy <= 1`` on every shape is a hard gate.
+
+* **Padding pipeline** on a Fig. 5 unfavorable grid (n1·n2 ≈ k·S/2):
+  gate that the planner proposes a nonzero pad whose padded grid is
+  favorable.
+
+* **Plan-cache latency**: cold compile vs. warm content-addressed hit
+  (gate: warm < 1 ms — the serving case plans in O(1)).
+
+* The PR1 sweep-reuse record (``sweep_traffic``) rides along unchanged so
+  the traffic trajectory keeps its history and its gates.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core.cache_fitting import star_stencil
+from repro.core.padding import is_unfavorable
+from repro.plan import PlanCache, Planner
+
+from .common import emit, timed
+from . import sweep_traffic
+
+RADIUS = 2
+SHAPES = [
+    ("cube_256", (256, 256, 256)),
+    ("slab_64x128x512", (64, 128, 512)),
+    ("odd_100", (100, 100, 100)),
+    ("odd_45x91x64", (45, 91, 64)),
+]
+BUDGETS = [
+    # (label, bytes, hardware-aligned candidate tiles?)
+    ("paper_cache_16KiB", 16 * 1024, False),
+    ("tpu_vmem_16MiB", 16 << 20, True),
+]
+UNFAVORABLE = (45, 91, 24)  # 45*91 = 4095 ~ 2*(S/2): Fig. 5 hyperbola k=2
+GEOM = (2, 512, 4)
+S_WORDS = GEOM[0] * GEOM[1] * GEOM[2]
+
+
+def planned_vs_legacy(planner: Planner) -> list[dict]:
+    offs = star_stencil(3, RADIUS)
+    rows = []
+    for sname, shape in SHAPES:
+        for blabel, budget, aligned in BUDGETS:
+            plan = planner.plan(
+                shape=shape, offsets=offs, vmem_budget=budget, aligned=aligned,
+            )
+            rows.append({
+                "shape": list(shape),
+                "regime": blabel,
+                "aligned_tiles": aligned,
+                "planned_tile": list(plan.tile),
+                "planned_sweep_axis": plan.sweep_axis,
+                "planned_traffic_bytes": plan.traffic_bytes,
+                "legacy_tile": list(plan.legacy_tile),
+                "legacy_traffic_bytes": plan.legacy_traffic_bytes,
+                "planned_over_legacy": plan.traffic_vs_legacy,
+                "efficiency_vs_lower_bound": plan.efficiency,
+            })
+    return rows
+
+
+def padding_record(planner: Planner) -> dict:
+    offs = star_stencil(3, RADIUS)
+    plan = planner.plan(
+        shape=UNFAVORABLE, offsets=offs, geometry=GEOM,
+        vmem_budget=S_WORDS * 4, aligned=False,
+    )
+    padded = plan.pad.padded_shape
+    return {
+        "grid": list(UNFAVORABLE),
+        "geometry": list(GEOM),
+        "pad": list(plan.pad.pad),
+        "padded": list(padded),
+        "extra_words": plan.pad.extra_words,
+        "shortest_before": plan.pad.shortest_before,
+        "shortest_after": plan.pad.shortest_after,
+        "pad_triggered": plan.pad.nonzero,
+        "padded_favorable": not is_unfavorable(padded, S_WORDS, diameter=5),
+    }
+
+
+def cache_latency() -> dict:
+    """Cold plan vs. warm content-addressed hit on a fresh cache."""
+    planner = Planner(cache=PlanCache(persistent=False))
+    offs = star_stencil(3, RADIUS)
+    kw = dict(shape=(256, 256, 256), offsets=offs, vmem_budget=16 << 20)
+    t0 = time.perf_counter()
+    planner.plan(**kw)
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    warm = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        planner.plan(**kw)
+        warm.append((time.perf_counter() - t0) * 1e3)
+    warm_ms = min(warm)
+    return {
+        "cold_plan_ms": cold_ms,
+        "warm_hit_ms": warm_ms,
+        "speedup_x": cold_ms / max(warm_ms, 1e-9),
+        "stats": dict(planner.cache.stats),
+    }
+
+
+def build_report(quick: bool = True) -> dict:
+    planner = Planner(cache=PlanCache(persistent=False))
+    rows = planned_vs_legacy(planner)
+    pad = padding_record(planner)
+    latency = cache_latency()
+    pr1 = sweep_traffic.build_report(quick)
+    worst = max(r["planned_over_legacy"] for r in rows)
+    ok1 = pr1["acceptance"]
+    return {
+        "pr": 2,
+        "benchmark": "plan_compiler",
+        "operator": f"star13_r{RADIUS}",
+        "planned_vs_legacy": rows,
+        "padding": pad,
+        "plan_cache": latency,
+        "pr1_sweep_reuse": pr1,
+        "acceptance": {
+            "worst_planned_over_legacy": worst,
+            "planned_le_legacy_ok": worst <= 1.0,
+            "pad_ok": pad["pad_triggered"] and pad["padded_favorable"],
+            "warm_hit_ms": latency["warm_hit_ms"],
+            "warm_hit_ok": latency["warm_hit_ms"] < 1.0,
+            # PR1 gates ride along unchanged.
+            "traffic_ok": ok1["traffic_ok"],
+            "speed_mode": ok1["speed_mode"],
+            "speed_ok": ok1["speed_ok"],
+            "achieved_traffic_ratio": ok1["achieved_traffic_ratio"],
+        },
+    }
+
+
+def main(quick: bool = True, json_path: str | None = None) -> dict:
+    report, us = timed(build_report, quick)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    ok = report["acceptance"]
+    emit(
+        "planner_traffic",
+        us,
+        f"worst_planned_over_legacy={ok['worst_planned_over_legacy']:.3f} "
+        f"pad_ok={ok['pad_ok']} warm_hit_ms={ok['warm_hit_ms']:.3f}",
+    )
+    return report
+
+
+if __name__ == "__main__":
+    rep = main()
+    print(json.dumps(rep["acceptance"], indent=2))

@@ -2,9 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV per benchmark (spec format).
 ``--full`` runs paper-scale sweeps; default is the quick CI-sized pass.
-``--json [PATH]`` runs only the PR-tracked sweep-traffic record and writes
-it to PATH (default: ``BENCH_PR1.json`` at the repo root) — the perf
-trajectory artifact scripts/ci.sh checks on every PR.
+``--json [PATH]`` runs only the PR-tracked plan-compiler record (which
+embeds the PR1 sweep-traffic record) and writes it to PATH (default:
+``BENCH_PR2.json`` at the repo root) — the perf trajectory artifact
+scripts/ci.sh checks on every PR.
 """
 from __future__ import annotations
 
@@ -16,7 +17,7 @@ def main() -> None:
     argv = sys.argv[1:]
     quick = "--full" not in argv
     if "--json" in argv:
-        from . import sweep_traffic
+        from . import planner_traffic
 
         i = argv.index("--json")
         if i + 1 < len(argv) and not argv[i + 1].startswith("--"):
@@ -24,20 +25,28 @@ def main() -> None:
         else:
             path = os.path.join(
                 os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                "BENCH_PR1.json",
+                "BENCH_PR2.json",
             )
-        report = sweep_traffic.main(quick, json_path=path)
+        report = planner_traffic.main(quick, json_path=path)
         ok = report["acceptance"]
         print(
-            f"wrote {path}: traffic x{ok['achieved_traffic_ratio']:.2f} "
-            f"(ok={ok['traffic_ok']}) speed[{ok['speed_mode']}] ok={ok['speed_ok']}"
+            f"wrote {path}: planned/legacy<= {ok['worst_planned_over_legacy']:.3f} "
+            f"(ok={ok['planned_le_legacy_ok']}) pad_ok={ok['pad_ok']} "
+            f"warm_hit={ok['warm_hit_ms']:.3f}ms (ok={ok['warm_hit_ok']}) "
+            f"traffic x{ok['achieved_traffic_ratio']:.2f} (ok={ok['traffic_ok']}) "
+            f"speed[{ok['speed_mode']}] ok={ok['speed_ok']}"
         )
-        if not (ok["traffic_ok"] and ok["speed_ok"]):
+        gates = (
+            ok["planned_le_legacy_ok"] and ok["pad_ok"] and ok["warm_hit_ok"]
+            and ok["traffic_ok"] and ok["speed_ok"]
+        )
+        if not gates:
             sys.exit(1)  # the perf gate IS the CI signal — fail loudly
         return
     from . import (
         bounds_table, fig4_miss_reduction, fig5_unfavorable,
-        padding_effect, roofline_report, sweep_traffic, tpu_tiling,
+        padding_effect, planner_traffic, roofline_report, sweep_traffic,
+        tpu_tiling,
     )
     fig4_miss_reduction.main(quick)
     fig5_unfavorable.main(quick)
@@ -45,6 +54,7 @@ def main() -> None:
     padding_effect.main(quick)
     tpu_tiling.main(quick)
     sweep_traffic.main(quick)
+    planner_traffic.main(quick)
     roofline_report.main(quick)
 
 

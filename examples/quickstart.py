@@ -16,6 +16,7 @@ from repro.core.lattice import CacheGeometry, InterferenceLattice
 from repro.core.tiling import select_tile
 from repro.kernels.ops import apply_star_2nd_order
 from repro.kernels.ref import star_weights_2nd_order, stencil_ref
+from repro.plan import PlanCache, Planner
 
 
 def main():
@@ -63,6 +64,36 @@ def main():
     ref = stencil_ref(u, *star_weights_2nd_order(3, 2))
     print(f"  pallas kernel max|err| vs oracle: "
           f"{float(jnp.abs(out - ref).max()):.2e}")
+
+    # The plan compiler: the whole pipeline (lattice -> LLL -> unfavorable
+    # detection -> padding -> tiling) as one cached call.  Same machinery,
+    # one entry point; `python -m repro.plan.explain 45x91x60` prints the
+    # full report.
+    planner = Planner(cache=PlanCache(persistent=False))
+    plan = planner.plan(shape=dims, offsets=star_stencil(3, 2),
+                        geometry=(geom.a, geom.z, geom.w),
+                        vmem_budget=S * 4, aligned=False)
+    print(f"  plan compiler: pad {plan.pad.pad} -> {plan.pad.padded_shape}, "
+          f"tile {plan.tile} sweep axis {plan.sweep_axis}")
+    print(f"    planned/legacy traffic = {plan.traffic_vs_legacy:.3f}, "
+          f"efficiency vs isoperimetric bound = {plan.efficiency:.2f}")
+    plan_again = planner.plan(shape=dims, offsets=star_stencil(3, 2),
+                              geometry=(geom.a, geom.z, geom.w),
+                              vmem_budget=S * 4, aligned=False)
+    assert plan_again == plan  # warm cache hit: O(1), no recompute
+    print(f"    warm cache hit: {planner.last_plan_seconds * 1e3:.2f} ms "
+          f"(stats {planner.cache.stats['hits']} hits / "
+          f"{planner.cache.stats['misses']} misses)")
+
+    # Run the kernel with a plan as the single source of truth (un-planned
+    # calls consult the default planner internally).
+    from repro.kernels.stencil import stencil_pallas
+
+    offs, w = star_weights_2nd_order(3, 2)
+    tpu_plan = planner.plan(shape=u.shape, offsets=offs)
+    out_planned = stencil_pallas(u, offs, w, plan=tpu_plan)
+    print(f"  planned kernel max|err| vs oracle: "
+          f"{float(jnp.abs(out_planned - ref).max()):.2e}")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 CI: the full test suite plus the PR-tracked perf record.
+# Tier-1 CI: the full test suite, the planner smoke, and the PR-tracked
+# perf record.
 #
-#   scripts/ci.sh            # tests + quick benchmark JSON (BENCH_PR1.json)
+#   scripts/ci.sh            # tests + planner smoke + BENCH_PR2.json
 #
-# The JSON pass re-derives the modeled-traffic numbers checked in at
-# BENCH_PR1.json; a drift there is a perf regression, not flake.
+# The planner smoke plans 3 shapes (one Fig. 5 unfavorable grid) and
+# asserts the pad triggers and the planned-traffic gate holds.  The JSON
+# pass re-derives the modeled-traffic numbers checked in at
+# BENCH_PR2.json; a drift there is a perf regression, not flake.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m pytest -x -q
+python -m repro.plan.explain --smoke
 python -m benchmarks.run --json

@@ -41,6 +41,9 @@ class SSMCfg:
     chunk: int = 128       # SSD chunk length Q
     pallas_conv: bool = False  # route the causal conv through the Pallas
                                # sweep kernel (kernels.conv1d) when S > 1
+    conv_tile: int | None = None  # sweep-tile tokens for the Pallas conv;
+                                  # None -> the plan compiler (repro.plan)
+                                  # picks the traffic-minimizing tile
 
 
 @dataclass(frozen=True)

@@ -72,35 +72,65 @@ def pad_grid(
     those.  Objective: (1) satisfy shortest >= diameter/a, (2) minimize
     extra memory, (3) tie-break toward the *smallest* admissible shortest
     vector so pencils stay wide (§6).
+
+    Guarantees: d=1 grids and already-favorable grids return zero padding
+    (a no-op) without searching; the search itself is bounded by the
+    ``max_pad`` cap per dim and raises a clear ``ValueError`` when no
+    favorable pad exists under it (rather than scanning forever or
+    returning something unfavorable).
     """
     dims = tuple(int(n) for n in dims)
     d = len(dims)
+    if max_pad < 0:
+        raise ValueError(f"max_pad must be >= 0, got {max_pad}")
     target = diameter / a
-    best = None
-    for pads in itertools.product(range(max_pad + 1), repeat=max(d - 1, 1)):
+    before = shortest_len(dims, S, norm)
+
+    def info_for(cand, after):
+        return {
+            "original": dims,
+            "padded": cand,
+            "extra_words": prod(cand) - prod(dims),
+            "shortest_before": before,
+            "shortest_after": after,
+            "threshold": target,
+        }
+
+    # No-op fast paths: a 1-D grid has no paddable dims (only the leading
+    # d-1 dims enter the strides), and a favorable grid needs no help.
+    if d == 1 or before >= target:
+        return dims, info_for(dims, before)
+
+    def extra_of(pads):
         cand = tuple(
             dims[i] + (pads[i] if i < d - 1 else 0) for i in range(d)
         )
+        return prod(cand) - prod(dims), cand
+
+    # Enumerate in order of increasing extra memory so we can stop as soon
+    # as the remaining candidates cannot beat the best favorable one.
+    ranked = sorted(
+        (extra_of(p) for p in itertools.product(range(max_pad + 1), repeat=d - 1)),
+        key=lambda ec: ec[0],
+    )
+    best = None
+    for extra, cand in ranked:
+        if best is not None and extra > best[0][0]:
+            break  # every later candidate costs strictly more memory
         ln = shortest_len(cand, S, norm)
         if ln < target:
             continue
-        extra = prod(cand) - prod(dims)
         key = (extra, ln)
         if best is None or key < best[0]:
             best = (key, cand, ln)
     if best is None:
         raise ValueError(
-            f"no favorable padding within +{max_pad} per dim for {dims} (S={S})"
+            f"no favorable padding of {dims} within +{max_pad} per leading "
+            f"dim (S={S}, shortest {before:.3g} < threshold {target:.3g}); "
+            f"raise max_pad — Appendix B guarantees a favorable pad exists"
         )
     _, cand, ln = best
-    return cand, {
-        "original": dims,
-        "padded": cand,
-        "extra_words": prod(cand) - prod(dims),
-        "shortest_before": shortest_len(dims, S, norm),
-        "shortest_after": ln,
-        "threshold": target,
-    }
+    return cand, info_for(cand, ln)
 
 
 # ---------------------------------------------------------------------------

@@ -38,11 +38,14 @@ from dataclasses import dataclass
 from math import prod
 from typing import Sequence
 
+import numpy as np
+
 from .isoperimetric import lower_bound_loads
 
 __all__ = [
     "TileChoice",
     "candidate_tiles",
+    "halo_from_offsets",
     "tile_traffic_bytes",
     "tile_vmem_bytes",
     "surface_to_volume",
@@ -52,6 +55,26 @@ __all__ = [
 VMEM_BYTES_V5E = 128 * 1024 * 1024  # v5e VMEM per core (target hardware)
 LANE = 128
 SUBLANE = 8
+
+
+def halo_from_offsets(
+    offsets_list: Sequence, d: int
+) -> list[tuple[int, int]]:
+    """Per-dim asymmetric halo (lo, hi) covering every offset of every RHS:
+    lo_i = max(0, -min o_i), hi_i = max(0, max o_i).
+
+    The single definition shared by the sweep kernel (window shapes) and
+    the plan compiler (VMEM/traffic model) — they must agree or the
+    planner budgets windows the kernel does not allocate.
+    """
+    lo = [0] * d
+    hi = [0] * d
+    for offs in offsets_list:
+        offs = np.asarray(offs, dtype=np.int64).reshape(-1, d)
+        for i in range(d):
+            lo[i] = max(lo[i], int(max(0, -offs[:, i].min(initial=0))))
+            hi[i] = max(hi[i], int(max(0, offs[:, i].max(initial=0))))
+    return list(zip(lo, hi))
 
 
 @dataclass(frozen=True)
@@ -215,6 +238,7 @@ def select_tile(
     sweep_axis: int | None | str = "auto",
     aligned: bool = True,
     prefetch: bool = True,
+    extra_tiles: Sequence[Sequence[int]] | None = None,
 ) -> TileChoice:
     """Pick the traffic-minimizing VMEM tile (paper §4 adapted, §5 for the
     per-operand budget split: budget/n_operands per array).
@@ -222,11 +246,21 @@ def select_tile(
     ``sweep_axis``: ``"auto"`` tries every axis with halo reuse (and the
     per-tile-halo fallback) and keeps the cheapest; an int forces that
     sweep axis; ``None`` forces the seed's per-tile-halo model.
+
+    ``extra_tiles``: additional candidate tiles scored alongside the
+    default enumeration under every sweep axis — the plan compiler feeds
+    the reduced-basis box and the s2v-optimal box through this hook, so
+    its result can only improve on the bare heuristic.
     """
     shape = tuple(int(n) for n in shape)
     halo = [(int(lo), int(hi)) for lo, hi in halo]
     budget = vmem_budget // max(n_operands, 1)
     max_elems = budget // dtype_bytes
+    extras = [
+        tuple(int(t) for t in e)
+        for e in (extra_tiles or [])
+        if len(e) == len(shape) and all(1 <= int(t) for t in e)
+    ]
     if sweep_axis == "auto":
         axes: list[int | None] = [None] + [
             i for i, n in enumerate(shape) if n > 1
@@ -240,7 +274,11 @@ def select_tile(
     lb = _traffic_lower_bound(shape, budget // dtype_bytes, dtype_bytes, r)
     best: TileChoice | None = None
     for axis in axes:
-        for tile in candidate_tiles(shape, max_elems, axis, aligned):
+        cands = candidate_tiles(shape, max_elems, axis, aligned)
+        if extras:
+            seen = set(cands)
+            cands = cands + [t for t in extras if t not in seen]
+        for tile in cands:
             vmem = tile_vmem_bytes(tile, halo, dtype_bytes, axis, prefetch)
             if vmem > budget:
                 continue

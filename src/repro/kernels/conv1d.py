@@ -168,20 +168,44 @@ def _conv_grad_bwd(tile_s, interpret, res, g):
 _conv_grad.defvjp(_conv_grad_fwd, _conv_grad_bwd)
 
 
+@functools.lru_cache(maxsize=512)
+def _planned_tile_s(seq: int, channels: int, width: int, dtype_bytes: int) -> int:
+    """Sweep-tile length from the plan compiler: the conv is a (S, C) grid
+    with halo (W-1, 0) on the swept sequence axis.  The planner's
+    persistent cache (plus this per-process memo) makes the serving-path
+    repeat O(1)."""
+    from repro.plan import default_planner
+
+    offs = tuple((-i, 0) for i in range(width))
+    plan = default_planner().plan(
+        shape=(seq, channels), offsets=(offs,), dtype_bytes=dtype_bytes,
+        n_operands=2,
+    )
+    # The plan's sweep tile when it sweeps the sequence axis; otherwise the
+    # whole (budget-clamped) sequence is one tile and there is no sweep.
+    return int(plan.tile[0])
+
+
 def causal_conv1d(
     x: jnp.ndarray,
     conv_w: jnp.ndarray,
     conv_b: jnp.ndarray,
-    tile_s: int = 256,
+    tile_s: int | None = None,
     interpret: bool | None = None,
     state: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """x: (B, S, C); conv_w: (W, C); conv_b: (C,).  Causal, silu-activated
     (matches models.ssm._causal_conv).  ``state``: optional (B, W-1, C)
     tail of the previous sequence used as the leading halo (serving path;
-    not differentiated)."""
+    not differentiated).  ``tile_s=None`` asks the plan compiler for the
+    traffic-minimizing sweep tile."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    if tile_s is None:
+        tile_s = _planned_tile_s(
+            int(x.shape[1]), int(x.shape[2]), int(conv_w.shape[0]),
+            x.dtype.itemsize,
+        )
     if state is None:
         return _conv_grad(x, conv_w, conv_b, int(tile_s), bool(interpret))
     xp, tile_s = _prepend_halo(x, conv_w, state, tile_s)

@@ -24,7 +24,7 @@ not divisible by the tile take this round-up path).
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -32,22 +32,12 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.tiling import halo_from_offsets  # shared with the planner
+
+if TYPE_CHECKING:
+    from repro.plan import StencilPlan
+
 __all__ = ["stencil_pallas", "multi_stencil_pallas", "halo_from_offsets"]
-
-
-def halo_from_offsets(
-    offsets_list: Sequence[np.ndarray], d: int
-) -> list[tuple[int, int]]:
-    """Per-dim asymmetric halo (lo, hi) covering every offset of every RHS:
-    lo_i = max(0, -min o_i), hi_i = max(0, max o_i)."""
-    lo = [0] * d
-    hi = [0] * d
-    for offs in offsets_list:
-        offs = np.asarray(offs).reshape(-1, d)
-        for i in range(d):
-            lo[i] = max(lo[i], int(max(0, -offs[:, i].min(initial=0))))
-            hi[i] = max(hi[i], int(max(0, offs[:, i].max(initial=0))))
-    return list(zip(lo, hi))
 
 
 def _round_up(n: int, t: int) -> int:
@@ -242,20 +232,19 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret):
 
 
 def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None):
-    from repro.core.tiling import VMEM_BYTES_V5E, select_tile
+    """Tile decision for an un-planned call: a thin wrapper over the plan
+    compiler (``repro.plan``), whose persistent cache makes repeated shapes
+    — the serving case — O(1).  The old ad-hoc heuristic survives as
+    ``Planner(strategy="legacy")``; the planner asserts it never predicts
+    more traffic than that baseline."""
+    from repro.plan import default_planner
 
-    budget = vmem_budget or VMEM_BYTES_V5E // 2
-    halo = halo_from_offsets(
-        [np.asarray(o).reshape(-1, len(shape)) for o in offsets_list],
-        len(shape),
-    )
-    return select_tile(
-        shape,
-        halo,
+    return default_planner().plan(
+        shape=tuple(int(n) for n in shape),
+        offsets=[np.asarray(o).reshape(-1, len(shape)) for o in offsets_list],
         dtype_bytes=dtype_bytes,
-        vmem_budget=budget,
+        vmem_budget=vmem_budget,
         n_operands=n_arrays + 1,  # p inputs + the output tile (§5 split)
-        sweep_axis="auto",
     )
 
 
@@ -268,11 +257,17 @@ def stencil_pallas(
     vmem_budget: int | None = None,
     sweep_axis: int | None = None,
     pipelined: bool = True,
+    plan: "StencilPlan | None" = None,
 ) -> jnp.ndarray:
-    """Single-array weighted stencil, zero boundary fill (matches ref)."""
+    """Single-array weighted stencil, zero boundary fill (matches ref).
+
+    ``plan``: a precompiled ``repro.plan.StencilPlan`` — the single source
+    of truth for tile/sweep/pipelining when given; otherwise the default
+    planner is consulted (and its cache makes repeats O(1))."""
     return multi_stencil_pallas(
         [u], [offsets], [weights], tile=tile, interpret=interpret,
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
+        plan=plan,
     )
 
 
@@ -285,14 +280,24 @@ def multi_stencil_pallas(
     vmem_budget: int | None = None,
     sweep_axis: int | None = None,
     pipelined: bool = True,
+    plan: "StencilPlan | None" = None,
 ) -> jnp.ndarray:
     """p-RHS stencil  q = Σ_p K_p u_p  (paper §5): one VMEM budget split
-    across p operand windows plus the output tile, one shared sweep."""
+    across p operand windows plus the output tile, one shared sweep.
+
+    Tile/sweep resolution order: explicit ``tile``/``sweep_axis`` args win,
+    then the ``plan``'s decision, then the default planner."""
     us = tuple(us)
     assert len({u.shape for u in us}) == 1, "RHS arrays must share a shape"
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    if tile is None:
+    if plan is not None:
+        if tile is None:
+            tile = plan.tile
+        if sweep_axis is None:
+            sweep_axis = plan.sweep_axis
+        pipelined = pipelined and plan.pipelined
+    elif tile is None:
         choice = _auto_tile(
             us[0].shape, offsets_list, us[0].dtype.itemsize, len(us),
             vmem_budget=vmem_budget,

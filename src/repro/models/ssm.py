@@ -78,15 +78,16 @@ def mamba_layer_specs(cfg) -> dict[str, ParamSpec]:
 
 
 def _causal_conv(xbc, conv_w, conv_b, state: Optional[jnp.ndarray],
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, tile_s: Optional[int] = None):
     """Depthwise causal conv, width W.  xbc: (B,S,C).
     state: (B, W-1, C) tail of the previous sequence (decode) or None.
     Returns (out, new_state).
 
     ``use_pallas`` routes the math through the sweep-pipelined Pallas
     kernel (kernels.conv1d) — the 1-D instantiation of the paper's
-    cache-fitting sweep.  The single-token decode step (S == 1) stays on
-    the unrolled reference: there is no sweep to pipeline."""
+    cache-fitting sweep; ``tile_s=None`` lets the plan compiler pick the
+    sweep tile.  The single-token decode step (S == 1) stays on the
+    unrolled reference: there is no sweep to pipeline."""
     w = conv_w.shape[0]
     if state is None:
         pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
@@ -97,7 +98,7 @@ def _causal_conv(xbc, conv_w, conv_b, state: Optional[jnp.ndarray],
     if use_pallas and xbc.shape[1] > 1:
         from repro.kernels.conv1d import causal_conv1d
 
-        out = causal_conv1d(xbc, conv_w, conv_b, state=state)
+        out = causal_conv1d(xbc, conv_w, conv_b, tile_s=tile_s, state=state)
         return out, new_state
     out = jnp.zeros_like(xbc)
     for i in range(w):  # width is 4 — unrolled stencil (1-D, radius w-1)
@@ -175,6 +176,7 @@ def mamba_block(cfg, p, x, ssm_state=None, conv_state=None):
     xbc, new_conv = _causal_conv(
         xbc, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt), conv_state,
         use_pallas=getattr(cfg.ssm, "pallas_conv", False),
+        tile_s=getattr(cfg.ssm, "conv_tile", None),
     )
     xin, B_, C_ = xbc[..., :din], xbc[..., din:din + n], xbc[..., din + n:]
     A = -jnp.exp(p["A_log"].astype(f32))

@@ -1,0 +1,37 @@
+"""Stencil plan compiler: lattice → padding → tiling, compiled once,
+cached forever.
+
+The paper's pipeline (interference lattice → LLL → unfavorable-grid
+detection → padding → surface-to-volume tiling) lives here as a single
+``Planner.plan()`` call producing a frozen :class:`StencilPlan`, memoized
+by a content-addressed persistent :class:`PlanCache`.  Consumers —
+``kernels.stencil``, ``kernels.conv1d``, ``models.ssm``, the benchmark
+harness — treat the plan as the single source of truth for padding, tile
+shape, sweep axis and pipelining.
+
+``python -m repro.plan.explain SHAPE`` prints a human-readable plan
+report (see :mod:`repro.plan.explain`).
+"""
+
+from .cache import PlanCache, default_cache_dir  # noqa: F401
+from .planner import Planner, default_planner, plan_stencil  # noqa: F401
+from .schema import (  # noqa: F401
+    PLANNER_VERSION,
+    LatticeReport,
+    PadPlan,
+    PlanRequest,
+    StencilPlan,
+)
+
+__all__ = [
+    "PLANNER_VERSION",
+    "LatticeReport",
+    "PadPlan",
+    "PlanCache",
+    "PlanRequest",
+    "Planner",
+    "StencilPlan",
+    "default_cache_dir",
+    "default_planner",
+    "plan_stencil",
+]

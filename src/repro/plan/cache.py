@@ -1,0 +1,141 @@
+"""Content-addressed persistent plan cache (in-memory LRU + on-disk JSON).
+
+The serving case plans the same (shape, stencil, budget) tuple millions of
+times; a plan is pure data, so it is computed once and looked up ever
+after.  Keys are ``PlanRequest.cache_key()`` — a sha256 over the canonical
+request JSON plus the planner version — so they are stable across process
+restarts and invalidate themselves when the pipeline changes.
+
+Robustness contract: the cache can only ever *miss*.  A corrupted or
+truncated on-disk entry, an unwritable cache dir, a permission error —
+all degrade to re-planning, never to an exception reaching the caller.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from collections import OrderedDict
+
+from .schema import StencilPlan
+
+__all__ = ["PlanCache", "default_cache_dir"]
+
+_ENV_DIR = "REPRO_PLAN_CACHE_DIR"
+
+
+def default_cache_dir() -> str:
+    env = os.environ.get(_ENV_DIR)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "plans")
+
+
+class PlanCache:
+    """Two-level plan cache: OrderedDict LRU in front of a JSON file dir.
+
+    ``persistent=False`` (or an unusable directory) degrades to
+    memory-only.  ``stats`` counts hits/misses/disk activity so tests and
+    benchmarks can assert cache behavior.
+    """
+
+    def __init__(
+        self,
+        cache_dir: str | None = None,
+        capacity: int = 256,
+        persistent: bool = True,
+    ):
+        self.capacity = int(capacity)
+        self.dir = (cache_dir or default_cache_dir()) if persistent else None
+        self._mem: OrderedDict[str, StencilPlan] = OrderedDict()
+        self.stats = {
+            "hits": 0,
+            "misses": 0,
+            "mem_hits": 0,
+            "disk_hits": 0,
+            "corrupt": 0,
+            "evictions": 0,
+            "disk_errors": 0,
+        }
+
+    # -- internals ---------------------------------------------------------
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.dir, f"{key}.json")
+
+    def _remember(self, key: str, plan: StencilPlan) -> None:
+        self._mem[key] = plan
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+            self.stats["evictions"] += 1
+
+    # -- API ---------------------------------------------------------------
+
+    def get(self, key: str) -> StencilPlan | None:
+        plan = self._mem.get(key)
+        if plan is not None:
+            self._mem.move_to_end(key)
+            self.stats["hits"] += 1
+            self.stats["mem_hits"] += 1
+            return plan
+        if self.dir is not None:
+            path = self._path(key)
+            try:
+                with open(path) as f:
+                    raw = f.read()
+            except OSError:
+                raw = None  # not on disk (or unreadable): plain miss
+            if raw is not None:
+                try:
+                    plan = StencilPlan.from_dict(json.loads(raw))
+                    if plan.request.cache_key() != key:
+                        raise ValueError("cache key mismatch")
+                except Exception:
+                    # Corrupted entry: drop it and fall back to re-planning.
+                    self.stats["corrupt"] += 1
+                    try:
+                        os.remove(path)
+                    except OSError:
+                        pass
+                else:
+                    self._remember(key, plan)
+                    self.stats["hits"] += 1
+                    self.stats["disk_hits"] += 1
+                    return plan
+        self.stats["misses"] += 1
+        return None
+
+    def put(self, key: str, plan: StencilPlan) -> None:
+        self._remember(key, plan)
+        if self.dir is None:
+            return
+        try:
+            os.makedirs(self.dir, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(plan.to_dict(), f)
+                os.replace(tmp, self._path(key))  # atomic publish
+            except BaseException:
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
+                raise
+        except OSError:
+            self.stats["disk_errors"] += 1  # degrade to memory-only
+
+    def clear(self, disk: bool = False) -> None:
+        self._mem.clear()
+        if disk and self.dir is not None and os.path.isdir(self.dir):
+            for name in os.listdir(self.dir):
+                if name.endswith(".json"):
+                    try:
+                        os.remove(os.path.join(self.dir, name))
+                    except OSError:
+                        pass
+
+    def __len__(self) -> int:
+        return len(self._mem)

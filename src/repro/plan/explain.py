@@ -1,0 +1,202 @@
+"""Human-readable plan reports:  python -m repro.plan.explain 45x91x24
+
+Prints the full pipeline for one grid — interference-lattice basis, LLL
+reduction, shortest vector, why a pad was (not) chosen, the winning tile
+and its predicted traffic against both the legacy heuristic and the
+isoperimetric lower bound.  ``--smoke`` runs the CI gate: three shapes
+(one unfavorable), asserting the pad triggers and the planner never
+predicts more traffic than the legacy heuristic.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.core.cache_fitting import box_stencil, star_stencil
+
+from .cache import PlanCache
+from .planner import Planner
+from .schema import StencilPlan
+
+__all__ = ["format_plan", "main", "smoke"]
+
+
+def _parse_shape(s: str) -> tuple[int, ...]:
+    for sep in ("x", ","):
+        if sep in s:
+            return tuple(int(p) for p in s.split(sep) if p)
+    return (int(s),)
+
+
+def _parse_stencil(spec: str, d: int) -> np.ndarray:
+    kind, _, r = spec.partition(":")
+    r = int(r or 2)
+    if kind == "star":
+        return star_stencil(d, r)
+    if kind == "box":
+        return box_stencil(d, r)
+    raise SystemExit(f"unknown stencil spec {spec!r} (use star:R or box:R)")
+
+
+def _fmt_bytes(b: float) -> str:
+    if b >= 1 << 20:
+        return f"{b / (1 << 20):.2f} MiB"
+    if b >= 1 << 10:
+        return f"{b / (1 << 10):.2f} KiB"
+    return f"{b:.0f} B"
+
+
+def format_plan(plan: StencilPlan, validation: dict | None = None) -> str:
+    req = plan.request
+    lines = [
+        f"plan for grid {req.shape}  (dtype {req.dtype_bytes} B, "
+        f"{len(req.offsets)} RHS, budget {_fmt_bytes(req.vmem_budget)}, "
+        f"strategy {req.strategy})",
+    ]
+    lat = plan.lattice
+    if lat is not None:
+        lines += [
+            f"  cache model: S = {lat.S} words "
+            f"(geometry a,z,w = {req.geometry})",
+            "  interference lattice (Eq. 9 basis rows):",
+        ]
+        lines += [f"    {row}" for row in lat.basis]
+        lines.append("  LLL-reduced basis:")
+        lines += [f"    {row}" for row in lat.reduced]
+        lines += [
+            f"  shortest vector: {lat.shortest}  |v|_1 = {lat.shortest_l1:.0f}"
+            f"  |v|_2 = {lat.shortest_l2:.2f}  eccentricity {lat.eccentricity:.2f}",
+            f"  unfavorable: {lat.unfavorable}  "
+            f"(threshold |v|_1 < {lat.threshold:.3g}; Fig. 5 hyperbola "
+            f"k = {lat.hyperbola_k}, rel. dist {lat.hyperbola_dist:.3f})",
+        ]
+    else:
+        lines.append("  cache model: none (explicitly managed memory)")
+    lines += [
+        f"  pad: {plan.pad.pad} -> {plan.pad.padded_shape} "
+        f"(+{plan.pad.extra_words} words)",
+        f"    why: {plan.pad.reason}",
+        f"  tile: {plan.tile}  sweep axis {plan.sweep_axis}  "
+        f"grid {plan.grid}  pipelined {plan.pipelined}",
+        f"  vmem/operand window: {_fmt_bytes(plan.vmem_bytes)}  "
+        f"surface/volume {plan.surface_to_volume:.3f}",
+        f"  predicted traffic: {_fmt_bytes(plan.traffic_bytes)} "
+        f"({plan.traffic_bytes // max(req.dtype_bytes, 1)} loads)",
+        f"    vs legacy heuristic: {_fmt_bytes(plan.legacy_traffic_bytes)} "
+        f"(tile {plan.legacy_tile}) -> planned/legacy = "
+        f"{plan.traffic_vs_legacy:.3f}",
+        f"    vs isoperimetric lower bound: "
+        f"{_fmt_bytes(plan.lower_bound_bytes)} -> efficiency = "
+        f"{plan.efficiency:.3f}",
+    ]
+    if validation and validation.get("validated"):
+        o = validation["original"]
+        p = validation["padded"]
+        lines.append(
+            f"  cache-sim check: original {o['dims']} "
+            f"{o['miss_per_point']:.3f} miss/pt, padded {p['dims']} "
+            f"{p['miss_per_point']:.3f} miss/pt"
+            + (
+                f" ({validation['miss_reduction_x']:.2f}x fewer)"
+                if "miss_reduction_x" in validation
+                else ""
+            )
+        )
+    return "\n".join(lines)
+
+
+def smoke() -> int:
+    """CI gate: plan 3 shapes (one unfavorable), assert the pipeline's
+    promises — pad triggers and clears the threshold, planned traffic never
+    exceeds the legacy heuristic, warm cache hits are O(1)."""
+    import time
+
+    from repro.core.padding import is_unfavorable
+
+    planner = Planner(cache=PlanCache(persistent=False))
+    offs = star_stencil(3, 2)
+    geom = (2, 512, 4)
+    S = geom[0] * geom[1] * geom[2]
+    cases = [
+        ("favorable", (64, 91, 60), geom),
+        ("unfavorable", (45, 91, 24), geom),  # n1*n2 ~ 2*(S/2), Fig. 5
+        ("tpu", (256, 256, 256), None),
+    ]
+    for name, shape, g in cases:
+        plan = planner.plan(
+            shape=shape, offsets=offs, geometry=g,
+            vmem_budget=16 * 1024, aligned=False,
+        )
+        assert plan.traffic_bytes <= plan.legacy_traffic_bytes, (
+            name, plan.traffic_bytes, plan.legacy_traffic_bytes)
+        if name == "unfavorable":
+            assert plan.pad.nonzero, "pad did not trigger on unfavorable grid"
+            assert not is_unfavorable(plan.pad.padded_shape, S, diameter=5), (
+                "padded grid still unfavorable")
+        if name == "favorable":
+            assert not plan.pad.nonzero, "pad triggered on favorable grid"
+        t0 = time.perf_counter()
+        again = planner.plan(
+            shape=shape, offsets=offs, geometry=g,
+            vmem_budget=16 * 1024, aligned=False,
+        )
+        warm_ms = (time.perf_counter() - t0) * 1e3
+        assert again == plan
+        assert warm_ms < 1.0, f"warm cache hit took {warm_ms:.2f} ms"
+        print(
+            f"planner smoke [{name}] {shape}: pad={plan.pad.pad} "
+            f"planned/legacy={plan.traffic_vs_legacy:.3f} "
+            f"warm_hit={warm_ms:.3f} ms  OK"
+        )
+    print("planner smoke: all gates passed")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.plan.explain",
+        description="Explain the stencil plan for one grid.",
+    )
+    ap.add_argument("shape", nargs="?", default="45x91x24",
+                    help="grid shape, e.g. 45x91x24")
+    ap.add_argument("--stencil", default="star:2",
+                    help="star:R or box:R (default star:2)")
+    ap.add_argument("--geom", default="2,512,4",
+                    help="cache geometry a,z,w; 'none' for pure TPU mode")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="VMEM/cache budget in bytes (default: geometry size)")
+    ap.add_argument("--dtype-bytes", type=int, default=4)
+    ap.add_argument("--aligned", action="store_true",
+                    help="restrict tiles to lane/sublane-aligned extents")
+    ap.add_argument("--legacy", action="store_true",
+                    help="use the legacy _auto_tile strategy")
+    ap.add_argument("--validate", action="store_true",
+                    help="cache-simulate original vs padded grid")
+    ap.add_argument("--json", action="store_true", help="dump the plan JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the CI smoke gates instead")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke()
+
+    shape = _parse_shape(args.shape)
+    offs = _parse_stencil(args.stencil, len(shape))
+    geometry = None if args.geom.lower() == "none" else _parse_shape(args.geom)
+    planner = Planner(strategy="legacy" if args.legacy else "paper")
+    plan = planner.plan(
+        shape=shape, offsets=offs, dtype_bytes=args.dtype_bytes,
+        vmem_budget=args.budget, geometry=geometry, aligned=args.aligned,
+    )
+    if args.json:
+        print(plan.to_json())
+        return 0
+    validation = planner.validate(plan) if args.validate else None
+    print(format_plan(plan, validation))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,388 @@
+"""The stencil plan compiler — the paper's pipeline as one pass.
+
+``Planner.plan`` runs, in order:
+
+1. **Interference lattice** (§4, Eq. 8/9): build the Eq. 9 basis of the
+   grid's interference lattice for the target cache of S words, LLL-reduce
+   it, and find the shortest vector.
+2. **Unfavorable-grid detection** (§6): the grid is unfavorable when the
+   shortest L1 lattice vector is below the stencil diameter divided by the
+   associativity — the Fig. 5 miss spikes.
+3. **Padding proposal** (§6, Appendix B): minimal padding of the leading
+   dims that clears the threshold (``core.padding.pad_grid``), emitted as
+   a :class:`~repro.plan.schema.PadPlan`.
+4. **Tile enumeration + scoring**: the sweep engine's candidate tiles
+   (``core.tiling.candidate_tiles``) *plus* two lattice-informed boxes —
+   the bounding box of the reduced-basis parallelepiped (§4's fundamental
+   parallelepiped, axis-aligned because DMA engines move rectangles) and
+   the surface-to-volume-optimal box (T_i ∝ halo_i at fixed volume) — all
+   scored by the §4 traffic model under the per-operand VMEM budget.
+5. **Freeze**: the winning (pad, tile, sweep axis) plus predicted traffic,
+   VMEM footprint, the isoperimetric lower bound and the legacy-heuristic
+   baseline become a frozen, serializable
+   :class:`~repro.plan.schema.StencilPlan`.
+
+Steps 1–3 only run when the request carries a hardware ``geometry``
+(a, z, w); on an explicitly-managed memory (TPU VMEM) conflict misses do
+not exist and the pad stage is a documented no-op.
+
+``strategy="legacy"`` reproduces the old ``kernels.stencil._auto_tile``
+heuristic exactly (default candidate set only); ``strategy="paper"`` adds
+the lattice candidates and asserts it never predicts more traffic than
+legacy — the candidate set is a strict superset under the same model, so
+the assert is a model-consistency check, not a hope.
+"""
+
+from __future__ import annotations
+
+import time
+from math import prod
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.lattice import (
+    CacheGeometry,
+    basis_eccentricity,
+    interference_basis,
+    lll_reduce,
+    shortest_vector,
+)
+from repro.core.padding import hyperbola_index, pad_grid
+from repro.core.tiling import (
+    LANE,
+    SUBLANE,
+    TileChoice,
+    halo_from_offsets,
+    select_tile,
+    tile_vmem_bytes,
+)
+
+from .cache import PlanCache
+from .schema import LatticeReport, PadPlan, PlanRequest, StencilPlan
+
+__all__ = ["Planner", "default_planner", "plan_stencil"]
+
+
+def _align_extent(t: int, n: int, unit: int) -> int:
+    """Clamp a tile extent to [1, n], snapped down to ``unit`` multiples
+    (or up to min(unit, n) when below the grain)."""
+    t = max(1, min(int(t), int(n)))
+    if n < unit:
+        return n
+    if t < unit:
+        return min(unit, n)
+    return (t // unit) * unit
+
+
+def _fit_to_budget(tile, shape, halo, dtype_bytes, budget, aligned):
+    """Shrink a candidate box (halving its largest extent) until the halo'd
+    window fits the per-operand budget.  Returns None if even the unit tile
+    does not fit."""
+    tile = list(tile)
+    d = len(tile)
+    for _ in range(64):
+        if tile_vmem_bytes(tile, halo, dtype_bytes, None, False) <= budget:
+            return tuple(tile)
+        i = max(range(d), key=lambda j: tile[j])
+        if tile[i] <= 1:
+            return None
+        tile[i] = max(1, tile[i] // 2)
+        if aligned:
+            unit = LANE if i == d - 1 else SUBLANE if i == d - 2 else 1
+            tile[i] = _align_extent(tile[i], shape[i], unit)
+    return None
+
+
+class Planner:
+    """Compiles :class:`PlanRequest` → :class:`StencilPlan`, memoized by a
+    :class:`PlanCache` (content-addressed, persistent)."""
+
+    def __init__(
+        self,
+        strategy: str = "paper",
+        cache: PlanCache | None = None,
+    ):
+        assert strategy in ("paper", "legacy"), strategy
+        self.strategy = strategy
+        self.cache = cache if cache is not None else PlanCache()
+        self.last_plan_seconds: float | None = None  # cold-vs-warm telemetry
+
+    # -- cheap diagnostics (no tile search) --------------------------------
+
+    def lattice_report(
+        self, shape: Sequence[int], S: int, diameter: int, a: int = 1
+    ) -> LatticeReport:
+        """Steps 1–2 of the pipeline for one grid: basis → LLL → shortest
+        vector → §6 unfavorable criterion + Fig. 5 hyperbola fit."""
+        shape = tuple(int(n) for n in shape)
+        B = interference_basis(shape, S)
+        R = lll_reduce(B)
+        v = shortest_vector(R, norm="l1")
+        l1 = float(np.abs(v).sum())
+        l2 = float(np.sqrt((v.astype(np.float64) ** 2).sum()))
+        threshold = diameter / a
+        k, dist = (
+            hyperbola_index(shape, S) if len(shape) >= 2 else (0, float("inf"))
+        )
+        return LatticeReport(
+            S=int(S),
+            basis=tuple(tuple(int(x) for x in row) for row in B),
+            reduced=tuple(tuple(int(x) for x in row) for row in R),
+            shortest=tuple(int(x) for x in v),
+            shortest_l1=l1,
+            shortest_l2=l2,
+            eccentricity=float(basis_eccentricity(R)),
+            diameter=int(diameter),
+            threshold=float(threshold),
+            unfavorable=l1 < threshold,
+            hyperbola_k=int(k),
+            hyperbola_dist=float(dist),
+        )
+
+    def pad_plan(
+        self,
+        shape: Sequence[int],
+        S: int,
+        diameter: int,
+        a: int = 1,
+        max_pad: int = 16,
+        lattice: LatticeReport | None = None,
+    ) -> PadPlan:
+        """Step 3: minimal favorable padding, or an explained zero pad."""
+        shape = tuple(int(n) for n in shape)
+        rep = lattice or self.lattice_report(shape, S, diameter, a)
+        if not rep.unfavorable:
+            return PadPlan.zero(
+                shape,
+                shortest=rep.shortest_l1,
+                threshold=rep.threshold,
+                reason=(
+                    f"favorable: shortest lattice vector |v|_1="
+                    f"{rep.shortest_l1:.0f} >= {rep.threshold:.3g}"
+                ),
+            )
+        padded, info = pad_grid(shape, S, diameter, a=a, max_pad=max_pad)
+        return PadPlan(
+            pad=tuple(p - n for p, n in zip(padded, shape)),
+            padded_shape=tuple(int(n) for n in padded),
+            extra_words=int(info["extra_words"]),
+            shortest_before=float(info["shortest_before"]),
+            shortest_after=float(info["shortest_after"]),
+            threshold=float(info["threshold"]),
+            reason=(
+                f"unfavorable: shortest lattice vector {rep.shortest} "
+                f"(|v|_1={rep.shortest_l1:.0f}) < {rep.threshold:.3g}; "
+                f"near Fig. 5 hyperbola n1*n2 = k*S/2 with k={rep.hyperbola_k} "
+                f"(rel. dist {rep.hyperbola_dist:.3f})"
+            ),
+        )
+
+    # -- lattice-informed tile candidates ----------------------------------
+
+    def _extra_candidates(
+        self, shape, halo, request: PlanRequest, lattice: LatticeReport | None
+    ) -> list[tuple[int, ...]]:
+        d = len(shape)
+        budget = request.vmem_budget // max(request.n_operands, 1)
+        db = request.dtype_bytes
+        cands: list[tuple[int, ...]] = []
+
+        def add(tile):
+            if tile is None:
+                return
+            tile = tuple(
+                _align_extent(
+                    t, n, LANE if i == d - 1 else SUBLANE if i == d - 2 else 1
+                )
+                if request.aligned
+                else max(1, min(int(t), int(n)))
+                for i, (t, n) in enumerate(zip(tile, shape))
+            )
+            fit = _fit_to_budget(tile, shape, halo, db, budget, request.aligned)
+            if fit is not None and fit not in cands:
+                cands.append(fit)
+
+        # (a) Bounding box of the reduced-basis parallelepiped: the paper's
+        # §4 fundamental parallelepiped has det = S and near-cubic shape
+        # after LLL; DMA engines move rectangles, so we take its box hull.
+        if lattice is not None:
+            R = np.asarray(lattice.reduced, dtype=np.int64)
+            add(np.abs(R).max(axis=0))
+        # (b) s2v-optimal box: minimizing Σ_i h_i/T_i at fixed volume V
+        # gives T_i ∝ h_i (Lagrange); scale to the budgeted volume.
+        w = [max(lo + hi, 1) for lo, hi in halo]
+        vol = max(budget // db, 1)
+        scale = (vol / prod(w)) ** (1.0 / d)
+        add([max(1, round(wi * scale)) for wi in w])
+        # (c) the same box with the sweep dim collapsed thin (the scanning
+        # face): under sweep reuse the sweep extent stops paying surface.
+        for s in range(d):
+            thin = [max(1, round(wi * scale)) for wi in w]
+            thin[s] = 1
+            add(thin)
+        return cands
+
+    # -- the full pipeline -------------------------------------------------
+
+    def plan(self, request: PlanRequest | None = None, /, **kw) -> StencilPlan:
+        """Compile (or fetch from cache) the plan for one request.  Keyword
+        form builds the request via :meth:`PlanRequest.make`, with the
+        planner's strategy as default."""
+        if request is None:
+            kw.setdefault("strategy", self.strategy)
+            request = PlanRequest.make(**kw)
+        key = request.cache_key()
+        t0 = time.perf_counter()
+        cached = self.cache.get(key)
+        if cached is not None:
+            self.last_plan_seconds = time.perf_counter() - t0
+            return cached
+        plan = self._compile(request)
+        self.cache.put(key, plan)
+        self.last_plan_seconds = time.perf_counter() - t0
+        return plan
+
+    def _compile(self, request: PlanRequest) -> StencilPlan:
+        shape = request.shape
+        d = len(shape)
+        halo = halo_from_offsets(request.offsets, d)
+        diameter = max(lo + hi + 1 for lo, hi in halo)
+
+        lattice = None
+        if request.geometry is not None:
+            geom = CacheGeometry(*request.geometry)
+            S = geom.size_words
+            # a=1: the §6 criterion at direct-mapped worst case — the repo's
+            # convention everywhere (a 2-way cache can still thrash when the
+            # two images of the scanning face collide with u AND q).
+            lattice = self.lattice_report(shape, S, diameter, a=1)
+            pad = self.pad_plan(
+                shape, S, diameter, a=1, max_pad=request.max_pad,
+                lattice=lattice,
+            )
+        else:
+            pad = PadPlan.zero(
+                shape,
+                reason=(
+                    "explicit-memory target (no cache geometry): DMA'd VMEM "
+                    "windows have no conflict misses, padding not required"
+                ),
+            )
+        work = pad.padded_shape
+
+        legacy = select_tile(
+            work,
+            halo,
+            dtype_bytes=request.dtype_bytes,
+            vmem_budget=request.vmem_budget,
+            n_operands=request.n_operands,
+            sweep_axis="auto",
+            aligned=request.aligned,
+            prefetch=request.pipelined,
+        )
+        if request.strategy == "legacy":
+            choice = legacy
+        else:
+            extras = self._extra_candidates(work, halo, request, lattice)
+            choice = select_tile(
+                work,
+                halo,
+                dtype_bytes=request.dtype_bytes,
+                vmem_budget=request.vmem_budget,
+                n_operands=request.n_operands,
+                sweep_axis="auto",
+                aligned=request.aligned,
+                prefetch=request.pipelined,
+                extra_tiles=extras,
+            )
+            # Superset of candidates under the same model: can never lose.
+            assert choice.traffic_bytes <= legacy.traffic_bytes, (
+                f"planner regressed vs legacy heuristic: "
+                f"{choice.traffic_bytes} > {legacy.traffic_bytes} on {work}"
+            )
+
+        sweep = choice.sweep_axis
+        h_s = 0 if sweep is None else halo[sweep][0] + halo[sweep][1]
+        n_sweep = 1 if sweep is None else choice.grid[sweep]
+        return StencilPlan(
+            request=request,
+            lattice=lattice,
+            pad=pad,
+            tile=choice.tile,
+            sweep_axis=sweep,
+            grid=choice.grid,
+            pipelined=bool(
+                request.pipelined and sweep is not None
+                and h_s > 0 and n_sweep > 1
+            ),
+            traffic_bytes=int(choice.traffic_bytes),
+            vmem_bytes=int(choice.vmem_bytes),
+            surface_to_volume=float(choice.surface_to_volume),
+            lower_bound_bytes=float(choice.lower_bound_bytes),
+            efficiency=float(choice.efficiency),
+            legacy_tile=legacy.tile,
+            legacy_sweep_axis=legacy.sweep_axis,
+            legacy_traffic_bytes=int(legacy.traffic_bytes),
+        )
+
+    # -- optional exact validation ----------------------------------------
+
+    def validate(self, plan: StencilPlan, max_points: int = 400_000) -> dict:
+        """Cache-simulate the padded vs. original grid (natural order) on
+        the request's hardware geometry — the §2 exact model as a check on
+        the pad decision.  Only meaningful when the request has a geometry;
+        large grids are truncated to a thin slab along the last dim."""
+        if plan.request.geometry is None:
+            return {"validated": False, "reason": "no cache geometry"}
+        from repro.core.cache_fitting import access_stream, natural_order, star_stencil
+        from repro.core.cache_sim import simulate_misses
+
+        geom = CacheGeometry(*plan.request.geometry)
+        halo = halo_from_offsets(plan.request.offsets, len(plan.request.shape))
+        r = max(max(lo, hi) for lo, hi in halo)
+        r = max(r, 1)
+        K = star_stencil(len(plan.request.shape), r)
+
+        def slab(dims):
+            dims = tuple(dims)
+            while prod(dims) > max_points and dims[-1] > 4 * r + 4:
+                dims = dims[:-1] + (max(dims[-1] // 2, 4 * r + 4),)
+            return dims
+
+        out = {"validated": True, "geometry": plan.request.geometry}
+        for name, dims in (
+            ("original", plan.request.shape),
+            ("padded", plan.pad.padded_shape),
+        ):
+            dims = slab(dims)
+            pts = prod(max(n - 2 * r, 1) for n in dims)
+            order = natural_order(dims, r)
+            if len(order) == 0:
+                out[name] = {"dims": dims, "miss_per_point": float("nan")}
+                continue
+            m = simulate_misses(access_stream(dims, order, K), geom)
+            out[name] = {"dims": dims, "miss_per_point": m / pts}
+        if plan.pad.nonzero:
+            o = out["original"]["miss_per_point"]
+            p = out["padded"]["miss_per_point"]
+            out["miss_reduction_x"] = o / p if p else float("inf")
+        return out
+
+
+_DEFAULT: Planner | None = None
+
+
+def default_planner() -> Planner:
+    """Process-wide planner with the persistent default cache — what the
+    kernel layer consults when no explicit plan is passed."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Planner()
+    return _DEFAULT
+
+
+def plan_stencil(shape, offsets, **kw) -> StencilPlan:
+    """Convenience: plan one stencil with the default planner.  ``offsets``
+    may be a single (s, d) array or a per-RHS sequence."""
+    return default_planner().plan(shape=shape, offsets=offsets, **kw)

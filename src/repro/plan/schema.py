@@ -1,0 +1,302 @@
+"""Plan schema: frozen, JSON-serializable artifacts of the plan compiler.
+
+A :class:`StencilPlan` is the single source of truth for how one stencil
+computation is executed: how the grid is padded (paper §6), which tile the
+sweep engine uses, which axis it sweeps, and what HBM traffic the §4 model
+predicts for that choice.  Plans are pure data — tuples, ints, floats,
+strings — so they serialize to JSON losslessly and hash stably across
+process restarts (the :class:`~repro.plan.cache.PlanCache` key).
+
+Schema versioning: bump :data:`PLANNER_VERSION` whenever the planning
+pipeline changes in a way that should invalidate cached plans; the version
+participates in the cache key, so stale on-disk plans are simply never hit
+again.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "PLANNER_VERSION",
+    "PlanRequest",
+    "LatticeReport",
+    "PadPlan",
+    "StencilPlan",
+]
+
+PLANNER_VERSION = 1
+
+# Default VMEM budget mirrors core.tiling (import-free to keep this module
+# pure data): half of a v5e core's VMEM.
+_DEFAULT_VMEM_BUDGET = (128 * 1024 * 1024) // 2
+
+
+def _int_tuple(xs) -> tuple[int, ...]:
+    return tuple(int(x) for x in xs)
+
+
+def _offsets_tuple(offsets, d: int):
+    """Canonicalize per-RHS offset groups to nested int tuples."""
+    groups = []
+    for g in offsets:
+        arr = np.asarray(g, dtype=np.int64).reshape(-1, d)
+        groups.append(tuple(_int_tuple(row) for row in arr))
+    return tuple(groups)
+
+
+@dataclass(frozen=True)
+class PlanRequest:
+    """Canonical inputs of one planning problem (the cache key's preimage).
+
+    ``offsets`` is a tuple of per-RHS offset groups, matching
+    ``multi_stencil_pallas``'s ``offsets_list`` (a single-array stencil is a
+    1-tuple).  ``geometry`` is an ``(a, z, w)`` hardware-cache model for the
+    paper's CPU pipeline (unfavorable-grid detection + padding); ``None``
+    means an explicitly-managed memory (TPU VMEM), where conflict misses do
+    not exist and the pad stage is a no-op.
+    """
+
+    shape: tuple[int, ...]
+    offsets: tuple[tuple[tuple[int, ...], ...], ...]
+    dtype_bytes: int = 4
+    vmem_budget: int = _DEFAULT_VMEM_BUDGET
+    n_operands: int = 2
+    geometry: tuple[int, int, int] | None = None
+    aligned: bool = True
+    pipelined: bool = True
+    strategy: str = "paper"
+    max_pad: int = 16
+
+    @classmethod
+    def make(
+        cls,
+        shape: Sequence[int],
+        offsets,
+        dtype_bytes: int = 4,
+        vmem_budget: int | None = None,
+        n_operands: int | None = None,
+        geometry: Sequence[int] | None = None,
+        aligned: bool = True,
+        pipelined: bool = True,
+        strategy: str = "paper",
+        max_pad: int = 16,
+    ) -> "PlanRequest":
+        """Build a canonical request.  ``offsets`` may be a single (s, d)
+        offset array or a sequence of per-RHS arrays."""
+        shape = _int_tuple(shape)
+        d = len(shape)
+        try:
+            arr = np.asarray(offsets, dtype=np.int64)
+        except (ValueError, TypeError):
+            arr = None  # ragged: per-RHS groups of different sizes
+        if arr is not None and arr.ndim == 2:
+            groups = [arr]  # one RHS: a single (s, d) offset array
+        elif arr is not None and arr.ndim == 3:
+            groups = list(arr)  # p RHS groups of equal size
+        else:
+            groups = list(offsets)
+        offs = _offsets_tuple(groups, d)
+        if n_operands is None:
+            n_operands = len(offs) + 1  # p inputs + the output tile (§5)
+        if geometry is not None:
+            geometry = _int_tuple(geometry)
+            assert len(geometry) == 3, "geometry is (a, z, w)"
+        if vmem_budget is None:
+            if geometry is not None:
+                a, z, w = geometry
+                vmem_budget = a * z * w * int(dtype_bytes)  # S words
+            else:
+                vmem_budget = _DEFAULT_VMEM_BUDGET
+        return cls(
+            shape=shape,
+            offsets=offs,
+            dtype_bytes=int(dtype_bytes),
+            vmem_budget=int(vmem_budget),
+            n_operands=int(n_operands),
+            geometry=geometry,
+            aligned=bool(aligned),
+            pipelined=bool(pipelined),
+            strategy=str(strategy),
+            max_pad=int(max_pad),
+        )
+
+    def canonical(self) -> dict:
+        d = asdict(self)
+        d["version"] = PLANNER_VERSION
+        return d
+
+    def cache_key(self) -> str:
+        """Stable content hash of the request (+ planner version)."""
+        blob = json.dumps(self.canonical(), sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanRequest":
+        return cls(
+            shape=_int_tuple(d["shape"]),
+            offsets=tuple(
+                tuple(_int_tuple(o) for o in g) for g in d["offsets"]
+            ),
+            dtype_bytes=int(d["dtype_bytes"]),
+            vmem_budget=int(d["vmem_budget"]),
+            n_operands=int(d["n_operands"]),
+            geometry=_int_tuple(d["geometry"]) if d.get("geometry") else None,
+            aligned=bool(d["aligned"]),
+            pipelined=bool(d["pipelined"]),
+            strategy=str(d["strategy"]),
+            max_pad=int(d["max_pad"]),
+        )
+
+
+@dataclass(frozen=True)
+class LatticeReport:
+    """Diagnostics of the grid's interference lattice (paper §4/§6)."""
+
+    S: int                                   # cache size in words
+    basis: tuple[tuple[int, ...], ...]       # Eq. 9 basis, rows = vectors
+    reduced: tuple[tuple[int, ...], ...]     # LLL-reduced basis
+    shortest: tuple[int, ...]                # shortest vector (L1 norm)
+    shortest_l1: float
+    shortest_l2: float
+    eccentricity: float                      # Eq. 11 of the reduced basis
+    diameter: int                            # stencil diameter (2r+1 for star)
+    threshold: float                         # §6: diameter / associativity
+    unfavorable: bool                        # shortest_l1 < threshold
+    hyperbola_k: int                         # Fig. 5 fit n1·n2 ≈ k·S/2
+    hyperbola_dist: float                    # relative distance to that fit
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LatticeReport":
+        return cls(
+            S=int(d["S"]),
+            basis=tuple(_int_tuple(r) for r in d["basis"]),
+            reduced=tuple(_int_tuple(r) for r in d["reduced"]),
+            shortest=_int_tuple(d["shortest"]),
+            shortest_l1=float(d["shortest_l1"]),
+            shortest_l2=float(d["shortest_l2"]),
+            eccentricity=float(d["eccentricity"]),
+            diameter=int(d["diameter"]),
+            threshold=float(d["threshold"]),
+            unfavorable=bool(d["unfavorable"]),
+            hyperbola_k=int(d["hyperbola_k"]),
+            hyperbola_dist=float(d["hyperbola_dist"]),
+        )
+
+
+@dataclass(frozen=True)
+class PadPlan:
+    """Minimal padding that makes the grid favorable (paper §6, App. B)."""
+
+    pad: tuple[int, ...]                     # per-dim extra extent
+    padded_shape: tuple[int, ...]
+    extra_words: int
+    shortest_before: float
+    shortest_after: float
+    threshold: float
+    reason: str
+
+    @property
+    def nonzero(self) -> bool:
+        return any(self.pad)
+
+    @classmethod
+    def zero(cls, shape: Sequence[int], shortest: float = float("inf"),
+             threshold: float = 0.0, reason: str = "") -> "PadPlan":
+        shape = _int_tuple(shape)
+        return cls(
+            pad=(0,) * len(shape),
+            padded_shape=shape,
+            extra_words=0,
+            shortest_before=shortest,
+            shortest_after=shortest,
+            threshold=threshold,
+            reason=reason,
+        )
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PadPlan":
+        return cls(
+            pad=_int_tuple(d["pad"]),
+            padded_shape=_int_tuple(d["padded_shape"]),
+            extra_words=int(d["extra_words"]),
+            shortest_before=float(d["shortest_before"]),
+            shortest_after=float(d["shortest_after"]),
+            threshold=float(d["threshold"]),
+            reason=str(d["reason"]),
+        )
+
+
+@dataclass(frozen=True)
+class StencilPlan:
+    """The frozen output of the plan compiler — everything a consumer needs.
+
+    ``tile``/``sweep_axis``/``pipelined`` drive the sweep engine
+    (``kernels.stencil``); ``pad`` drives allocation on hardware-cache
+    targets; the traffic fields record the §4 model's prediction and its
+    position between the legacy heuristic and the isoperimetric lower
+    bound.
+    """
+
+    request: PlanRequest
+    lattice: LatticeReport | None
+    pad: PadPlan
+    tile: tuple[int, ...]
+    sweep_axis: int | None
+    grid: tuple[int, ...]
+    pipelined: bool
+    traffic_bytes: int
+    vmem_bytes: int
+    surface_to_volume: float
+    lower_bound_bytes: float
+    efficiency: float                        # lower_bound / traffic, ≤ 1
+    legacy_tile: tuple[int, ...]
+    legacy_sweep_axis: int | None
+    legacy_traffic_bytes: int
+    version: int = PLANNER_VERSION
+
+    @property
+    def traffic_vs_legacy(self) -> float:
+        """Planned / legacy modeled traffic — ≤ 1 by construction."""
+        return self.traffic_bytes / max(self.legacy_traffic_bytes, 1)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StencilPlan":
+        return cls(
+            request=PlanRequest.from_dict(d["request"]),
+            lattice=(
+                LatticeReport.from_dict(d["lattice"]) if d.get("lattice") else None
+            ),
+            pad=PadPlan.from_dict(d["pad"]),
+            tile=_int_tuple(d["tile"]),
+            sweep_axis=None if d["sweep_axis"] is None else int(d["sweep_axis"]),
+            grid=_int_tuple(d["grid"]),
+            pipelined=bool(d["pipelined"]),
+            traffic_bytes=int(d["traffic_bytes"]),
+            vmem_bytes=int(d["vmem_bytes"]),
+            surface_to_volume=float(d["surface_to_volume"]),
+            lower_bound_bytes=float(d["lower_bound_bytes"]),
+            efficiency=float(d["efficiency"]),
+            legacy_tile=_int_tuple(d["legacy_tile"]),
+            legacy_sweep_axis=(
+                None if d["legacy_sweep_axis"] is None
+                else int(d["legacy_sweep_axis"])
+            ),
+            legacy_traffic_bytes=int(d["legacy_traffic_bytes"]),
+            version=int(d.get("version", PLANNER_VERSION)),
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "StencilPlan":
+        return cls.from_dict(json.loads(s))

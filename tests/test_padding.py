@@ -1,7 +1,11 @@
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property test skips; the rest of the module runs
+    HAVE_HYPOTHESIS = False
 
 from repro.core.padding import (
     advise_dim, hyperbola_index, is_unfavorable, pad_grid, shortest_len,
@@ -24,11 +28,43 @@ def test_padding_fixes_unfavorable():
     assert padded[2] == 100  # last dim never padded (not in the lattice)
 
 
-@settings(deadline=None, max_examples=15)
-@given(st.tuples(st.integers(40, 99), st.integers(40, 99), st.integers(40, 60)))
-def test_padding_always_found(dims):
-    padded, info = pad_grid(dims, S, diameter=5, max_pad=16)
-    assert info["shortest_after"] >= 5
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=15)
+    @given(st.tuples(st.integers(40, 99), st.integers(40, 99),
+                     st.integers(40, 60)))
+    def test_padding_always_found(dims):
+        padded, info = pad_grid(dims, S, diameter=5, max_pad=16)
+        assert info["shortest_after"] >= 5
+
+
+def test_pad_grid_1d_is_noop():
+    # d=1: the only dim is the last dim, which never enters the strides.
+    padded, info = pad_grid((100,), S, diameter=5)
+    assert padded == (100,)
+    assert info["extra_words"] == 0
+    # ... even with a silly cap: the fast path never searches.
+    padded, info = pad_grid((37,), S, diameter=5, max_pad=10_000)
+    assert padded == (37,) and info["extra_words"] == 0
+
+
+def test_pad_grid_favorable_is_noop():
+    dims = (64, 91, 100)
+    assert not is_unfavorable(dims, S, diameter=5)
+    padded, info = pad_grid(dims, S, diameter=5)
+    assert padded == dims
+    assert info["extra_words"] == 0
+    assert info["shortest_after"] == info["shortest_before"]
+
+
+def test_pad_grid_bounded_search_errors_clearly():
+    # (45, 91, 100) is unfavorable and max_pad=0 forbids any remedy: the
+    # search must terminate with an explanatory error, not loop or return
+    # an unfavorable grid.
+    with pytest.raises(ValueError, match="max_pad"):
+        pad_grid((45, 91, 100), S, diameter=5, max_pad=0)
+    with pytest.raises(ValueError):
+        pad_grid((45, 91, 100), S, diameter=5, max_pad=-1)
 
 
 def test_hyperbola_index():

@@ -1,0 +1,131 @@
+"""Plan cache: hit/miss accounting, on-disk round trip, key stability
+across process restarts, corrupted-entry recovery, LRU eviction."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.cache_fitting import star_stencil
+from repro.plan import PlanCache, PlanRequest, Planner, StencilPlan
+
+
+def _request():
+    return PlanRequest.make(
+        shape=(45, 91, 24), offsets=star_stencil(3, 2), geometry=(2, 512, 4),
+        vmem_budget=16 * 1024, aligned=False,
+    )
+
+
+def test_hit_miss_accounting(tmp_path):
+    cache = PlanCache(cache_dir=str(tmp_path))
+    planner = Planner(cache=cache)
+    req = _request()
+    plan = planner.plan(req)
+    assert cache.stats["misses"] == 1
+    again = planner.plan(req)
+    assert again == plan
+    assert cache.stats["hits"] == 1 and cache.stats["mem_hits"] == 1
+
+
+def test_disk_roundtrip_equality(tmp_path):
+    cache = PlanCache(cache_dir=str(tmp_path))
+    plan = Planner(cache=cache).plan(_request())
+    key = _request().cache_key()
+    assert os.path.exists(os.path.join(str(tmp_path), f"{key}.json"))
+    # A brand-new cache (fresh process analogue) must round-trip the plan.
+    cold = PlanCache(cache_dir=str(tmp_path))
+    loaded = cold.get(key)
+    assert loaded == plan
+    assert cold.stats["disk_hits"] == 1
+    assert isinstance(loaded, StencilPlan)
+
+
+def test_cache_key_stable_across_processes():
+    """The key is a content hash of pure data — a restarted process must
+    derive the identical key (the on-disk cache's contract)."""
+    req = _request()
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    code = (
+        "from repro.plan import PlanRequest\n"
+        "from repro.core.cache_fitting import star_stencil\n"
+        "r = PlanRequest.make(shape=(45, 91, 24), offsets=star_stencil(3, 2),"
+        " geometry=(2, 512, 4), vmem_budget=16 * 1024, aligned=False)\n"
+        "print(r.cache_key())\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, check=True,
+    )
+    assert out.stdout.strip() == req.cache_key()
+
+
+def test_corrupted_cache_file_recovers(tmp_path):
+    cache = PlanCache(cache_dir=str(tmp_path))
+    plan = Planner(cache=cache).plan(_request())
+    key = _request().cache_key()
+    path = os.path.join(str(tmp_path), f"{key}.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    # A fresh cache hits the corrupted entry, counts it, and re-plans.
+    cold = PlanCache(cache_dir=str(tmp_path))
+    assert cold.get(key) is None
+    assert cold.stats["corrupt"] == 1
+    assert not os.path.exists(path)  # poisoned entry dropped
+    replanned = Planner(cache=cold).plan(_request())
+    assert replanned == plan
+    # ... and the re-plan healed the disk entry.
+    assert PlanCache(cache_dir=str(tmp_path)).get(key) == plan
+
+
+def test_wrong_key_content_rejected(tmp_path):
+    """An entry whose content hashes to a different key (tampered or stale
+    schema) is treated as corrupt, not served."""
+    cache = PlanCache(cache_dir=str(tmp_path))
+    plan = Planner(cache=cache).plan(_request())
+    other_key = "0" * 64
+    with open(os.path.join(str(tmp_path), f"{other_key}.json"), "w") as f:
+        json.dump(plan.to_dict(), f)
+    cold = PlanCache(cache_dir=str(tmp_path))
+    assert cold.get(other_key) is None
+    assert cold.stats["corrupt"] == 1
+
+
+def test_lru_eviction_falls_back_to_disk(tmp_path):
+    cache = PlanCache(cache_dir=str(tmp_path), capacity=2)
+    planner = Planner(cache=cache)
+    shapes = [(64, 64, 64), (64, 64, 65), (64, 64, 66)]
+    plans = [
+        planner.plan(shape=s, offsets=star_stencil(3, 2)) for s in shapes
+    ]
+    assert len(cache) == 2 and cache.stats["evictions"] == 1
+    # The evicted first plan is still served — from disk.
+    first = planner.plan(shape=shapes[0], offsets=star_stencil(3, 2))
+    assert first == plans[0]
+    assert cache.stats["disk_hits"] == 1
+
+
+def test_memory_only_cache(tmp_path):
+    cache = PlanCache(persistent=False)
+    assert cache.dir is None
+    planner = Planner(cache=cache)
+    plan = planner.plan(_request())
+    assert planner.plan(_request()) == plan
+    assert cache.stats["mem_hits"] == 1
+    assert not any(tmp_path.iterdir())
+
+
+def test_unwritable_dir_degrades(tmp_path):
+    blocked = tmp_path / "no" / "such" / "file.txt"
+    blocked.parent.mkdir(parents=True)
+    blocked.write_text("")
+    # cache dir path collides with a file -> every write fails, reads miss,
+    # but planning still works.
+    cache = PlanCache(cache_dir=str(blocked))
+    plan = Planner(cache=cache).plan(_request())
+    assert plan is not None
+    assert cache.stats["disk_errors"] >= 1
