@@ -112,12 +112,15 @@ def cache_latency() -> dict:
     }
 
 
-def build_report(quick: bool = True) -> dict:
+def build_report(quick: bool = True, pr1: dict | None = None) -> dict:
+    """``pr1``: a pre-built PR1 sweep-traffic report to embed — callers that
+    already ran it (benchmarks.run's full pass) skip the re-derivation."""
     planner = Planner(cache=PlanCache(persistent=False))
     rows = planned_vs_legacy(planner)
     pad = padding_record(planner)
     latency = cache_latency()
-    pr1 = sweep_traffic.build_report(quick)
+    if pr1 is None:
+        pr1 = sweep_traffic.build_report(quick)
     worst = max(r["planned_over_legacy"] for r in rows)
     ok1 = pr1["acceptance"]
     return {
@@ -143,8 +146,9 @@ def build_report(quick: bool = True) -> dict:
     }
 
 
-def main(quick: bool = True, json_path: str | None = None) -> dict:
-    report, us = timed(build_report, quick)
+def main(quick: bool = True, json_path: str | None = None,
+         pr1: dict | None = None) -> dict:
+    report, us = timed(build_report, quick, pr1)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(report, f, indent=2)

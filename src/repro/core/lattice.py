@@ -31,6 +31,7 @@ __all__ = [
     "interference_basis",
     "lattice_contains",
     "lll_reduce",
+    "is_lll_reduced",
     "shortest_vector",
     "basis_eccentricity",
     "InterferenceLattice",
@@ -145,6 +146,32 @@ def _nearest_int(x: Fraction) -> int:
     return int((x + Fraction(1, 2)).__floor__()) if x >= 0 else -int((-x + Fraction(1, 2)).__floor__())
 
 
+def is_lll_reduced(basis: np.ndarray, delta: Fraction = Fraction(3, 4)) -> bool:
+    """Check the LLL conditions (size reduction + Lovász) in one exact
+    Gram-Schmidt pass.
+
+    This is O(d^3) rational arithmetic — the cost of a *single* GS — versus
+    the full reduction loop, which recomputes GS after every size-reduction
+    and swap.  ``shortest_vector`` uses it to skip re-reducing an
+    already-reduced basis (every planner call site hands it one), so the
+    planner pays LLL once per lattice, not twice.
+    """
+    B = [[int(x) for x in row] for row in np.asarray(basis)]
+    n = len(B)
+    if n <= 1:
+        return True
+    mu, Bsq = _gram_schmidt(B)
+    half = Fraction(1, 2)
+    for i in range(n):
+        for j in range(i):
+            if abs(mu[i][j]) > half:
+                return False
+    for k in range(1, n):
+        if Bsq[k] < (delta - mu[k][k - 1] ** 2) * Bsq[k - 1]:
+            return False
+    return True
+
+
 def shortest_vector(
     basis: np.ndarray, norm: str = "l2", radius: int = 2
 ) -> np.ndarray:
@@ -153,8 +180,14 @@ def shortest_vector(
     For an LLL-reduced basis in d <= 4, coefficients of the shortest vector
     are bounded by a small constant; ``radius=2`` is exact for every case in
     the paper's experiments and we expose ``radius`` for paranoia.
+
+    An input that already satisfies the LLL conditions is used as-is
+    (checked with one Gram-Schmidt pass) — callers that reduced the basis
+    themselves don't pay the exact-rational reduction a second time.
     """
-    B = lll_reduce(basis)
+    B = np.asarray(basis, dtype=np.int64)
+    if not is_lll_reduced(B):
+        B = lll_reduce(B)
     d = B.shape[0]
     best = None
     best_len = None

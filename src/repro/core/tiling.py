@@ -29,6 +29,17 @@ box (DMA engines move rectangles; a skew parallelepiped is not DMA-able).
 The isoperimetric lower bound of §3 still applies and we report the
 achieved/optimal ratio.  The multi-operand budget split mirrors §5
 (p RHS arrays ⇒ S/p per array).
+
+**Temporal blocking** (``time_steps=T > 1``, DESIGN.md §8): one fused
+sweep applies the stencil T times before anything returns to HBM, so the
+paper's one-load-per-application charge drops to one load per *T*
+applications.  The price is a T-deep trapezoid: every halo grows to
+``T·(h_lo, h_hi)`` in the traffic model, and the VMEM footprint adds the
+T−1 staged intermediate windows (stage j keeps ``T_i + (T−j)(h_lo+h_hi)``
+per dim).  ``tile_traffic_bytes(..., time_steps=T)`` prices the whole
+fused pass — T applications in one HBM sweep — so comparing it against
+``T ×`` the single-pass figure is the fused-vs-unfused decision the plan
+compiler makes.
 """
 
 from __future__ import annotations
@@ -45,6 +56,8 @@ from .isoperimetric import lower_bound_loads
 __all__ = [
     "TileChoice",
     "candidate_tiles",
+    "fused_halo",
+    "fused_stage_bytes",
     "halo_from_offsets",
     "tile_traffic_bytes",
     "tile_vmem_bytes",
@@ -179,19 +192,32 @@ def surface_to_volume(
     return surf / vol
 
 
+def fused_halo(
+    halo: Sequence[tuple[int, int]], time_steps: int
+) -> list[tuple[int, int]]:
+    """Halo of the T-step fused trapezoid: each application consumes one
+    stencil halo, so the input window needs ``T·(h_lo, h_hi)`` per dim."""
+    return [(lo * time_steps, hi * time_steps) for lo, hi in halo]
+
+
 def tile_traffic_bytes(
     shape: Sequence[int],
     tile: Sequence[int],
     halo: Sequence[tuple[int, int]],
     dtype_bytes: int,
     sweep_axis: int | None = None,
+    time_steps: int = 1,
 ) -> int:
-    """Total HBM→VMEM bytes to sweep the array once with halo'd tiles.
+    """Total HBM→VMEM bytes of one pass of the engine: ``time_steps``
+    stencil applications fused into a single sweep of the array.
 
     ``sweep_axis=None`` charges the full halo on every tile (per-tile-halo
     model).  ``sweep_axis=s`` reuses the overlap between consecutive tiles
     along axis ``s`` so its halo is charged once per sweep column.
+    ``time_steps=T > 1`` grows every halo T× (the trapezoid's dependency
+    cone) but the returned bytes then pay for T applications, not one.
     """
+    halo = fused_halo(halo, time_steps)
     ntiles = [-(-n // t) for n, t in zip(shape, tile)]
     if sweep_axis is None:
         per_tile = prod(t + lo + hi for t, (lo, hi) in zip(tile, halo))
@@ -213,20 +239,47 @@ def tile_vmem_bytes(
     dtype_bytes: int,
     sweep_axis: int | None = None,
     prefetch: bool = True,
+    time_steps: int = 1,
 ) -> int:
     """Per-operand VMEM footprint: the halo'd window, plus — when sweeping
     with prefetch — two landing slabs for the double-buffered next-tile DMA.
+
+    With ``time_steps=T > 1`` the window (and slabs) carry the T×-grown
+    halo.  The T−1 staged trapezoid buffers are *not* included here: the
+    kernel allocates one shared set per launch, not one per operand, so
+    they are priced by :func:`fused_stage_bytes` and charged once against
+    the whole budget in :func:`select_tile` — folding them into the
+    per-operand figure would reserve them ``n_operands`` times.
     """
-    window = prod(t + lo + hi for t, (lo, hi) in zip(tile, halo))
+    full = fused_halo(halo, time_steps)
+    window = prod(t + lo + hi for t, (lo, hi) in zip(tile, full))
     slabs = 0
     if sweep_axis is not None and prefetch:
         cross = prod(
             t + lo + hi
-            for i, (t, (lo, hi)) in enumerate(zip(tile, halo))
+            for i, (t, (lo, hi)) in enumerate(zip(tile, full))
             if i != sweep_axis
         )
         slabs = 2 * tile[sweep_axis] * cross
     return (window + slabs) * dtype_bytes
+
+
+def fused_stage_bytes(
+    tile: Sequence[int],
+    halo: Sequence[tuple[int, int]],
+    dtype_bytes: int,
+    time_steps: int,
+) -> int:
+    """Bytes of the T−1 staged trapezoid intermediates, shared per launch:
+    stage j (1 ≤ j < T) holds ``T_i + (T−j)(h_lo_i + h_hi_i)`` per dim,
+    shrinking toward the bare tile as the trapezoid narrows."""
+    return dtype_bytes * sum(
+        prod(
+            t + (time_steps - j) * (lo + hi)
+            for t, (lo, hi) in zip(tile, halo)
+        )
+        for j in range(1, time_steps)
+    )
 
 
 def select_tile(
@@ -239,6 +292,7 @@ def select_tile(
     aligned: bool = True,
     prefetch: bool = True,
     extra_tiles: Sequence[Sequence[int]] | None = None,
+    time_steps: int = 1,
 ) -> TileChoice:
     """Pick the traffic-minimizing VMEM tile (paper §4 adapted, §5 for the
     per-operand budget split: budget/n_operands per array).
@@ -251,6 +305,11 @@ def select_tile(
     default enumeration under every sweep axis — the plan compiler feeds
     the reduced-basis box and the s2v-optimal box through this hook, so
     its result can only improve on the bare heuristic.
+
+    ``time_steps=T > 1`` scores one *fused* pass — T applications per HBM
+    sweep — with the T×-grown halos in the traffic model and the staged
+    intermediate windows charged against the budget.  The returned
+    ``traffic_bytes`` pays for all T applications of that launch.
     """
     shape = tuple(int(n) for n in shape)
     halo = [(int(lo), int(hi)) for lo, hi in halo]
@@ -271,7 +330,12 @@ def select_tile(
     # asymmetric halo like conv1d's (W-1, 0) has radius max(lo, hi), NOT
     # (lo+hi)//2 (integer floor under-estimates it).
     r = max(max(lo, hi) for lo, hi in halo)
+    # One isoperimetric bound per launch: a fused launch is still a single
+    # sweep of the grid (with a radius-T·r dependency cone), and the Eq. 7
+    # bound is monotone in the radius, so the single-sweep bound stays a
+    # valid — conservative — floor under the fused traffic model.
     lb = _traffic_lower_bound(shape, budget // dtype_bytes, dtype_bytes, r)
+    time_steps = max(int(time_steps), 1)
     best: TileChoice | None = None
     for axis in axes:
         cands = candidate_tiles(shape, max_elems, axis, aligned)
@@ -279,10 +343,21 @@ def select_tile(
             seen = set(cands)
             cands = cands + [t for t in extras if t not in seen]
         for tile in cands:
-            vmem = tile_vmem_bytes(tile, halo, dtype_bytes, axis, prefetch)
+            vmem = tile_vmem_bytes(
+                tile, halo, dtype_bytes, axis, prefetch, time_steps
+            )
             if vmem > budget:
                 continue
-            traffic = tile_traffic_bytes(shape, tile, halo, dtype_bytes, axis)
+            if time_steps > 1:
+                # The staged trapezoid buffers are one shared set per
+                # launch — charge them against the whole budget on top of
+                # the per-operand windows, not inside each operand's share.
+                stages = fused_stage_bytes(tile, halo, dtype_bytes, time_steps)
+                if vmem * max(n_operands, 1) + stages > vmem_budget:
+                    continue
+            traffic = tile_traffic_bytes(
+                shape, tile, halo, dtype_bytes, axis, time_steps
+            )
             if best is not None and traffic >= best.traffic_bytes:
                 continue
             eff = lb / traffic if traffic else 1.0

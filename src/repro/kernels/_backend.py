@@ -1,0 +1,51 @@
+"""Backend-safety helpers shared by the Pallas kernel frontends.
+
+The kernels in this package are written against ``pallas.tpu``: they
+compile through Mosaic on a TPU backend and run under the Pallas
+interpreter everywhere else.  The seed resolved ``interpret=None`` as
+``backend == "cpu"``, which left any *other* backend (gpu, rocm, plugin
+devices) with ``interpret=False`` and a crash deep inside Mosaic lowering.
+``resolve_interpret`` centralizes the decision: TPU compiles, everything
+else interprets, and unsupported backends warn once per process so the
+silent slow path is visible.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import jax
+
+__all__ = ["resolve_interpret"]
+
+# Backends the pltpu kernels handle natively: TPU compiles through Mosaic,
+# CPU is the documented interpret-mode CI path (no warning needed).
+_NATIVE = ("tpu", "cpu")
+
+_warned_backends: set[str] = set()
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve the ``interpret=None`` default against the active backend.
+
+    * explicit True/False is always honored (escape hatch);
+    * TPU -> compiled kernels (``False``);
+    * CPU -> interpreter (``True``), the CI path;
+    * anything else (gpu, plugin backends) -> interpreter with a one-time
+      ``RuntimeWarning`` instead of a Mosaic lowering crash.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return False
+    if backend not in _NATIVE and backend not in _warned_backends:
+        _warned_backends.add(backend)
+        warnings.warn(
+            f"repro.kernels: backend {backend!r} cannot compile Pallas TPU "
+            "kernels; falling back to interpret mode (correct but slow). "
+            "Pass interpret=False to force compilation anyway.",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+    return True

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._backend import resolve_interpret
+
 __all__ = ["causal_conv1d"]
 
 
@@ -199,8 +201,7 @@ def causal_conv1d(
     tail of the previous sequence used as the leading halo (serving path;
     not differentiated).  ``tile_s=None`` asks the plan compiler for the
     traffic-minimizing sweep tile."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret(interpret)
     if tile_s is None:
         tile_s = _planned_tile_s(
             int(x.shape[1]), int(x.shape[2]), int(conv_w.shape[0]),

@@ -22,7 +22,7 @@ from repro.core.tiling import (
 )
 
 from .ref import star_weights_2nd_order, stencil_ref
-from .stencil import multi_stencil_pallas, stencil_pallas
+from .stencil import multi_stencil_pallas, stencil_iterate, stencil_pallas
 
 __all__ = [
     "apply_stencil",
@@ -30,6 +30,7 @@ __all__ = [
     "apply_multi_rhs",
     "plan_tiles",
     "traffic_report",
+    "stencil_iterate",
     "stencil_ref",
     "star_weights_2nd_order",
 ]
@@ -99,11 +100,13 @@ def apply_stencil(
     interpret: bool | None = None,
     sweep_axis: int | None = None,
     pipelined: bool = True,
+    time_steps: int = 1,
 ) -> jnp.ndarray:
-    """q = K u with zero boundary fill; sweep-pipelined Pallas tiles."""
+    """q = K u with zero boundary fill; sweep-pipelined Pallas tiles.
+    ``time_steps=T > 1`` fuses T applications into the §8 trapezoid."""
     return stencil_pallas(
         u, offsets, weights, tile=tile, interpret=interpret,
-        sweep_axis=sweep_axis, pipelined=pipelined,
+        sweep_axis=sweep_axis, pipelined=pipelined, time_steps=time_steps,
     )
 
 

@@ -16,6 +16,17 @@ Grid iteration order = sweep order: the sweep axis is the minor-most
 consecutive grid steps; every other tile coordinate restarts the sweep
 (``k == 0`` reloads the whole window).
 
+**Temporal blocking** (DESIGN.md §8): ``time_steps=T > 1`` fuses T
+consecutive applications of the same stencil into one HBM pass.  The VMEM
+window carries the T×-grown halo (the T-step dependency cone), each sweep
+step still DMAs a single new slab, and the T−1 intermediate iterates are
+computed into staged scratch windows that narrow by one stencil halo per
+stage — the trapezoid.  Only the final stage is written back, so the
+paper's one-load-per-application charge drops to one load per T
+applications.  Intermediate stages are masked to the true grid domain
+(zero outside), which makes the fused result exactly equal to iterating
+the zero-fill reference T times.
+
 Boundary semantics match ``kernels.ref.stencil_ref``: zero fill, via a
 host-side ``jnp.pad`` that also rounds each extent up to the tile (grids
 not divisible by the tile take this round-up path).
@@ -34,10 +45,17 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.tiling import halo_from_offsets  # shared with the planner
 
+from ._backend import resolve_interpret
+
 if TYPE_CHECKING:
     from repro.plan import StencilPlan
 
-__all__ = ["stencil_pallas", "multi_stencil_pallas", "halo_from_offsets"]
+__all__ = [
+    "stencil_pallas",
+    "multi_stencil_pallas",
+    "stencil_iterate",
+    "halo_from_offsets",
+]
 
 
 def _round_up(n: int, t: int) -> int:
@@ -45,32 +63,47 @@ def _round_up(n: int, t: int) -> int:
 
 
 def _sweep_kernel(
-    offsets, weights, lo, hi, tile, sweep, nswp, pipelined, *refs
+    offsets, weights, lo, hi, tile, sweep, nswp, pipelined, time_steps,
+    n_true, *refs
 ):
-    """Generic d-dim, p-RHS sweep kernel.
+    """Generic d-dim, p-RHS sweep kernel, optionally T-step fused.
 
-    refs = (*x_hbm, out_ref, *windows, [*slabs,] win_sem, [slab_sem]).
-    Each x_hbm is the whole padded array (ANY memory space); windows are
-    VMEM refs of the halo'd tile; slabs are the 2-slot landing buffers for
-    the double-buffered next-slab prefetch.
+    refs = (*x_hbm, out_ref, *windows, [*slabs,] *stages, win_sem,
+    [slab_sem]).  Each x_hbm is the whole padded array (ANY memory space);
+    windows are VMEM refs of the halo'd tile (halo grown ×``time_steps``);
+    slabs are the 2-slot landing buffers for the double-buffered next-slab
+    prefetch; stages are the ``time_steps - 1`` narrowing trapezoid
+    buffers holding the intermediate iterates.
+
+    ``lo``/``hi`` are the *per-application* halos; the window and the slab
+    geometry use the T-scaled totals.  ``n_true`` is the unpadded grid
+    shape — intermediate stages are masked to it so the fused pass equals
+    T independent zero-fill applications.
     """
     d = len(tile)
     p = len(offsets)
+    T = time_steps
     cross_axes = [i for i in range(d) if i != sweep]
     x_hbm = refs[:p]
     out_ref = refs[p]
     windows = refs[p + 1 : 2 * p + 1]
+    pos = 2 * p + 1
     if pipelined:
-        slabs = refs[2 * p + 1 : 3 * p + 1]
-        win_sem, slab_sem = refs[3 * p + 1 :]
+        slabs = refs[pos : pos + p]
+        pos += p
     else:
         slabs = None
-        (win_sem,) = refs[2 * p + 1 :]
+    stages = refs[pos : pos + (T - 1)]
+    pos += T - 1
+    if pipelined:
+        win_sem, slab_sem = refs[pos:]
+    else:
+        (win_sem,) = refs[pos:]
 
     gids = [pl.program_id(j) for j in range(len(cross_axes))]
     k = pl.program_id(len(cross_axes))
     t_s = tile[sweep]
-    h_s = lo[sweep] + hi[sweep]
+    h_s = T * (lo[sweep] + hi[sweep])  # total sweep-axis window halo
     reuse = h_s > 0 and nswp > 1
 
     def src_index(kk, start, size):
@@ -78,7 +111,9 @@ def _sweep_kernel(
         and the full halo'd cross extents of the current tile."""
         idx = [None] * d
         for j, i in enumerate(cross_axes):
-            idx[i] = pl.ds(gids[j] * tile[i], tile[i] + lo[i] + hi[i])
+            idx[i] = pl.ds(
+                gids[j] * tile[i], tile[i] + T * (lo[i] + hi[i])
+            )
         idx[sweep] = pl.ds(kk * t_s + start, size)
         return tuple(idx)
 
@@ -153,51 +188,109 @@ def _sweep_kernel(
                 for cp in copies:
                     cp.wait()
 
-    acc = jnp.zeros(tuple(tile), dtype=jnp.float32)
-    for a in range(p):
-        x = windows[a][...].astype(jnp.float32)
-        for off, w in zip(offsets[a], weights[a]):
+    if T == 1:
+        acc = jnp.zeros(tuple(tile), dtype=jnp.float32)
+        for a in range(p):
+            x = windows[a][...].astype(jnp.float32)
+            for off, w in zip(offsets[a], weights[a]):
+                sl = tuple(
+                    slice(l + int(o), l + int(o) + t)
+                    for o, l, t in zip(off, lo, tile)
+                )
+                acc = acc + np.float32(w) * x[sl]
+        out_ref[...] = acc.astype(out_ref.dtype)
+        return
+
+    # -- T-step trapezoid (p == 1, enforced by the frontend) ---------------
+
+    def mask_domain(acc, stage, ext):
+        """Zero everything outside the true grid: the zero-fill boundary
+        of application ``stage``.  Stage ``stage``'s window starts at
+        global padded coordinate (tile origin + stage*lo_i) per axis; the
+        domain occupies [T*lo_i, T*lo_i + n_true_i)."""
+        inside = None
+        for i in range(d):
+            if lo[i] + hi[i] == 0:
+                # No mixing along this axis: pad/slack stays exactly zero
+                # through every stage, so no mask is needed.
+                continue
+            if i == sweep:
+                start = k * t_s + stage * lo[i]
+            else:
+                start = gids[cross_axes.index(i)] * tile[i] + stage * lo[i]
+            posn = start + jax.lax.broadcasted_iota(jnp.int32, ext, i)
+            ok = (posn >= T * lo[i]) & (posn < T * lo[i] + n_true[i])
+            inside = ok if inside is None else inside & ok
+        if inside is None:
+            return acc
+        return jnp.where(inside, acc, jnp.zeros_like(acc))
+
+    offs0, w0 = offsets[0], weights[0]
+    cur = windows[0][...]
+    for j in range(1, T + 1):
+        ext = tuple(
+            t + (T - j) * (l + h) for t, l, h in zip(tile, lo, hi)
+        )
+        src = cur.astype(jnp.float32)
+        acc = jnp.zeros(ext, dtype=jnp.float32)
+        for off, w in zip(offs0, w0):
             sl = tuple(
-                slice(l + int(o), l + int(o) + t)
-                for o, l, t in zip(off, lo, tile)
+                slice(l + int(o), l + int(o) + e)
+                for o, l, e in zip(off, lo, ext)
             )
-            acc = acc + np.float32(w) * x[sl]
-    out_ref[...] = acc.astype(out_ref.dtype)
+            acc = acc + np.float32(w) * src[sl]
+        if j < T:
+            acc = mask_domain(acc, j, ext)
+            # Round-trip through the staged scratch in the input dtype so
+            # the fused chain matches T separate kernel launches bit-wise
+            # (each launch writes its iterate in the array dtype).
+            stages[j - 1][...] = acc.astype(stages[j - 1].dtype)
+            cur = stages[j - 1][...]
+        else:
+            out_ref[...] = acc.astype(out_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("offsets_w", "tile", "sweep", "pipelined", "interpret"),
+    static_argnames=(
+        "offsets_w", "tile", "sweep", "pipelined", "interpret", "time_steps",
+    ),
 )
-def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret):
+def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
+                  time_steps=1):
     """us: tuple of p same-shape arrays.  offsets_w: tuple per array of
-    (offsets_tuple, weights_tuple) — hashable static spec."""
+    (offsets_tuple, weights_tuple) — hashable static spec.  ``time_steps``
+    is the fusion depth of this single launch (T applications, one HBM
+    pass)."""
     u0 = us[0]
     d = u0.ndim
+    T = int(time_steps)
     tile = tuple(int(t) for t in tile)
     offsets = [np.asarray(ow[0], dtype=np.int64).reshape(-1, d)
                for ow in offsets_w]
     weights = [list(ow[1]) for ow in offsets_w]
     halo = halo_from_offsets(offsets, d)
-    lo = tuple(h[0] for h in halo)
+    lo = tuple(h[0] for h in halo)      # per-application halo
     hi = tuple(h[1] for h in halo)
+    lo_w = tuple(T * l for l in lo)     # window halo: the T-step cone
+    hi_w = tuple(T * h for h in hi)
     padded_shape = tuple(_round_up(n, t) for n, t in zip(u0.shape, tile))
     ntiles = tuple(ps // t for ps, t in zip(padded_shape, tile))
     nswp = ntiles[sweep]
     cross_axes = [i for i in range(d) if i != sweep]
     grid = tuple(ntiles[i] for i in cross_axes) + (nswp,)
-    pipelined = bool(pipelined) and nswp > 1 and (lo[sweep] + hi[sweep]) > 0
+    pipelined = bool(pipelined) and nswp > 1 and (lo_w[sweep] + hi_w[sweep]) > 0
 
     ins = []
     for u in us:
         # zero-pad: lo halo on the low side, hi + round-up slack on the high.
         pads = [
             (l, h + ps - n)
-            for l, h, ps, n in zip(lo, hi, padded_shape, u.shape)
+            for l, h, ps, n in zip(lo_w, hi_w, padded_shape, u.shape)
         ]
         ins.append(jnp.pad(u, pads))
 
-    window_shape = tuple(t + l + h for t, l, h in zip(tile, lo, hi))
+    window_shape = tuple(t + l + h for t, l, h in zip(tile, lo_w, hi_w))
     slab_shape = tuple(
         tile[sweep] if i == sweep else window_shape[i] for i in range(d)
     )
@@ -205,6 +298,12 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret):
     scratch = [pltpu.VMEM(window_shape, u0.dtype) for _ in range(p)]
     if pipelined:
         scratch += [pltpu.VMEM((2,) + slab_shape, u0.dtype) for _ in range(p)]
+    # Staged trapezoid buffers: stage j keeps tile + (T-j)·halo per dim.
+    for j in range(1, T):
+        stage_shape = tuple(
+            t + (T - j) * (l + h) for t, l, h in zip(tile, lo, hi)
+        )
+        scratch.append(pltpu.VMEM(stage_shape, u0.dtype))
     scratch.append(pltpu.SemaphoreType.DMA((p,)))
     if pipelined:
         scratch.append(pltpu.SemaphoreType.DMA((p, 2)))
@@ -219,7 +318,7 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret):
     out = pl.pallas_call(
         functools.partial(
             _sweep_kernel, offsets, weights, lo, hi, tile, sweep, nswp,
-            pipelined,
+            pipelined, T, tuple(int(n) for n in u0.shape),
         ),
         grid=grid,
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY) for _ in us],
@@ -231,7 +330,8 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret):
     return out[tuple(slice(0, n) for n in u0.shape)]
 
 
-def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None):
+def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None,
+               time_steps=1):
     """Tile decision for an un-planned call: a thin wrapper over the plan
     compiler (``repro.plan``), whose persistent cache makes repeated shapes
     — the serving case — O(1).  The old ad-hoc heuristic survives as
@@ -245,6 +345,7 @@ def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None):
         dtype_bytes=dtype_bytes,
         vmem_budget=vmem_budget,
         n_operands=n_arrays + 1,  # p inputs + the output tile (§5 split)
+        time_steps=time_steps,
     )
 
 
@@ -258,16 +359,50 @@ def stencil_pallas(
     sweep_axis: int | None = None,
     pipelined: bool = True,
     plan: "StencilPlan | None" = None,
+    time_steps: int = 1,
 ) -> jnp.ndarray:
     """Single-array weighted stencil, zero boundary fill (matches ref).
 
     ``plan``: a precompiled ``repro.plan.StencilPlan`` — the single source
     of truth for tile/sweep/pipelining when given; otherwise the default
-    planner is consulted (and its cache makes repeats O(1))."""
+    planner is consulted (and its cache makes repeats O(1)).
+
+    ``time_steps=T > 1`` applies the stencil T times (a Jacobi/RK sub-step
+    chain) with temporal fusion: the planner picks the fusion depth, or an
+    explicit ``tile`` fuses all T steps into one launch."""
     return multi_stencil_pallas(
         [u], [offsets], [weights], tile=tile, interpret=interpret,
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
-        plan=plan,
+        plan=plan, time_steps=time_steps,
+    )
+
+
+def stencil_iterate(
+    u: jnp.ndarray,
+    offsets: np.ndarray,
+    weights: Sequence[float],
+    time_steps: int,
+    tile: Sequence[int] | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int | None = None,
+    sweep_axis: int | None = None,
+    pipelined: bool = True,
+    plan: "StencilPlan | None" = None,
+) -> jnp.ndarray:
+    """Apply the same stencil ``time_steps`` times — the iterative-solver
+    workload (Jacobi sweeps, RK sub-steps) — equal to iterating
+    ``kernels.ref.stencil_ref`` that many times.
+
+    The planner chooses how deeply to fuse (``plan.fused_depth``): each
+    fused launch advances up to that many applications in one HBM pass via
+    the §8 trapezoid window, and the chain runs
+    ``ceil(time_steps / fused_depth)`` launches.  A fused plan is only
+    ever chosen when its modeled traffic beats the planner's own
+    single-pass choice."""
+    return multi_stencil_pallas(
+        [u], [offsets], [weights], tile=tile, interpret=interpret,
+        vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
+        plan=plan, time_steps=time_steps,
     )
 
 
@@ -281,32 +416,61 @@ def multi_stencil_pallas(
     sweep_axis: int | None = None,
     pipelined: bool = True,
     plan: "StencilPlan | None" = None,
+    time_steps: int = 1,
 ) -> jnp.ndarray:
     """p-RHS stencil  q = Σ_p K_p u_p  (paper §5): one VMEM budget split
     across p operand windows plus the output tile, one shared sweep.
 
     Tile/sweep resolution order: explicit ``tile``/``sweep_axis`` args win,
-    then the ``plan``'s decision, then the default planner."""
+    then the ``plan``'s decision, then the default planner.  A ``plan`` is
+    validated against the call (shape, offsets, dtype, time_steps) and a
+    mismatch raises :class:`repro.plan.PlanMismatchError` — executing a
+    plan compiled for different inputs silently mis-tiles or
+    under-allocates the VMEM window.
+
+    ``time_steps=T > 1`` (single RHS only) runs the T-application chain
+    with temporal fusion (DESIGN.md §8)."""
     us = tuple(us)
     assert len({u.shape for u in us}) == 1, "RHS arrays must share a shape"
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    T = int(time_steps)
+    if T < 1:
+        raise ValueError(f"time_steps must be >= 1, got {T}")
+    if T > 1 and len(us) != 1:
+        raise ValueError(
+            "temporal fusion (time_steps > 1) requires a single RHS; "
+            f"got {len(us)} arrays"
+        )
+    interpret = resolve_interpret(interpret)
+    depth = None
     if plan is not None:
+        from repro.plan import validate_plan_call
+
+        validate_plan_call(
+            plan,
+            us[0].shape,
+            [np.asarray(o).reshape(-1, us[0].ndim) for o in offsets_list],
+            us[0].dtype.itemsize,
+            time_steps=T,
+        )
         if tile is None:
             tile = plan.tile
         if sweep_axis is None:
             sweep_axis = plan.sweep_axis
         pipelined = pipelined and plan.pipelined
+        depth = plan.fused_depth
     elif tile is None:
         choice = _auto_tile(
             us[0].shape, offsets_list, us[0].dtype.itemsize, len(us),
-            vmem_budget=vmem_budget,
+            vmem_budget=vmem_budget, time_steps=T,
         )
         tile = choice.tile
         if sweep_axis is None:
             sweep_axis = choice.sweep_axis
+        depth = choice.fused_depth
     if sweep_axis is None:
         sweep_axis = 0
+    if depth is None:
+        depth = T  # explicit tile: the caller owns the VMEM arithmetic
     offsets_w = tuple(
         (
             tuple(map(tuple, np.asarray(o).tolist())),
@@ -314,7 +478,17 @@ def multi_stencil_pallas(
         )
         for o, ws in zip(offsets_list, weights_list)
     )
-    return _stencil_call(
-        us, offsets_w, tuple(int(t) for t in tile), int(sweep_axis),
-        bool(pipelined), interpret,
-    )
+    tile = tuple(int(t) for t in tile)
+    sweep_axis = int(sweep_axis)
+    pipelined = bool(pipelined)
+    arrays = us
+    remaining = T
+    while True:
+        step = min(int(depth), remaining)
+        result = _stencil_call(
+            arrays, offsets_w, tile, sweep_axis, pipelined, interpret, step,
+        )
+        remaining -= step
+        if remaining == 0:
+            return result
+        arrays = (result,)

@@ -19,8 +19,10 @@ from .schema import (  # noqa: F401
     PLANNER_VERSION,
     LatticeReport,
     PadPlan,
+    PlanMismatchError,
     PlanRequest,
     StencilPlan,
+    validate_plan_call,
 )
 
 __all__ = [
@@ -28,10 +30,12 @@ __all__ = [
     "LatticeReport",
     "PadPlan",
     "PlanCache",
+    "PlanMismatchError",
     "PlanRequest",
     "Planner",
     "StencilPlan",
     "default_cache_dir",
     "default_planner",
     "plan_stencil",
+    "validate_plan_call",
 ]

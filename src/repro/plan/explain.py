@@ -2,10 +2,13 @@
 
 Prints the full pipeline for one grid — interference-lattice basis, LLL
 reduction, shortest vector, why a pad was (not) chosen, the winning tile
-and its predicted traffic against both the legacy heuristic and the
-isoperimetric lower bound.  ``--smoke`` runs the CI gate: three shapes
-(one unfavorable), asserting the pad triggers and the planner never
-predicts more traffic than the legacy heuristic.
+(with its §8 fusion depth under ``--time-steps``) and its predicted
+traffic against the legacy heuristic, the planner's own single-pass
+choice, and the isoperimetric lower bound.  ``--smoke`` runs the CI gate:
+four shapes (one unfavorable, one ``time_steps=3`` fused), asserting the
+pad triggers, the planner never predicts more traffic than the legacy
+heuristic, and a fused plan never predicts more traffic than its own
+single-pass choice.
 """
 
 from __future__ import annotations
@@ -81,6 +84,15 @@ def format_plan(plan: StencilPlan, validation: dict | None = None) -> str:
         f"    why: {plan.pad.reason}",
         f"  tile: {plan.tile}  sweep axis {plan.sweep_axis}  "
         f"grid {plan.grid}  pipelined {plan.pipelined}",
+    ]
+    if plan.time_steps > 1:
+        n_launch = -(-plan.time_steps // plan.fused_depth)
+        lines.append(
+            f"  temporal blocking: {plan.time_steps} applications, fused "
+            f"depth {plan.fused_depth} ({n_launch} launch(es); §8 trapezoid "
+            f"halo x{plan.fused_depth} per stage)"
+        )
+    lines += [
         f"  vmem/operand window: {_fmt_bytes(plan.vmem_bytes)}  "
         f"surface/volume {plan.surface_to_volume:.3f}",
         f"  predicted traffic: {_fmt_bytes(plan.traffic_bytes)} "
@@ -92,6 +104,12 @@ def format_plan(plan: StencilPlan, validation: dict | None = None) -> str:
         f"{_fmt_bytes(plan.lower_bound_bytes)} -> efficiency = "
         f"{plan.efficiency:.3f}",
     ]
+    if plan.time_steps > 1:
+        lines.append(
+            f"    vs own single-pass plan: "
+            f"{_fmt_bytes(plan.single_pass_traffic_bytes)} -> fused/single = "
+            f"{plan.traffic_vs_single_pass:.3f}"
+        )
     if validation and validation.get("validated"):
         o = validation["original"]
         p = validation["padded"]
@@ -109,9 +127,10 @@ def format_plan(plan: StencilPlan, validation: dict | None = None) -> str:
 
 
 def smoke() -> int:
-    """CI gate: plan 3 shapes (one unfavorable), assert the pipeline's
-    promises — pad triggers and clears the threshold, planned traffic never
-    exceeds the legacy heuristic, warm cache hits are O(1)."""
+    """CI gate: plan 4 shapes (one unfavorable, one T=3 fused), assert the
+    pipeline's promises — pad triggers and clears the threshold, planned
+    traffic never exceeds the legacy heuristic, a fused plan never exceeds
+    the planner's own single-pass choice, warm cache hits are O(1)."""
     import time
 
     from repro.core.padding import is_unfavorable
@@ -121,34 +140,46 @@ def smoke() -> int:
     geom = (2, 512, 4)
     S = geom[0] * geom[1] * geom[2]
     cases = [
-        ("favorable", (64, 91, 60), geom),
-        ("unfavorable", (45, 91, 24), geom),  # n1*n2 ~ 2*(S/2), Fig. 5
-        ("tpu", (256, 256, 256), None),
+        # (name, shape, geometry, vmem_budget, aligned, time_steps)
+        ("favorable", (64, 91, 60), geom, 16 * 1024, False, 1),
+        # n1*n2 ~ 2*(S/2), Fig. 5
+        ("unfavorable", (45, 91, 24), geom, 16 * 1024, False, 1),
+        ("tpu", (256, 256, 256), None, 16 * 1024, False, 1),
+        # §8 temporal blocking: at VMEM scale the T=3 trapezoid must fuse
+        # and cut modeled traffic vs the single-pass chain.
+        ("fused_t3", (256, 256, 256), None, 16 << 20, True, 3),
     ]
-    for name, shape, g in cases:
-        plan = planner.plan(
+    for name, shape, g, budget, aligned, t_steps in cases:
+        kw = dict(
             shape=shape, offsets=offs, geometry=g,
-            vmem_budget=16 * 1024, aligned=False,
+            vmem_budget=budget, aligned=aligned, time_steps=t_steps,
         )
+        plan = planner.plan(**kw)
         assert plan.traffic_bytes <= plan.legacy_traffic_bytes, (
             name, plan.traffic_bytes, plan.legacy_traffic_bytes)
+        assert plan.traffic_bytes <= plan.single_pass_traffic_bytes, (
+            name, plan.traffic_bytes, plan.single_pass_traffic_bytes)
         if name == "unfavorable":
             assert plan.pad.nonzero, "pad did not trigger on unfavorable grid"
             assert not is_unfavorable(plan.pad.padded_shape, S, diameter=5), (
                 "padded grid still unfavorable")
         if name == "favorable":
             assert not plan.pad.nonzero, "pad triggered on favorable grid"
+        if name == "fused_t3":
+            assert plan.fused_depth > 1, "T=3 plan did not fuse at VMEM scale"
+            reduction = plan.single_pass_traffic_bytes / plan.traffic_bytes
+            assert reduction >= 1.5, (
+                f"fused reduction {reduction:.2f}x < 1.5x")
         t0 = time.perf_counter()
-        again = planner.plan(
-            shape=shape, offsets=offs, geometry=g,
-            vmem_budget=16 * 1024, aligned=False,
-        )
+        again = planner.plan(**kw)
         warm_ms = (time.perf_counter() - t0) * 1e3
         assert again == plan
         assert warm_ms < 1.0, f"warm cache hit took {warm_ms:.2f} ms"
         print(
             f"planner smoke [{name}] {shape}: pad={plan.pad.pad} "
             f"planned/legacy={plan.traffic_vs_legacy:.3f} "
+            f"fused_depth={plan.fused_depth} "
+            f"fused/single={plan.traffic_vs_single_pass:.3f} "
             f"warm_hit={warm_ms:.3f} ms  OK"
         )
     print("planner smoke: all gates passed")
@@ -169,6 +200,8 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--budget", type=int, default=None,
                     help="VMEM/cache budget in bytes (default: geometry size)")
     ap.add_argument("--dtype-bytes", type=int, default=4)
+    ap.add_argument("--time-steps", type=int, default=1,
+                    help="fuse T stencil applications (§8 temporal blocking)")
     ap.add_argument("--aligned", action="store_true",
                     help="restrict tiles to lane/sublane-aligned extents")
     ap.add_argument("--legacy", action="store_true",
@@ -189,6 +222,7 @@ def main(argv: list[str] | None = None) -> int:
     plan = planner.plan(
         shape=shape, offsets=offs, dtype_bytes=args.dtype_bytes,
         vmem_budget=args.budget, geometry=geometry, aligned=args.aligned,
+        time_steps=args.time_steps,
     )
     if args.json:
         print(plan.to_json())

@@ -17,6 +17,11 @@
    parallelepiped, axis-aligned because DMA engines move rectangles) and
    the surface-to-volume-optimal box (T_i ∝ halo_i at fixed volume) — all
    scored by the §4 traffic model under the per-operand VMEM budget.
+   With ``time_steps=T > 1`` the scoring repeats at every fusion depth
+   1..T (halos and staged windows grown per DESIGN.md §8) and the depth
+   minimizing the whole chain's modeled traffic wins; depth 1 is always a
+   candidate, so a fused plan provably never scores worse than the
+   planner's own single-pass choice.
 5. **Freeze**: the winning (pad, tile, sweep axis) plus predicted traffic,
    VMEM footprint, the isoperimetric lower bound and the legacy-heuristic
    baseline become a frozen, serializable
@@ -55,6 +60,7 @@ from repro.core.tiling import (
     TileChoice,
     halo_from_offsets,
     select_tile,
+    tile_traffic_bytes,
     tile_vmem_bytes,
 )
 
@@ -270,22 +276,10 @@ class Planner:
                 ),
             )
         work = pad.padded_shape
+        T = request.time_steps
 
-        legacy = select_tile(
-            work,
-            halo,
-            dtype_bytes=request.dtype_bytes,
-            vmem_budget=request.vmem_budget,
-            n_operands=request.n_operands,
-            sweep_axis="auto",
-            aligned=request.aligned,
-            prefetch=request.pipelined,
-        )
-        if request.strategy == "legacy":
-            choice = legacy
-        else:
-            extras = self._extra_candidates(work, halo, request, lattice)
-            choice = select_tile(
+        def tiled(depth: int, extras=None) -> TileChoice:
+            return select_tile(
                 work,
                 halo,
                 dtype_bytes=request.dtype_bytes,
@@ -295,12 +289,59 @@ class Planner:
                 aligned=request.aligned,
                 prefetch=request.pipelined,
                 extra_tiles=extras,
+                time_steps=depth,
             )
+
+        legacy = tiled(1)  # the old heuristic: per-step, never fused
+        if request.strategy == "legacy":
+            per_depth = {1: legacy}
+        else:
+            extras = self._extra_candidates(work, halo, request, lattice)
+            per_depth = {}
+            for depth in range(1, T + 1):
+                try:
+                    per_depth[depth] = tiled(depth, extras)
+                except ValueError:
+                    # The depth-d trapezoid (window + staged intermediates)
+                    # outgrew the VMEM budget; deeper ones only grow.
+                    break
             # Superset of candidates under the same model: can never lose.
-            assert choice.traffic_bytes <= legacy.traffic_bytes, (
+            assert per_depth[1].traffic_bytes <= legacy.traffic_bytes, (
                 f"planner regressed vs legacy heuristic: "
-                f"{choice.traffic_bytes} > {legacy.traffic_bytes} on {work}"
+                f"{per_depth[1].traffic_bytes} > {legacy.traffic_bytes} "
+                f"on {work}"
             )
+
+        def chain_totals(depth: int) -> tuple[int, float]:
+            """Modeled (traffic, lower bound) of the whole T-step chain as
+            ceil(T/depth) fused launches.  The engine reuses the plan's one
+            tile for the remainder launch, so the remainder is priced with
+            *this depth's* tile at the remainder depth — not with the best
+            tile a standalone rem-deep plan would pick."""
+            n_full, rem = divmod(T, depth)
+            c = per_depth[depth]
+            traffic = n_full * c.traffic_bytes
+            lb = n_full * c.lower_bound_bytes
+            if rem:
+                traffic += tile_traffic_bytes(
+                    work, c.tile, halo, request.dtype_bytes, c.sweep_axis,
+                    rem,
+                )
+                lb += c.lower_bound_bytes  # per-launch bound: shape + budget
+            return traffic, lb
+
+        single_total = T * per_depth[1].traffic_bytes
+        # Shallower wins ties: same modeled traffic, less redundant
+        # trapezoid compute.
+        fused_depth = min(per_depth, key=lambda t: (chain_totals(t)[0], t))
+        traffic_total, lb_total = chain_totals(fused_depth)
+        # Depth 1 is always in the candidate set, so the fused choice can
+        # never score worse than the planner's own single-pass plan.
+        assert traffic_total <= single_total, (
+            f"fused plan regressed vs single-pass: {traffic_total} > "
+            f"{single_total} on {work} (T={T}, depth={fused_depth})"
+        )
+        choice = per_depth[fused_depth]
 
         sweep = choice.sweep_axis
         h_s = 0 if sweep is None else halo[sweep][0] + halo[sweep][1]
@@ -316,14 +357,17 @@ class Planner:
                 request.pipelined and sweep is not None
                 and h_s > 0 and n_sweep > 1
             ),
-            traffic_bytes=int(choice.traffic_bytes),
+            traffic_bytes=int(traffic_total),
             vmem_bytes=int(choice.vmem_bytes),
             surface_to_volume=float(choice.surface_to_volume),
-            lower_bound_bytes=float(choice.lower_bound_bytes),
-            efficiency=float(choice.efficiency),
+            lower_bound_bytes=float(lb_total),
+            efficiency=float(min(lb_total / max(traffic_total, 1), 1.0)),
             legacy_tile=legacy.tile,
             legacy_sweep_axis=legacy.sweep_axis,
-            legacy_traffic_bytes=int(legacy.traffic_bytes),
+            legacy_traffic_bytes=int(T * legacy.traffic_bytes),
+            time_steps=T,
+            fused_depth=int(fused_depth),
+            single_pass_traffic_bytes=int(single_total),
         )
 
     # -- optional exact validation ----------------------------------------

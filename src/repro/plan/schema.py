@@ -24,13 +24,19 @@ import numpy as np
 
 __all__ = [
     "PLANNER_VERSION",
+    "PlanMismatchError",
     "PlanRequest",
     "LatticeReport",
     "PadPlan",
     "StencilPlan",
+    "validate_plan_call",
 ]
 
-PLANNER_VERSION = 1
+# v2: temporal blocking — ``time_steps`` joined the request (and the plan
+# gained ``fused_depth``/``single_pass_traffic_bytes``), which changes the
+# canonical request JSON and therefore every cache key; the version bump
+# retires all v1 on-disk plans in one stroke.
+PLANNER_VERSION = 2
 
 # Default VMEM budget mirrors core.tiling (import-free to keep this module
 # pure data): half of a v5e core's VMEM.
@@ -59,7 +65,9 @@ class PlanRequest:
     1-tuple).  ``geometry`` is an ``(a, z, w)`` hardware-cache model for the
     paper's CPU pipeline (unfavorable-grid detection + padding); ``None``
     means an explicitly-managed memory (TPU VMEM), where conflict misses do
-    not exist and the pad stage is a no-op.
+    not exist and the pad stage is a no-op.  ``time_steps`` asks for T
+    consecutive applications of the stencil (a Jacobi/RK sub-step chain);
+    the planner decides how deeply to fuse them (DESIGN.md §8).
     """
 
     shape: tuple[int, ...]
@@ -72,6 +80,7 @@ class PlanRequest:
     pipelined: bool = True
     strategy: str = "paper"
     max_pad: int = 16
+    time_steps: int = 1
 
     @classmethod
     def make(
@@ -86,6 +95,7 @@ class PlanRequest:
         pipelined: bool = True,
         strategy: str = "paper",
         max_pad: int = 16,
+        time_steps: int = 1,
     ) -> "PlanRequest":
         """Build a canonical request.  ``offsets`` may be a single (s, d)
         offset array or a sequence of per-RHS arrays."""
@@ -113,6 +123,16 @@ class PlanRequest:
                 vmem_budget = a * z * w * int(dtype_bytes)  # S words
             else:
                 vmem_budget = _DEFAULT_VMEM_BUDGET
+        time_steps = int(time_steps)
+        if time_steps < 1:
+            raise ValueError(f"time_steps must be >= 1, got {time_steps}")
+        if time_steps > 1 and len(offs) != 1:
+            # q = Σ_p K_p u_p has no well-defined iterate: which operand
+            # would receive the intermediate result?
+            raise ValueError(
+                "temporal fusion (time_steps > 1) requires a single RHS; "
+                f"got {len(offs)} offset groups"
+            )
         return cls(
             shape=shape,
             offsets=offs,
@@ -124,6 +144,7 @@ class PlanRequest:
             pipelined=bool(pipelined),
             strategy=str(strategy),
             max_pad=int(max_pad),
+            time_steps=time_steps,
         )
 
     def canonical(self) -> dict:
@@ -151,6 +172,7 @@ class PlanRequest:
             pipelined=bool(d["pipelined"]),
             strategy=str(d["strategy"]),
             max_pad=int(d["max_pad"]),
+            time_steps=int(d.get("time_steps", 1)),
         )
 
 
@@ -241,6 +263,15 @@ class StencilPlan:
     targets; the traffic fields record the §4 model's prediction and its
     position between the legacy heuristic and the isoperimetric lower
     bound.
+
+    Temporal blocking (DESIGN.md §8): ``time_steps`` is the requested
+    number of applications, ``fused_depth`` how many of them one kernel
+    launch fuses (1 = plain single-pass; the engine runs
+    ``ceil(time_steps / fused_depth)`` launches).  ``traffic_bytes`` and
+    ``legacy_traffic_bytes`` always price the *whole* ``time_steps``-long
+    chain, and ``single_pass_traffic_bytes`` records what the planner's own
+    best depth-1 choice would have cost — the fused plan is only ever
+    emitted when it wins that comparison.
     """
 
     request: PlanRequest
@@ -258,12 +289,21 @@ class StencilPlan:
     legacy_tile: tuple[int, ...]
     legacy_sweep_axis: int | None
     legacy_traffic_bytes: int
+    time_steps: int = 1
+    fused_depth: int = 1
+    single_pass_traffic_bytes: int = 0       # 0 only in legacy v1 dicts
     version: int = PLANNER_VERSION
 
     @property
     def traffic_vs_legacy(self) -> float:
         """Planned / legacy modeled traffic — ≤ 1 by construction."""
         return self.traffic_bytes / max(self.legacy_traffic_bytes, 1)
+
+    @property
+    def traffic_vs_single_pass(self) -> float:
+        """Fused / own-single-pass modeled traffic — ≤ 1 by construction
+        (depth 1 is always in the planner's candidate set)."""
+        return self.traffic_bytes / max(self.single_pass_traffic_bytes, 1)
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -294,9 +334,65 @@ class StencilPlan:
                 else int(d["legacy_sweep_axis"])
             ),
             legacy_traffic_bytes=int(d["legacy_traffic_bytes"]),
+            time_steps=int(d.get("time_steps", 1)),
+            fused_depth=int(d.get("fused_depth", 1)),
+            single_pass_traffic_bytes=int(
+                d.get("single_pass_traffic_bytes", d["traffic_bytes"])
+            ),
             version=int(d.get("version", PLANNER_VERSION)),
         )
 
     @classmethod
     def from_json(cls, s: str) -> "StencilPlan":
         return cls.from_dict(json.loads(s))
+
+
+class PlanMismatchError(ValueError):
+    """A precompiled plan was applied to a call it was not compiled for.
+
+    Executing such a plan silently mis-tiles (wrong tile/sweep for the
+    actual shape) or under-allocates the VMEM window (halo computed from
+    different offsets), so the kernel frontends refuse it loudly instead.
+    """
+
+
+def validate_plan_call(
+    plan: StencilPlan,
+    shape: Sequence[int],
+    offsets,
+    dtype_bytes: int,
+    time_steps: int = 1,
+) -> None:
+    """Raise :class:`PlanMismatchError` unless ``plan`` was compiled for
+    exactly this call: same grid shape, same canonicalized offset groups,
+    same element width, same requested step count.
+
+    Budget/strategy knobs are deliberately *not* checked — a plan compiled
+    under a custom VMEM budget is still a valid (if different) answer for
+    the same computation; shape/offsets/dtype/time_steps are what change
+    the computation itself.
+    """
+    req = plan.request
+    shape = _int_tuple(shape)
+    offs = _offsets_tuple(offsets, len(shape))
+    mismatches = []
+    if req.shape != shape:
+        mismatches.append(f"shape: plan {req.shape} vs call {shape}")
+    if req.offsets != offs:
+        mismatches.append(
+            f"offsets: plan has {len(req.offsets)} group(s) "
+            f"{req.offsets} vs call {offs}"
+        )
+    if req.dtype_bytes != int(dtype_bytes):
+        mismatches.append(
+            f"dtype_bytes: plan {req.dtype_bytes} vs call {int(dtype_bytes)}"
+        )
+    if req.time_steps != int(time_steps):
+        mismatches.append(
+            f"time_steps: plan {req.time_steps} vs call {int(time_steps)}"
+        )
+    if mismatches:
+        raise PlanMismatchError(
+            "StencilPlan does not match this call (plan request key "
+            f"{req.cache_key()[:16]}…): " + "; ".join(mismatches)
+        )

@@ -1,0 +1,80 @@
+"""Planner-latency regression: the double-LLL bug (no hypothesis needed).
+
+`InterferenceLattice.shortest()` used to hand the already-reduced basis to
+`shortest_vector`, which unconditionally re-ran exact-rational LLL — every
+planner cache miss paid the reduction twice.  `is_lll_reduced` (one exact
+Gram-Schmidt pass) now lets `shortest_vector` skip re-reduction.
+"""
+
+import numpy as np
+
+from repro.core.lattice import (
+    InterferenceLattice,
+    interference_basis,
+    is_lll_reduced,
+    lll_reduce,
+    shortest_vector,
+)
+
+
+def test_is_lll_reduced_detects_both():
+    B = interference_basis((45, 91, 100), 4096)
+    R = lll_reduce(B)
+    assert is_lll_reduced(R)
+    assert not is_lll_reduced(B)  # Eq. 9 basis has a huge first vector
+
+
+def test_is_lll_reduced_trivial_cases():
+    assert is_lll_reduced(np.array([[7]]))
+    assert is_lll_reduced(np.eye(3, dtype=np.int64))
+
+
+def test_shortest_skips_rereduction(monkeypatch):
+    import repro.core.lattice as L
+
+    lat = InterferenceLattice((45, 91, 24), 4096)
+    calls = {"n": 0}
+    orig = L.lll_reduce
+
+    def counting(basis, *a, **kw):
+        calls["n"] += 1
+        return orig(basis, *a, **kw)
+
+    monkeypatch.setattr(L, "lll_reduce", counting)
+    sv = lat.shortest(norm="l1")
+    assert calls["n"] == 0, "shortest() re-ran LLL on a reduced basis"
+    assert lat.contains(sv)
+    # an unreduced basis still gets reduced, exactly once
+    sv2 = shortest_vector(lat.basis, norm="l1")
+    assert calls["n"] == 1
+    assert np.abs(sv2).sum() == np.abs(sv).sum()
+
+
+def test_shortest_same_result_reduced_or_not():
+    """The skip is an optimization, never a semantic change."""
+    for dims in [(45, 91, 100), (90, 91, 100), (64, 91, 60)]:
+        lat = InterferenceLattice(dims, 4096)
+        a = shortest_vector(lat.basis, norm="l1")
+        b = shortest_vector(lat.reduced, norm="l1")
+        assert np.abs(a).sum() == np.abs(b).sum()
+
+
+def test_planner_lattice_report_single_lll(monkeypatch):
+    """End-to-end planner latency guard: one lattice_report = one LLL."""
+    import repro.core.lattice as L
+    import repro.plan.planner as P
+    from repro.plan.planner import Planner
+
+    calls = {"n": 0}
+    orig = L.lll_reduce
+
+    def counting(basis, *a, **kw):
+        calls["n"] += 1
+        return orig(basis, *a, **kw)
+
+    monkeypatch.setattr(L, "lll_reduce", counting)
+    # planner.py binds lll_reduce at import time; patch its reference too
+    monkeypatch.setattr(P, "lll_reduce", counting)
+    rep = Planner().lattice_report((45, 91, 24), 4096, diameter=5)
+    assert calls["n"] == 1, f"lattice_report ran LLL {calls['n']} times"
+    assert rep.unfavorable
