@@ -27,7 +27,7 @@ from repro.core.cache_fitting import star_stencil
 from repro.core.padding import is_unfavorable
 from repro.plan import PlanCache, Planner
 
-from .common import emit, timed
+from .common import emit_bench, timed
 from . import sweep_traffic
 
 RADIUS = 2
@@ -149,16 +149,19 @@ def build_report(quick: bool = True, pr1: dict | None = None) -> dict:
 def main(quick: bool = True, json_path: str | None = None,
          pr1: dict | None = None) -> dict:
     report, us = timed(build_report, quick, pr1)
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
-            f.write("\n")
     ok = report["acceptance"]
-    emit(
+    emit_bench(
         "planner_traffic",
-        us,
-        f"worst_planned_over_legacy={ok['worst_planned_over_legacy']:.3f} "
-        f"pad_ok={ok['pad_ok']} warm_hit_ms={ok['warm_hit_ms']:.3f}",
+        {
+            "worst_planned_over_legacy": ok["worst_planned_over_legacy"],
+            "planned_le_legacy_ok": ok["planned_le_legacy_ok"],
+            "pad_ok": ok["pad_ok"],
+            "warm_hit_ms": ok["warm_hit_ms"],
+            "warm_hit_ok": ok["warm_hit_ok"],
+        },
+        report,
+        json_path=json_path,
+        us=us,
     )
     return report
 

@@ -2,9 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV per benchmark (spec format).
 ``--full`` runs paper-scale sweeps; default is the quick CI-sized pass.
-``--json [PATH]`` runs only the PR-tracked temporal-fusion record (which
-embeds the PR2 plan-compiler record, which embeds PR1's sweep-traffic
-record) and writes it to PATH (default: ``BENCH_PR3.json`` at the repo
+``--json [PATH]`` runs only the PR-tracked stage-chain record (which
+embeds the PR3 temporal-fusion record, which embeds PR2's, which embeds
+PR1's) and writes it to PATH (default: ``BENCH_PR4.json`` at the repo
 root) — the perf trajectory artifact scripts/ci.sh checks on every PR.
 """
 from __future__ import annotations
@@ -17,7 +17,8 @@ def main() -> None:
     argv = sys.argv[1:]
     quick = "--full" not in argv
     if "--json" in argv:
-        from . import temporal_fusion
+        from . import stage_chain
+        from .common import gates_ok
 
         i = argv.index("--json")
         if i + 1 < len(argv) and not argv[i + 1].startswith("--"):
@@ -25,45 +26,39 @@ def main() -> None:
         else:
             path = os.path.join(
                 os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                "BENCH_PR3.json",
+                "BENCH_PR4.json",
             )
-        report = temporal_fusion.main(quick, json_path=path)
+        report = stage_chain.main(quick, json_path=path)
         ok = report["acceptance"]
         print(
-            f"wrote {path}: fused reduction x{ok['achieved_reduction_vmem']:.2f} "
-            f"(ok={ok['fused_traffic_ok']}) "
-            f"fused<=single ok={ok['fused_le_single_ok']} "
-            f"cache_declines={ok['cache_regime_declines']} "
-            f"parity_err={ok['parity_max_abs_err']:.1e} (ok={ok['parity_ok']}) "
-            f"pr2[planned<=legacy={ok['pr2_planned_le_legacy_ok']} "
-            f"pad={ok['pr2_pad_ok']} warm={ok['pr2_warm_hit_ok']}] "
-            f"pr1[traffic={ok['pr1_traffic_ok']} speed={ok['pr1_speed_ok']}]"
+            f"wrote {path}: streaming flop cut "
+            f"x{ok['achieved_flop_reduction_vmem']:.2f} "
+            f"(ok={ok['flop_reduction_ok']}) "
+            f"bitwise={ok['bitwise_vs_engine_iter']} "
+            f"pr3[traffic_ok={ok['pr3_fused_traffic_ok']} "
+            f"le_single={ok['pr3_fused_le_single_ok']}] "
+            f"pr2[planned<=legacy={ok['pr2_planned_le_legacy_ok']}] "
+            f"pr1[traffic={ok['pr1_traffic_ok']}]"
         )
-        gates = (
-            ok["fused_traffic_ok"] and ok["fused_le_single_ok"]
-            and ok["cache_regime_declines"] and ok["parity_ok"]
-            and ok["pr2_planned_le_legacy_ok"] and ok["pr2_pad_ok"]
-            and ok["pr2_warm_hit_ok"] and ok["pr1_traffic_ok"]
-            and ok["pr1_speed_ok"]
-        )
-        if not gates:
+        if not gates_ok(ok):
             sys.exit(1)  # the perf gate IS the CI signal — fail loudly
         return
     from . import (
         bounds_table, fig4_miss_reduction, fig5_unfavorable,
-        padding_effect, planner_traffic, roofline_report, sweep_traffic,
-        temporal_fusion, tpu_tiling,
+        padding_effect, planner_traffic, roofline_report, stage_chain,
+        sweep_traffic, temporal_fusion, tpu_tiling,
     )
     fig4_miss_reduction.main(quick)
     fig5_unfavorable.main(quick)
     bounds_table.main(quick)
     padding_effect.main(quick)
     tpu_tiling.main(quick)
-    # The PR records nest (PR3 ⊃ PR2 ⊃ PR1); build each once and pass the
-    # embedded reports down instead of re-deriving them per level.
+    # The PR records nest (PR4 ⊃ PR3 ⊃ PR2 ⊃ PR1); build each once and
+    # pass the embedded reports down instead of re-deriving them per level.
     pr1 = sweep_traffic.main(quick)
     pr2 = planner_traffic.main(quick, pr1=pr1)
-    temporal_fusion.main(quick, pr2=pr2)
+    pr3 = temporal_fusion.main(quick, pr2=pr2)
+    stage_chain.main(quick, pr3=pr3)
     roofline_report.main(quick)
 
 

@@ -27,7 +27,7 @@ import numpy as np
 from repro.kernels.ops import apply_star_2nd_order, traffic_report
 from repro.kernels.ref import star_weights_2nd_order, stencil_ref
 
-from .common import emit, timed
+from .common import emit_bench, timed
 
 GRID = (256, 256, 256)
 RADIUS = 2
@@ -117,16 +117,19 @@ def build_report(quick: bool = True) -> dict:
 
 def main(quick: bool = True, json_path: str | None = None) -> dict:
     report = build_report(quick)
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
-            f.write("\n")
     m = report["measured"]
-    emit(
+    ok = report["acceptance"]
+    emit_bench(
         "sweep_traffic",
-        m["pallas_us"],
-        f"traffic_ratio_cache_regime_x={report['traffic_ratio_cache_regime']:.2f} "
-        f"parity_err={m['parity_max_abs_err']:.1e}",
+        {
+            "traffic_ratio_cache_regime_x": report["traffic_ratio_cache_regime"],
+            "traffic_ok": ok["traffic_ok"],
+            "speed_ok": ok["speed_ok"],
+            "parity_err": m["parity_max_abs_err"],
+        },
+        report,
+        json_path=json_path,
+        us=m["pallas_us"],
     )
     return report
 

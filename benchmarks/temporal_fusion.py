@@ -36,7 +36,7 @@ from repro.kernels.ref import star_weights_2nd_order
 from repro.kernels.stencil import stencil_iterate
 from repro.plan import PlanCache, Planner
 
-from .common import emit, timed
+from .common import emit_bench, timed
 from . import planner_traffic
 
 RADIUS = 2
@@ -184,17 +184,20 @@ def build_report(quick: bool = True, pr2: dict | None = None) -> dict:
 def main(quick: bool = True, json_path: str | None = None,
          pr2: dict | None = None) -> dict:
     report, us = timed(build_report, quick, pr2)
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
-            f.write("\n")
     ok = report["acceptance"]
-    emit(
+    emit_bench(
         "temporal_fusion",
-        us,
-        f"reduction_vmem_x={ok['achieved_reduction_vmem']:.2f} "
-        f"fused_le_single={ok['fused_le_single_ok']} "
-        f"parity_err={ok['parity_max_abs_err']:.1e}",
+        {
+            "reduction_vmem_x": ok["achieved_reduction_vmem"],
+            "fused_traffic_ok": ok["fused_traffic_ok"],
+            "fused_le_single_ok": ok["fused_le_single_ok"],
+            "cache_regime_declines": ok["cache_regime_declines"],
+            "parity_err": ok["parity_max_abs_err"],
+            "parity_ok": ok["parity_ok"],
+        },
+        report,
+        json_path=json_path,
+        us=us,
     )
     return report
 

@@ -2,14 +2,16 @@
 # Tier-1 CI: the full test suite, the planner smoke, and the PR-tracked
 # perf record.
 #
-#   scripts/ci.sh            # tests + planner smoke + BENCH_PR3.json
+#   scripts/ci.sh            # tests + planner smoke + BENCH_PR4.json
 #
-# The planner smoke plans 4 shapes (one Fig. 5 unfavorable grid, one
-# time_steps=3 fused plan) and asserts the pad triggers and the
-# planned-traffic + fused<=single-pass gates hold.  The JSON pass
-# re-derives the modeled-traffic numbers checked in at BENCH_PR3.json
-# (fused >= 1.5x cut at VMEM scale, PR2/PR1 gates embedded); a drift
-# there is a perf regression, not flake.
+# The planner smoke plans 5 shapes (one Fig. 5 unfavorable grid, one
+# time_steps=3 fused plan, one two-stage heterogeneous chain) and asserts
+# the pad triggers and the planned-traffic + fused<=single-pass +
+# streaming<=recompute-flops gates hold.  The JSON pass re-derives the
+# modeled numbers checked in at BENCH_PR4.json (streaming >= 1.5x flop
+# cut at T=3 256^3 at unchanged traffic, fused-chain bitwise parity,
+# PR3/PR2/PR1 gates embedded); a drift there is a perf regression, not
+# flake.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

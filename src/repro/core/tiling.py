@@ -40,6 +40,24 @@ per dim).  ``tile_traffic_bytes(..., time_steps=T)`` prices the whole
 fused pass — T applications in one HBM sweep — so comparing it against
 ``T ×`` the single-pass figure is the fused-vs-unfused decision the plan
 compiler makes.
+
+**Stage chains** (DESIGN.md §9): the fused pass may apply a *different*
+operator at each of the T stages (Runge-Kutta sub-steps, damped-Jacobi
+smoother pairs).  Every model function accepts ``stage_halos`` — an
+ordered list of per-stage per-dim ``(lo, hi)`` halos — in place of the
+homogeneous ``halo × time_steps`` scaling: the window halo becomes the
+*sum* of the per-stage halos (the chain's dependency cone), and stage j's
+staged buffer keeps the suffix sum of the later stages' halos.  For a
+homogeneous chain the two spellings agree exactly.
+
+**Compute model** (:func:`chain_flops`): the §8 trapezoid *recomputes*
+every intermediate stage inside each window's overlap — the
+``∏(1 + Σ_{m>j} h_m_i / T_i)`` per-stage overhead.  The §9 streaming
+kernel persists per-stage frontiers across sweep steps, so after the
+per-column warm-up each stage computes only its ``T_s`` newly-uncovered
+rows.  ``chain_flops(..., streaming=True/False)`` models both, letting
+the plan compiler surface the flops the streaming path gives back at
+unchanged traffic.
 """
 
 from __future__ import annotations
@@ -56,9 +74,12 @@ from .isoperimetric import lower_bound_loads
 __all__ = [
     "TileChoice",
     "candidate_tiles",
+    "chain_flops",
+    "chain_halo",
     "fused_halo",
     "fused_stage_bytes",
     "halo_from_offsets",
+    "stage_suffix_halos",
     "tile_traffic_bytes",
     "tile_vmem_bytes",
     "surface_to_volume",
@@ -200,6 +221,46 @@ def fused_halo(
     return [(lo * time_steps, hi * time_steps) for lo, hi in halo]
 
 
+def chain_halo(
+    stage_halos: Sequence[Sequence[tuple[int, int]]]
+) -> list[tuple[int, int]]:
+    """Window halo of a fused stage chain: the per-dim *sum* of the
+    per-stage halos — each stage consumes its own halo off the dependency
+    cone.  For T copies of one halo this equals :func:`fused_halo`."""
+    d = len(stage_halos[0])
+    return [
+        (
+            sum(int(h[i][0]) for h in stage_halos),
+            sum(int(h[i][1]) for h in stage_halos),
+        )
+        for i in range(d)
+    ]
+
+
+def stage_suffix_halos(
+    stage_halos: Sequence[Sequence[tuple[int, int]]]
+) -> list[list[tuple[int, int]]]:
+    """Per-stage suffix halos of a chain: entry j (0-indexed) is the
+    per-dim ``(Σ_{m>j} lo_m, Σ_{m>j} hi_m)`` — how far stage j+1..T's
+    dependency cone still reaches past stage j+1's output.  Stage j+1's
+    staged buffer/computed extent is ``tile + suffix[j]`` per dim, and the
+    last entry is all-zero (the final stage computes the bare tile)."""
+    T = len(stage_halos)
+    d = len(stage_halos[0])
+    out: list[list[tuple[int, int]]] = []
+    for j in range(T):
+        out.append(
+            [
+                (
+                    sum(int(stage_halos[m][i][0]) for m in range(j + 1, T)),
+                    sum(int(stage_halos[m][i][1]) for m in range(j + 1, T)),
+                )
+                for i in range(d)
+            ]
+        )
+    return out
+
+
 def tile_traffic_bytes(
     shape: Sequence[int],
     tile: Sequence[int],
@@ -207,6 +268,7 @@ def tile_traffic_bytes(
     dtype_bytes: int,
     sweep_axis: int | None = None,
     time_steps: int = 1,
+    stage_halos: Sequence[Sequence[tuple[int, int]]] | None = None,
 ) -> int:
     """Total HBM→VMEM bytes of one pass of the engine: ``time_steps``
     stencil applications fused into a single sweep of the array.
@@ -216,8 +278,15 @@ def tile_traffic_bytes(
     along axis ``s`` so its halo is charged once per sweep column.
     ``time_steps=T > 1`` grows every halo T× (the trapezoid's dependency
     cone) but the returned bytes then pay for T applications, not one.
+    ``stage_halos`` prices a heterogeneous stage chain instead: the window
+    halo is the per-stage sum and the pass pays for ``len(stage_halos)``
+    applications (``halo``/``time_steps`` are ignored).
     """
-    halo = fused_halo(halo, time_steps)
+    halo = (
+        chain_halo(stage_halos)
+        if stage_halos is not None
+        else fused_halo(halo, time_steps)
+    )
     ntiles = [-(-n // t) for n, t in zip(shape, tile)]
     if sweep_axis is None:
         per_tile = prod(t + lo + hi for t, (lo, hi) in zip(tile, halo))
@@ -240,18 +309,24 @@ def tile_vmem_bytes(
     sweep_axis: int | None = None,
     prefetch: bool = True,
     time_steps: int = 1,
+    stage_halos: Sequence[Sequence[tuple[int, int]]] | None = None,
 ) -> int:
     """Per-operand VMEM footprint: the halo'd window, plus — when sweeping
     with prefetch — two landing slabs for the double-buffered next-tile DMA.
 
     With ``time_steps=T > 1`` the window (and slabs) carry the T×-grown
-    halo.  The T−1 staged trapezoid buffers are *not* included here: the
-    kernel allocates one shared set per launch, not one per operand, so
-    they are priced by :func:`fused_stage_bytes` and charged once against
-    the whole budget in :func:`select_tile` — folding them into the
-    per-operand figure would reserve them ``n_operands`` times.
+    halo; ``stage_halos`` carries a heterogeneous chain's summed halo
+    instead.  The T−1 staged trapezoid buffers are *not* included here:
+    the kernel allocates one shared set per launch, not one per operand,
+    so they are priced by :func:`fused_stage_bytes` and charged once
+    against the whole budget in :func:`select_tile` — folding them into
+    the per-operand figure would reserve them ``n_operands`` times.
     """
-    full = fused_halo(halo, time_steps)
+    full = (
+        chain_halo(stage_halos)
+        if stage_halos is not None
+        else fused_halo(halo, time_steps)
+    )
     window = prod(t + lo + hi for t, (lo, hi) in zip(tile, full))
     slabs = 0
     if sweep_axis is not None and prefetch:
@@ -269,10 +344,19 @@ def fused_stage_bytes(
     halo: Sequence[tuple[int, int]],
     dtype_bytes: int,
     time_steps: int,
+    stage_halos: Sequence[Sequence[tuple[int, int]]] | None = None,
 ) -> int:
     """Bytes of the T−1 staged trapezoid intermediates, shared per launch:
     stage j (1 ≤ j < T) holds ``T_i + (T−j)(h_lo_i + h_hi_i)`` per dim,
-    shrinking toward the bare tile as the trapezoid narrows."""
+    shrinking toward the bare tile as the trapezoid narrows.  With
+    ``stage_halos`` stage j holds ``T_i +`` the suffix sum of stages
+    ``j+1..T``'s halos instead (``halo``/``time_steps`` ignored)."""
+    if stage_halos is not None:
+        suffix = stage_suffix_halos(stage_halos)
+        return dtype_bytes * sum(
+            prod(t + lo + hi for t, (lo, hi) in zip(tile, suffix[j - 1]))
+            for j in range(1, len(stage_halos))
+        )
     return dtype_bytes * sum(
         prod(
             t + (time_steps - j) * (lo + hi)
@@ -280,6 +364,52 @@ def fused_stage_bytes(
         )
         for j in range(1, time_steps)
     )
+
+
+def chain_flops(
+    shape: Sequence[int],
+    tile: Sequence[int],
+    stage_points: Sequence[int],
+    stage_halos: Sequence[Sequence[tuple[int, int]]],
+    sweep_axis: int | None = None,
+    streaming: bool = True,
+) -> int:
+    """Modeled multiply-add flops of one fused launch over the whole grid.
+
+    ``stage_points[j]`` is the number of stencil points of stage j (each
+    output element costs ``2·s_j`` flops — one multiply and one add per
+    point).  Stage j's computed extent is ``tile + suffix_j`` per dim
+    (:func:`stage_suffix_halos`); the final stage computes the bare tile.
+
+    ``streaming=False`` is the §8 recompute trapezoid: every sweep step
+    recomputes each stage's full extent.  ``streaming=True`` is the §9
+    frontier kernel: the first step of each sweep column computes the full
+    extents (warm-up), every later step only the ``T_s`` newly-uncovered
+    rows per stage (cross extents unchanged).  With ``sweep_axis=None``
+    there is no sweep to stream along, so both modes price the full
+    per-tile trapezoid.
+    """
+    shape = tuple(int(n) for n in shape)
+    tile = tuple(int(t) for t in tile)
+    suffix = stage_suffix_halos(stage_halos)
+    ntiles = [-(-n // t) for n, t in zip(shape, tile)]
+    flops = 0
+    for j, s_j in enumerate(stage_points):
+        ext = tuple(t + lo + hi for t, (lo, hi) in zip(tile, suffix[j]))
+        full = prod(ext)
+        if sweep_axis is None:
+            per_region = prod(ntiles) * full
+        else:
+            ncols = prod(nt for i, nt in enumerate(ntiles) if i != sweep_axis)
+            nswp = ntiles[sweep_axis]
+            if streaming:
+                cross = prod(e for i, e in enumerate(ext) if i != sweep_axis)
+                per_col = full + (nswp - 1) * tile[sweep_axis] * cross
+            else:
+                per_col = nswp * full
+            per_region = ncols * per_col
+        flops += 2 * int(s_j) * per_region
+    return flops
 
 
 def select_tile(
@@ -293,6 +423,7 @@ def select_tile(
     prefetch: bool = True,
     extra_tiles: Sequence[Sequence[int]] | None = None,
     time_steps: int = 1,
+    stage_halos: Sequence[Sequence[tuple[int, int]]] | None = None,
 ) -> TileChoice:
     """Pick the traffic-minimizing VMEM tile (paper §4 adapted, §5 for the
     per-operand budget split: budget/n_operands per array).
@@ -310,9 +441,17 @@ def select_tile(
     sweep — with the T×-grown halos in the traffic model and the staged
     intermediate windows charged against the budget.  The returned
     ``traffic_bytes`` pays for all T applications of that launch.
+    ``stage_halos`` scores a heterogeneous stage-chain launch instead
+    (per-stage halos summed for the window, suffix-summed for the staged
+    buffers); ``halo`` is then only the per-application union used for
+    the surface-to-volume diagnostic and the lower-bound radius.
     """
     shape = tuple(int(n) for n in shape)
     halo = [(int(lo), int(hi)) for lo, hi in halo]
+    if stage_halos is not None:
+        stage_halos = [
+            [(int(lo), int(hi)) for lo, hi in h] for h in stage_halos
+        ]
     budget = vmem_budget // max(n_operands, 1)
     max_elems = budget // dtype_bytes
     extras = [
@@ -336,6 +475,7 @@ def select_tile(
     # valid — conservative — floor under the fused traffic model.
     lb = _traffic_lower_bound(shape, budget // dtype_bytes, dtype_bytes, r)
     time_steps = max(int(time_steps), 1)
+    depth = len(stage_halos) if stage_halos is not None else time_steps
     best: TileChoice | None = None
     for axis in axes:
         cands = candidate_tiles(shape, max_elems, axis, aligned)
@@ -344,19 +484,24 @@ def select_tile(
             cands = cands + [t for t in extras if t not in seen]
         for tile in cands:
             vmem = tile_vmem_bytes(
-                tile, halo, dtype_bytes, axis, prefetch, time_steps
+                tile, halo, dtype_bytes, axis, prefetch, time_steps,
+                stage_halos=stage_halos,
             )
             if vmem > budget:
                 continue
-            if time_steps > 1:
+            if depth > 1:
                 # The staged trapezoid buffers are one shared set per
                 # launch — charge them against the whole budget on top of
                 # the per-operand windows, not inside each operand's share.
-                stages = fused_stage_bytes(tile, halo, dtype_bytes, time_steps)
+                stages = fused_stage_bytes(
+                    tile, halo, dtype_bytes, time_steps,
+                    stage_halos=stage_halos,
+                )
                 if vmem * max(n_operands, 1) + stages > vmem_budget:
                     continue
             traffic = tile_traffic_bytes(
-                shape, tile, halo, dtype_bytes, axis, time_steps
+                shape, tile, halo, dtype_bytes, axis, time_steps,
+                stage_halos=stage_halos,
             )
             if best is not None and traffic >= best.traffic_bytes:
                 continue

@@ -16,16 +16,28 @@ Grid iteration order = sweep order: the sweep axis is the minor-most
 consecutive grid steps; every other tile coordinate restarts the sweep
 (``k == 0`` reloads the whole window).
 
-**Temporal blocking** (DESIGN.md §8): ``time_steps=T > 1`` fuses T
-consecutive applications of the same stencil into one HBM pass.  The VMEM
-window carries the T×-grown halo (the T-step dependency cone), each sweep
-step still DMAs a single new slab, and the T−1 intermediate iterates are
-computed into staged scratch windows that narrow by one stencil halo per
-stage — the trapezoid.  Only the final stage is written back, so the
-paper's one-load-per-application charge drops to one load per T
-applications.  Intermediate stages are masked to the true grid domain
-(zero outside), which makes the fused result exactly equal to iterating
-the zero-fill reference T times.
+**Stage-chain temporal blocking** (DESIGN.md §8–§9): ``time_steps=T > 1``
+(or an explicit ``stages=[(offsets, weights), ...]`` chain with a
+distinct operator per stage — Runge-Kutta sub-steps, damped-Jacobi
+smoother pairs) fuses T consecutive stencil applications into one HBM
+pass.  The VMEM window carries the chain's dependency cone (per-dim *sum*
+of the per-stage halos), each sweep step still DMAs a single new slab,
+and the T−1 intermediate iterates live in staged scratch buffers that
+narrow by one stage halo per stage — the trapezoid.  Only the final stage
+is written back, so the paper's one-load-per-application charge drops to
+one load per T applications.
+
+**Streaming frontiers** (§9): the staged buffers are *frontier rings* —
+they persist their valid rows across sweep steps (the same VMEM-shift
+idiom the input window uses realizes the ring's rotation).  The first
+step of each sweep column computes the full trapezoid once (warm-up);
+every later step shifts each frontier by ``tile[sweep]`` rows and
+computes only the newly-uncovered rows of each stage — the §8
+``∏(1 + Σ_{m>j} h_m_i / T_i)`` redundant recompute drops back to ~1×
+flops per application while the HBM traffic is unchanged.  Intermediate
+stages are masked to the true grid domain (zero outside), which makes
+the fused result exactly equal to iterating the zero-fill reference
+stage by stage.
 
 Boundary semantics match ``kernels.ref.stencil_ref``: zero fill, via a
 host-side ``jnp.pad`` that also rounds each extent up to the tile (grids
@@ -35,7 +47,7 @@ not divisible by the tile take this round-up path).
 from __future__ import annotations
 
 import functools
-from typing import TYPE_CHECKING, Sequence
+from typing import TYPE_CHECKING, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +55,11 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.tiling import halo_from_offsets  # shared with the planner
+from repro.core.tiling import (  # shared with the planner
+    chain_halo,
+    halo_from_offsets,
+    stage_suffix_halos,
+)
 
 from ._backend import resolve_interpret
 
@@ -62,27 +78,46 @@ def _round_up(n: int, t: int) -> int:
     return -(-n // t) * t
 
 
+class _Stage(NamedTuple):
+    """Static per-stage geometry of a fused chain (python ints/arrays).
+
+    ``lo``/``hi`` are this stage's own per-dim halo; ``suffix_lo``/
+    ``suffix_hi`` the per-dim sums over the *later* stages (how far their
+    dependency cone still reaches past this stage's output); ``ext`` the
+    stage's buffer extent ``tile + suffix_lo + suffix_hi`` (the final
+    stage's ``ext`` is the bare tile)."""
+
+    offsets: object                 # (s, d) int array
+    weights: tuple
+    lo: tuple
+    hi: tuple
+    suffix_lo: tuple
+    suffix_hi: tuple
+    ext: tuple
+
+
 def _sweep_kernel(
-    offsets, weights, lo, hi, tile, sweep, nswp, pipelined, time_steps,
+    offsets, weights, lo_w, hi_w, stages, tile, sweep, nswp, pipelined,
     n_true, *refs
 ):
-    """Generic d-dim, p-RHS sweep kernel, optionally T-step fused.
+    """Generic d-dim, p-RHS sweep kernel, optionally stage-chain fused.
 
-    refs = (*x_hbm, out_ref, *windows, [*slabs,] *stages, win_sem,
+    refs = (*x_hbm, out_ref, *windows, [*slabs,] *frontiers, win_sem,
     [slab_sem]).  Each x_hbm is the whole padded array (ANY memory space);
-    windows are VMEM refs of the halo'd tile (halo grown ×``time_steps``);
-    slabs are the 2-slot landing buffers for the double-buffered next-slab
-    prefetch; stages are the ``time_steps - 1`` narrowing trapezoid
-    buffers holding the intermediate iterates.
+    windows are VMEM refs of the halo'd tile (halo = the chain's summed
+    cone ``lo_w``/``hi_w``); slabs are the 2-slot landing buffers for the
+    double-buffered next-slab prefetch; frontiers are the ``T - 1``
+    narrowing stage buffers holding the intermediate iterates, persisted
+    across sweep steps (DESIGN.md §9).
 
-    ``lo``/``hi`` are the *per-application* halos; the window and the slab
-    geometry use the T-scaled totals.  ``n_true`` is the unpadded grid
+    ``stages`` is the static per-stage chain (``None`` = single
+    application, possibly multi-RHS).  ``n_true`` is the unpadded grid
     shape — intermediate stages are masked to it so the fused pass equals
-    T independent zero-fill applications.
+    iterating the zero-fill reference stage by stage.
     """
     d = len(tile)
     p = len(offsets)
-    T = time_steps
+    T = 1 if stages is None else len(stages)
     cross_axes = [i for i in range(d) if i != sweep]
     x_hbm = refs[:p]
     out_ref = refs[p]
@@ -93,7 +128,7 @@ def _sweep_kernel(
         pos += p
     else:
         slabs = None
-    stages = refs[pos : pos + (T - 1)]
+    frontiers = refs[pos : pos + (T - 1)]
     pos += T - 1
     if pipelined:
         win_sem, slab_sem = refs[pos:]
@@ -103,7 +138,7 @@ def _sweep_kernel(
     gids = [pl.program_id(j) for j in range(len(cross_axes))]
     k = pl.program_id(len(cross_axes))
     t_s = tile[sweep]
-    h_s = T * (lo[sweep] + hi[sweep])  # total sweep-axis window halo
+    h_s = lo_w[sweep] + hi_w[sweep]  # total sweep-axis window halo
     reuse = h_s > 0 and nswp > 1
 
     def src_index(kk, start, size):
@@ -112,7 +147,7 @@ def _sweep_kernel(
         idx = [None] * d
         for j, i in enumerate(cross_axes):
             idx[i] = pl.ds(
-                gids[j] * tile[i], tile[i] + T * (lo[i] + hi[i])
+                gids[j] * tile[i], tile[i] + lo_w[i] + hi_w[i]
             )
         idx[sweep] = pl.ds(kk * t_s + start, size)
         return tuple(idx)
@@ -195,85 +230,184 @@ def _sweep_kernel(
             for off, w in zip(offsets[a], weights[a]):
                 sl = tuple(
                     slice(l + int(o), l + int(o) + t)
-                    for o, l, t in zip(off, lo, tile)
+                    for o, l, t in zip(off, lo_w, tile)
                 )
                 acc = acc + np.float32(w) * x[sl]
         out_ref[...] = acc.astype(out_ref.dtype)
         return
 
-    # -- T-step trapezoid (p == 1, enforced by the frontend) ---------------
+    # -- stage-chain trapezoid (p == 1, enforced by the frontend) ----------
 
-    def mask_domain(acc, stage, ext):
-        """Zero everything outside the true grid: the zero-fill boundary
-        of application ``stage``.  Stage ``stage``'s window starts at
-        global padded coordinate (tile origin + stage*lo_i) per axis; the
-        domain occupies [T*lo_i, T*lo_i + n_true_i)."""
+    def stage_apply(j, src, out_ext):
+        """Apply stage j's operator over ``out_ext`` output points.  The
+        source block is laid out so that output element 0 sits at source
+        coordinate ``lo_j`` per dim — true for the full previous buffer in
+        warm-up AND for the trailing frontier block when streaming."""
+        st = stages[j]
+        src = src.astype(jnp.float32)
+        acc = jnp.zeros(out_ext, dtype=jnp.float32)
+        for off, w in zip(st.offsets, st.weights):
+            sl = tuple(
+                slice(l + int(o), l + int(o) + e)
+                for o, l, e in zip(off, st.lo, out_ext)
+            )
+            acc = acc + np.float32(w) * src[sl]
+        return acc
+
+    def mask_domain(acc, starts, ext):
+        """Zero everything outside the true grid (coordinates here are
+        true-grid: the domain is [0, n_true_i) per axis) — the zero-fill
+        boundary every intermediate iterate must carry."""
         inside = None
         for i in range(d):
-            if lo[i] + hi[i] == 0:
-                # No mixing along this axis: pad/slack stays exactly zero
-                # through every stage, so no mask is needed.
+            if lo_w[i] + hi_w[i] == 0:
+                # No stage mixes along this axis: pad/slack stays exactly
+                # zero through every stage, so no mask is needed.
                 continue
-            if i == sweep:
-                start = k * t_s + stage * lo[i]
-            else:
-                start = gids[cross_axes.index(i)] * tile[i] + stage * lo[i]
-            posn = start + jax.lax.broadcasted_iota(jnp.int32, ext, i)
-            ok = (posn >= T * lo[i]) & (posn < T * lo[i] + n_true[i])
+            posn = starts[i] + jax.lax.broadcasted_iota(jnp.int32, ext, i)
+            ok = (posn >= 0) & (posn < n_true[i])
             inside = ok if inside is None else inside & ok
         if inside is None:
             return acc
         return jnp.where(inside, acc, jnp.zeros_like(acc))
 
-    offs0, w0 = offsets[0], weights[0]
-    cur = windows[0][...]
-    for j in range(1, T + 1):
-        ext = tuple(
-            t + (T - j) * (l + h) for t, l, h in zip(tile, lo, hi)
-        )
-        src = cur.astype(jnp.float32)
-        acc = jnp.zeros(ext, dtype=jnp.float32)
-        for off, w in zip(offs0, w0):
-            sl = tuple(
-                slice(l + int(o), l + int(o) + e)
-                for o, l, e in zip(off, lo, ext)
-            )
-            acc = acc + np.float32(w) * src[sl]
-        if j < T:
-            acc = mask_domain(acc, j, ext)
-            # Round-trip through the staged scratch in the input dtype so
-            # the fused chain matches T separate kernel launches bit-wise
-            # (each launch writes its iterate in the array dtype).
-            stages[j - 1][...] = acc.astype(stages[j - 1].dtype)
-            cur = stages[j - 1][...]
+    def stage_starts(j, streamed):
+        """True-grid coordinates of element 0 of stage j's computed block:
+        the full ``ext`` trapezoid in warm-up (sweep start ``k·t_s −
+        suffix_lo``), the t_s newly-uncovered rows at the frontier's
+        leading edge when streaming (sweep start ``k·t_s + suffix_hi``)."""
+        st = stages[j]
+        starts = [None] * d
+        for idx, i in enumerate(cross_axes):
+            starts[i] = gids[idx] * tile[i] - st.suffix_lo[i]
+        if streamed:
+            starts[sweep] = k * t_s + st.suffix_hi[sweep]
         else:
-            out_ref[...] = acc.astype(out_ref.dtype)
+            starts[sweep] = k * t_s - st.suffix_lo[sweep]
+        return starts
+
+    def full_compute():
+        """The §8 trapezoid: every stage over its full extent — the warm-up
+        of each sweep column (and the whole story when there is no sweep
+        overlap to stream across)."""
+        cur = windows[0][...]
+        for j in range(T):
+            acc = stage_apply(j, cur, stages[j].ext)
+            if j < T - 1:
+                acc = mask_domain(acc, stage_starts(j, False), stages[j].ext)
+                # Round-trip through the staged scratch in the input dtype
+                # so the fused chain matches separate kernel launches
+                # bit-wise (each launch writes its iterate in the array
+                # dtype).
+                frontiers[j][...] = acc.astype(frontiers[j].dtype)
+                cur = frontiers[j][...]
+            else:
+                out_ref[...] = acc.astype(out_ref.dtype)
+
+    def streaming_step():
+        """The §9 streaming wavefront: rotate each frontier ring by t_s
+        rows and compute only the newly-uncovered rows of each stage —
+        stage j consumes exactly the trailing ``t_s + lo_j + hi_j`` rows
+        of stage j−1's frontier (the window for j = 0)."""
+        for j in range(T):
+            st = stages[j]
+            blk = t_s + st.lo[sweep] + st.hi[sweep]
+            if j == 0:
+                src_ref = windows[0]
+                src_len = t_s + h_s
+            else:
+                src_ref = frontiers[j - 1]
+                src_len = stages[j - 1].ext[sweep]
+            src = src_ref[win_part(src_len - blk, blk)]
+            out_ext = tuple(
+                t_s if i == sweep else st.ext[i] for i in range(d)
+            )
+            acc = stage_apply(j, src, out_ext)
+            if j < T - 1:
+                # Ring rotation, realized as the same VMEM shift the input
+                # window uses: drop the t_s oldest rows, keep the rest.
+                keep = st.ext[sweep] - t_s
+                if keep > 0:
+                    frontiers[j][win_part(0, keep)] = (
+                        frontiers[j][win_part(t_s, keep)]
+                    )
+                acc = mask_domain(acc, stage_starts(j, True), out_ext)
+                frontiers[j][win_part(max(keep, 0), t_s)] = (
+                    acc.astype(frontiers[j].dtype)
+                )
+            else:
+                out_ref[...] = acc.astype(out_ref.dtype)
+
+    if not reuse:
+        # No persisted overlap (h_s == 0 or a single sweep step): there is
+        # no frontier state to stream from; every step is a warm-up.
+        full_compute()
+    else:
+        @pl.when(k == 0)
+        def _():
+            full_compute()
+
+        @pl.when(k > 0)
+        def _():
+            streaming_step()
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "offsets_w", "tile", "sweep", "pipelined", "interpret", "time_steps",
+        "offsets_w", "tile", "sweep", "pipelined", "interpret", "stages_w",
     ),
 )
 def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
-                  time_steps=1):
+                  stages_w=None):
     """us: tuple of p same-shape arrays.  offsets_w: tuple per array of
-    (offsets_tuple, weights_tuple) — hashable static spec.  ``time_steps``
-    is the fusion depth of this single launch (T applications, one HBM
-    pass)."""
+    (offsets_tuple, weights_tuple) — hashable static spec.  ``stages_w``
+    (tuple per stage of (offsets_tuple, weights_tuple), single RHS only)
+    fuses the whole chain into this one launch: one HBM pass, T
+    applications with streaming per-stage frontiers."""
     u0 = us[0]
     d = u0.ndim
-    T = int(time_steps)
     tile = tuple(int(t) for t in tile)
-    offsets = [np.asarray(ow[0], dtype=np.int64).reshape(-1, d)
-               for ow in offsets_w]
-    weights = [list(ow[1]) for ow in offsets_w]
-    halo = halo_from_offsets(offsets, d)
-    lo = tuple(h[0] for h in halo)      # per-application halo
-    hi = tuple(h[1] for h in halo)
-    lo_w = tuple(T * l for l in lo)     # window halo: the T-step cone
-    hi_w = tuple(T * h for h in hi)
+    if stages_w is not None:
+        T = len(stages_w)
+        st_offs = [np.asarray(s[0], dtype=np.int64).reshape(-1, d)
+                   for s in stages_w]
+        st_wts = [tuple(float(w) for w in s[1]) for s in stages_w]
+        st_halos = [halo_from_offsets([o], d) for o in st_offs]
+        # Window halo: the chain's dependency cone, and per-stage suffix
+        # halos — the same helpers the planner prices VMEM/traffic with,
+        # so kernel geometry and planned geometry cannot diverge.
+        cone = chain_halo(st_halos)
+        lo_w = tuple(lo for lo, _ in cone)
+        hi_w = tuple(hi for _, hi in cone)
+        suffix = stage_suffix_halos(st_halos)
+        stages = []
+        for j in range(T):
+            sfx_lo = tuple(lo for lo, _ in suffix[j])
+            sfx_hi = tuple(hi for _, hi in suffix[j])
+            stages.append(_Stage(
+                offsets=st_offs[j],
+                weights=st_wts[j],
+                lo=tuple(h[0] for h in st_halos[j]),
+                hi=tuple(h[1] for h in st_halos[j]),
+                suffix_lo=sfx_lo,
+                suffix_hi=sfx_hi,
+                ext=tuple(
+                    t + l + h for t, l, h in zip(tile, sfx_lo, sfx_hi)
+                ),
+            ))
+        stages = tuple(stages)
+        offsets = [st_offs[0]]
+        weights = [list(st_wts[0])]
+    else:
+        T = 1
+        stages = None
+        offsets = [np.asarray(ow[0], dtype=np.int64).reshape(-1, d)
+                   for ow in offsets_w]
+        weights = [list(ow[1]) for ow in offsets_w]
+        halo = halo_from_offsets(offsets, d)
+        lo_w = tuple(h[0] for h in halo)
+        hi_w = tuple(h[1] for h in halo)
     padded_shape = tuple(_round_up(n, t) for n, t in zip(u0.shape, tile))
     ntiles = tuple(ps // t for ps, t in zip(padded_shape, tile))
     nswp = ntiles[sweep]
@@ -298,12 +432,10 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
     scratch = [pltpu.VMEM(window_shape, u0.dtype) for _ in range(p)]
     if pipelined:
         scratch += [pltpu.VMEM((2,) + slab_shape, u0.dtype) for _ in range(p)]
-    # Staged trapezoid buffers: stage j keeps tile + (T-j)·halo per dim.
-    for j in range(1, T):
-        stage_shape = tuple(
-            t + (T - j) * (l + h) for t, l, h in zip(tile, lo, hi)
-        )
-        scratch.append(pltpu.VMEM(stage_shape, u0.dtype))
+    # Frontier buffers: stage j keeps tile + its suffix halo per dim,
+    # persisted across sweep steps (§9 streaming).
+    for j in range(T - 1):
+        scratch.append(pltpu.VMEM(stages[j].ext, u0.dtype))
     scratch.append(pltpu.SemaphoreType.DMA((p,)))
     if pipelined:
         scratch.append(pltpu.SemaphoreType.DMA((p, 2)))
@@ -317,8 +449,8 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
 
     out = pl.pallas_call(
         functools.partial(
-            _sweep_kernel, offsets, weights, lo, hi, tile, sweep, nswp,
-            pipelined, T, tuple(int(n) for n in u0.shape),
+            _sweep_kernel, offsets, weights, lo_w, hi_w, stages, tile,
+            sweep, nswp, pipelined, tuple(int(n) for n in u0.shape),
         ),
         grid=grid,
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY) for _ in us],
@@ -331,22 +463,32 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
 
 
 def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None,
-               time_steps=1):
+               time_steps=1, stages=None):
     """Tile decision for an un-planned call: a thin wrapper over the plan
     compiler (``repro.plan``), whose persistent cache makes repeated shapes
     — the serving case — O(1).  The old ad-hoc heuristic survives as
     ``Planner(strategy="legacy")``; the planner asserts it never predicts
-    more traffic than that baseline."""
+    more traffic than that baseline.
+
+    ``stages`` (per-stage offset arrays, weights deliberately stripped so
+    cache keys stay weight-independent) requests a stage-chain plan; a
+    homogeneous chain canonicalizes to the same request — and cache key —
+    as the ``offsets + time_steps`` spelling."""
     from repro.plan import default_planner
 
-    return default_planner().plan(
+    d = len(shape)
+    kw = dict(
         shape=tuple(int(n) for n in shape),
-        offsets=[np.asarray(o).reshape(-1, len(shape)) for o in offsets_list],
         dtype_bytes=dtype_bytes,
         vmem_budget=vmem_budget,
         n_operands=n_arrays + 1,  # p inputs + the output tile (§5 split)
-        time_steps=time_steps,
     )
+    if stages is not None:
+        kw["stages"] = [np.asarray(o).reshape(-1, d) for o in stages]
+    else:
+        kw["offsets"] = [np.asarray(o).reshape(-1, d) for o in offsets_list]
+        kw["time_steps"] = time_steps
+    return default_planner().plan(**kw)
 
 
 def stencil_pallas(
@@ -368,8 +510,9 @@ def stencil_pallas(
     planner is consulted (and its cache makes repeats O(1)).
 
     ``time_steps=T > 1`` applies the stencil T times (a Jacobi/RK sub-step
-    chain) with temporal fusion: the planner picks the fusion depth, or an
-    explicit ``tile`` fuses all T steps into one launch."""
+    chain), lowered onto the same stage-chain engine as
+    ``stencil_iterate(stages=...)``: the planner picks the fusion depth,
+    or an explicit ``tile`` fuses all T steps into one launch."""
     return multi_stencil_pallas(
         [u], [offsets], [weights], tile=tile, interpret=interpret,
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
@@ -379,26 +522,51 @@ def stencil_pallas(
 
 def stencil_iterate(
     u: jnp.ndarray,
-    offsets: np.ndarray,
-    weights: Sequence[float],
-    time_steps: int,
+    offsets: np.ndarray | None = None,
+    weights: Sequence[float] | None = None,
+    time_steps: int | None = None,
     tile: Sequence[int] | None = None,
     interpret: bool | None = None,
     vmem_budget: int | None = None,
     sweep_axis: int | None = None,
     pipelined: bool = True,
     plan: "StencilPlan | None" = None,
+    stages: Sequence[tuple] | None = None,
 ) -> jnp.ndarray:
-    """Apply the same stencil ``time_steps`` times — the iterative-solver
-    workload (Jacobi sweeps, RK sub-steps) — equal to iterating
-    ``kernels.ref.stencil_ref`` that many times.
+    """Run a stage-chain stencil program — the iterative-solver workload.
+
+    Two spellings lower onto one engine:
+
+    * ``stencil_iterate(u, offsets, weights, T)`` applies the same
+      operator T times (Jacobi sweeps) — equal to iterating
+      ``kernels.ref.stencil_ref`` T times.
+    * ``stencil_iterate(u, stages=[(offsets_1, weights_1), ...])`` runs a
+      chain with a *distinct* operator per stage (Runge-Kutta sub-steps,
+      damped-Jacobi smoother pairs) — equal to applying the references in
+      order.
 
     The planner chooses how deeply to fuse (``plan.fused_depth``): each
-    fused launch advances up to that many applications in one HBM pass via
-    the §8 trapezoid window, and the chain runs
-    ``ceil(time_steps / fused_depth)`` launches.  A fused plan is only
+    fused launch advances up to that many consecutive stages in one HBM
+    pass via the §8/§9 trapezoid window with streaming frontiers, and the
+    chain runs ``ceil(T / fused_depth)`` launches.  A fused plan is only
     ever chosen when its modeled traffic beats the planner's own
     single-pass choice."""
+    if stages is not None:
+        if offsets is not None or weights is not None:
+            raise ValueError("pass (offsets, weights) or stages, not both")
+        if time_steps is not None and time_steps != len(stages):
+            raise ValueError(
+                f"time_steps={time_steps} contradicts {len(stages)} stages"
+            )
+        return multi_stencil_pallas(
+            [u], None, None, tile=tile, interpret=interpret,
+            vmem_budget=vmem_budget, sweep_axis=sweep_axis,
+            pipelined=pipelined, plan=plan, stages=stages,
+        )
+    if offsets is None or weights is None or time_steps is None:
+        raise ValueError(
+            "stencil_iterate needs (offsets, weights, time_steps) or stages"
+        )
     return multi_stencil_pallas(
         [u], [offsets], [weights], tile=tile, interpret=interpret,
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
@@ -408,8 +576,8 @@ def stencil_iterate(
 
 def multi_stencil_pallas(
     us: Sequence[jnp.ndarray],
-    offsets_list: Sequence[np.ndarray],
-    weights_list: Sequence[Sequence[float]],
+    offsets_list: Sequence[np.ndarray] | None,
+    weights_list: Sequence[Sequence[float]] | None,
     tile: Sequence[int] | None = None,
     interpret: bool | None = None,
     vmem_budget: int | None = None,
@@ -417,29 +585,71 @@ def multi_stencil_pallas(
     pipelined: bool = True,
     plan: "StencilPlan | None" = None,
     time_steps: int = 1,
+    stages: Sequence[tuple] | None = None,
 ) -> jnp.ndarray:
     """p-RHS stencil  q = Σ_p K_p u_p  (paper §5): one VMEM budget split
     across p operand windows plus the output tile, one shared sweep.
 
     Tile/sweep resolution order: explicit ``tile``/``sweep_axis`` args win,
     then the ``plan``'s decision, then the default planner.  A ``plan`` is
-    validated against the call (shape, offsets, dtype, time_steps) and a
-    mismatch raises :class:`repro.plan.PlanMismatchError` — executing a
-    plan compiled for different inputs silently mis-tiles or
+    validated against the call (shape, offsets, dtype, time_steps, stage
+    chain) and a mismatch raises :class:`repro.plan.PlanMismatchError` —
+    executing a plan compiled for different inputs silently mis-tiles or
     under-allocates the VMEM window.
 
-    ``time_steps=T > 1`` (single RHS only) runs the T-application chain
-    with temporal fusion (DESIGN.md §8)."""
+    ``time_steps=T > 1`` (single RHS only) runs the T-application chain;
+    ``stages=[(offsets, weights), ...]`` runs a chain with a distinct
+    operator per stage.  Both lower onto the §8/§9 stage-chain engine:
+    launches of up to ``fused_depth`` consecutive stages, one HBM pass
+    each, streaming per-stage frontiers inside."""
     us = tuple(us)
     assert len({u.shape for u in us}) == 1, "RHS arrays must share a shape"
-    T = int(time_steps)
-    if T < 1:
-        raise ValueError(f"time_steps must be >= 1, got {T}")
-    if T > 1 and len(us) != 1:
-        raise ValueError(
-            "temporal fusion (time_steps > 1) requires a single RHS; "
-            f"got {len(us)} arrays"
+    d = us[0].ndim
+    if stages is not None:
+        if offsets_list is not None or weights_list is not None:
+            raise ValueError(
+                "pass (offsets_list, weights_list) or stages, not both"
+            )
+        if len(us) != 1:
+            raise ValueError(
+                f"stage chains require a single RHS; got {len(us)} arrays"
+            )
+        chain = tuple(
+            (
+                np.asarray(o, dtype=np.int64).reshape(-1, d),
+                tuple(float(w) for w in ws),
+            )
+            for o, ws in stages
         )
+        if not chain:
+            raise ValueError("stages must contain at least one stage")
+        for offs, wts in chain:
+            if len(offs) != len(wts):
+                raise ValueError(
+                    f"stage has {len(offs)} offsets but {len(wts)} weights"
+                )
+        T = len(chain)
+        offsets_list = [chain[0][0]]
+        weights_list = [list(chain[0][1])]
+    else:
+        T = int(time_steps)
+        if T < 1:
+            raise ValueError(f"time_steps must be >= 1, got {T}")
+        if T > 1 and len(us) != 1:
+            raise ValueError(
+                "temporal fusion (time_steps > 1) requires a single RHS; "
+                f"got {len(us)} arrays"
+            )
+        if len(us) == 1:
+            # The canonical form: every single-RHS call IS a (possibly
+            # repeated) stage chain.
+            op = (
+                np.asarray(offsets_list[0], dtype=np.int64).reshape(-1, d),
+                tuple(float(w) for w in weights_list[0]),
+            )
+            chain = (op,) * T
+        else:
+            chain = None
     interpret = resolve_interpret(interpret)
     depth = None
     if plan is not None:
@@ -448,9 +658,10 @@ def multi_stencil_pallas(
         validate_plan_call(
             plan,
             us[0].shape,
-            [np.asarray(o).reshape(-1, us[0].ndim) for o in offsets_list],
+            [np.asarray(o).reshape(-1, d) for o in offsets_list],
             us[0].dtype.itemsize,
             time_steps=T,
+            stages=[offs for offs, _ in chain] if chain is not None else None,
         )
         if tile is None:
             tile = plan.tile
@@ -462,6 +673,9 @@ def multi_stencil_pallas(
         choice = _auto_tile(
             us[0].shape, offsets_list, us[0].dtype.itemsize, len(us),
             vmem_budget=vmem_budget, time_steps=T,
+            stages=(
+                [offs for offs, _ in chain] if chain is not None else None
+            ),
         )
         tile = choice.tile
         if sweep_axis is None:
@@ -471,24 +685,37 @@ def multi_stencil_pallas(
         sweep_axis = 0
     if depth is None:
         depth = T  # explicit tile: the caller owns the VMEM arithmetic
-    offsets_w = tuple(
-        (
-            tuple(map(tuple, np.asarray(o).tolist())),
-            tuple(float(w) for w in ws),
-        )
-        for o, ws in zip(offsets_list, weights_list)
-    )
     tile = tuple(int(t) for t in tile)
     sweep_axis = int(sweep_axis)
     pipelined = bool(pipelined)
-    arrays = us
-    remaining = T
-    while True:
-        step = min(int(depth), remaining)
-        result = _stencil_call(
-            arrays, offsets_w, tile, sweep_axis, pipelined, interpret, step,
+
+    def static_spec(op):
+        offs, wts = op
+        return (tuple(map(tuple, np.asarray(offs).tolist())), tuple(wts))
+
+    if chain is None:  # multi-RHS single application
+        offsets_w = tuple(
+            static_spec((o, tuple(float(w) for w in ws)))
+            for o, ws in zip(offsets_list, weights_list)
         )
-        remaining -= step
-        if remaining == 0:
+        return _stencil_call(
+            us, offsets_w, tile, sweep_axis, pipelined, interpret,
+        )
+    arrays = us
+    pos = 0
+    while True:
+        run = chain[pos : pos + int(depth)]
+        pos += len(run)
+        if len(run) == 1:
+            result = _stencil_call(
+                arrays, (static_spec(run[0]),), tile, sweep_axis, pipelined,
+                interpret,
+            )
+        else:
+            result = _stencil_call(
+                arrays, (static_spec(run[0]),), tile, sweep_axis, pipelined,
+                interpret, stages_w=tuple(static_spec(op) for op in run),
+            )
+        if pos == len(chain):
             return result
         arrays = (result,)

@@ -21,6 +21,7 @@ from .schema import (  # noqa: F401
     PadPlan,
     PlanMismatchError,
     PlanRequest,
+    StageSpec,
     StencilPlan,
     validate_plan_call,
 )
@@ -33,6 +34,7 @@ __all__ = [
     "PlanMismatchError",
     "PlanRequest",
     "Planner",
+    "StageSpec",
     "StencilPlan",
     "default_cache_dir",
     "default_planner",

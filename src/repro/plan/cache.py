@@ -18,7 +18,7 @@ import os
 import tempfile
 from collections import OrderedDict
 
-from .schema import StencilPlan
+from .schema import PLANNER_VERSION, StencilPlan
 
 __all__ = ["PlanCache", "default_cache_dir"]
 
@@ -90,6 +90,13 @@ class PlanCache:
             if raw is not None:
                 try:
                     plan = StencilPlan.from_dict(json.loads(raw))
+                    if plan.version != PLANNER_VERSION:
+                        # A previous schema generation (e.g. a v2 entry
+                        # predating stage chains): stale by definition.
+                        raise ValueError(
+                            f"planner version {plan.version} != "
+                            f"{PLANNER_VERSION}"
+                        )
                     if plan.request.cache_key() != key:
                         raise ValueError("cache key mismatch")
                 except Exception:

@@ -58,6 +58,8 @@ from repro.core.tiling import (
     LANE,
     SUBLANE,
     TileChoice,
+    chain_flops,
+    fused_stage_bytes,
     halo_from_offsets,
     select_tile,
     tile_traffic_bytes,
@@ -252,7 +254,21 @@ class Planner:
     def _compile(self, request: PlanRequest) -> StencilPlan:
         shape = request.shape
         d = len(shape)
-        halo = halo_from_offsets(request.offsets, d)
+        stages = request.stages
+        if stages:
+            # Stage chain (possibly a repeated single operator): per-stage
+            # halos drive the launch geometry; the componentwise union is
+            # what the lattice/pad stages and the depth-1 tile see (a
+            # window sized for the union admits every stage).
+            stage_halos = [
+                halo_from_offsets([st.offsets], d) for st in stages
+            ]
+            stage_points = [len(st.offsets) for st in stages]
+            halo = halo_from_offsets([st.offsets for st in stages], d)
+        else:
+            stage_halos = None  # multi-RHS single application
+            stage_points = [sum(len(g) for g in request.offsets)]
+            halo = halo_from_offsets(request.offsets, d)
         diameter = max(lo + hi + 1 for lo, hi in halo)
 
         lattice = None
@@ -277,22 +293,77 @@ class Planner:
             )
         work = pad.padded_shape
         T = request.time_steps
+        db = request.dtype_bytes
+        n_ops = max(request.n_operands, 1)
+        per_op_budget = request.vmem_budget // n_ops
 
         def tiled(depth: int, extras=None) -> TileChoice:
+            """Tile for one launch: depth 1 scores the per-application
+            union halo (a window sized for the union admits every stage of
+            a heterogeneous chain); deeper launches score the chain's
+            leading ``depth``-stage prefix."""
+            launch = None
+            if stage_halos is not None and depth > 1:
+                launch = stage_halos[:depth]
             return select_tile(
                 work,
                 halo,
-                dtype_bytes=request.dtype_bytes,
+                dtype_bytes=db,
                 vmem_budget=request.vmem_budget,
                 n_operands=request.n_operands,
                 sweep_axis="auto",
                 aligned=request.aligned,
                 prefetch=request.pipelined,
                 extra_tiles=extras,
-                time_steps=depth,
+                time_steps=1 if launch is not None else depth,
+                stage_halos=launch,
             )
 
+        def price_chain(depth: int, c: TileChoice):
+            """Modeled (traffic, lower bound, streaming flops, recompute
+            flops) of the whole T-step chain as ceil(T/depth) launches of
+            c's one tile — launch i fuses the stage run [i·d, (i+1)·d).
+            The remainder launch reuses the same tile, so it is priced at
+            its own (shorter) run, not with the tile a standalone plan
+            would pick.  Returns None when some launch's window + staged
+            buffers outgrow VMEM with this tile (heterogeneous chains can
+            put their largest halos in a later run)."""
+            if stage_halos is None:
+                fl = chain_flops(
+                    work, c.tile, stage_points, [halo], c.sweep_axis,
+                )
+                return c.traffic_bytes, c.lower_bound_bytes, fl, fl
+            traffic = flops_s = flops_r = 0
+            lb = 0.0
+            for i in range(0, T, depth):
+                launch = stage_halos[i : i + depth]
+                vmem = tile_vmem_bytes(
+                    c.tile, halo, db, c.sweep_axis, request.pipelined,
+                    stage_halos=launch,
+                )
+                if vmem > per_op_budget:
+                    return None
+                if len(launch) > 1:
+                    staged = fused_stage_bytes(
+                        c.tile, halo, db, len(launch), stage_halos=launch,
+                    )
+                    if vmem * n_ops + staged > request.vmem_budget:
+                        return None
+                traffic += tile_traffic_bytes(
+                    work, c.tile, halo, db, c.sweep_axis, stage_halos=launch,
+                )
+                pts = stage_points[i : i + depth]
+                flops_s += chain_flops(
+                    work, c.tile, pts, launch, c.sweep_axis, streaming=True,
+                )
+                flops_r += chain_flops(
+                    work, c.tile, pts, launch, c.sweep_axis, streaming=False,
+                )
+                lb += c.lower_bound_bytes  # per-launch bound: shape + budget
+            return traffic, lb, flops_s, flops_r
+
         legacy = tiled(1)  # the old heuristic: per-step, never fused
+        legacy_priced = price_chain(1, legacy)
         if request.strategy == "legacy":
             per_depth = {1: legacy}
         else:
@@ -312,29 +383,28 @@ class Planner:
                 f"on {work}"
             )
 
-        def chain_totals(depth: int) -> tuple[int, float]:
-            """Modeled (traffic, lower bound) of the whole T-step chain as
-            ceil(T/depth) fused launches.  The engine reuses the plan's one
-            tile for the remainder launch, so the remainder is priced with
-            *this depth's* tile at the remainder depth — not with the best
-            tile a standalone rem-deep plan would pick."""
-            n_full, rem = divmod(T, depth)
-            c = per_depth[depth]
-            traffic = n_full * c.traffic_bytes
-            lb = n_full * c.lower_bound_bytes
-            if rem:
-                traffic += tile_traffic_bytes(
-                    work, c.tile, halo, request.dtype_bytes, c.sweep_axis,
-                    rem,
-                )
-                lb += c.lower_bound_bytes  # per-launch bound: shape + budget
-            return traffic, lb
-
-        single_total = T * per_depth[1].traffic_bytes
-        # Shallower wins ties: same modeled traffic, less redundant
-        # trapezoid compute.
-        fused_depth = min(per_depth, key=lambda t: (chain_totals(t)[0], t))
-        traffic_total, lb_total = chain_totals(fused_depth)
+        scored = {}
+        for depth, c in per_depth.items():
+            priced = price_chain(depth, c)
+            if priced is not None:
+                scored[depth] = priced
+        # Depth 1 is always feasible (every stage's halo is componentwise
+        # <= the union the tile was sized for)...
+        assert 1 in scored, f"depth-1 chain infeasible on {work}"
+        # ...but a heterogeneous chain prices launches with their own
+        # halos, where the union-scored tile is not provably best — take
+        # the legacy tile instead whenever it chains cheaper, preserving
+        # planned <= legacy for every input.
+        if legacy_priced is not None and (
+            legacy_priced[0] < scored[1][0]
+        ):
+            per_depth[1] = legacy
+            scored[1] = legacy_priced
+        single_total = scored[1][0]
+        # Shallower wins ties: same modeled traffic, smaller VMEM webs and
+        # fewer staged buffers.
+        fused_depth = min(scored, key=lambda t: (scored[t][0], t))
+        traffic_total, lb_total, flops_total, rflops_total = scored[fused_depth]
         # Depth 1 is always in the candidate set, so the fused choice can
         # never score worse than the planner's own single-pass plan.
         assert traffic_total <= single_total, (
@@ -342,10 +412,18 @@ class Planner:
             f"{single_total} on {work} (T={T}, depth={fused_depth})"
         )
         choice = per_depth[fused_depth]
+        depth_scores = tuple(
+            (int(depth), int(tr), int(fs))
+            for depth, (tr, _lb, fs, _fr) in sorted(scored.items())
+        )
 
         sweep = choice.sweep_axis
         h_s = 0 if sweep is None else halo[sweep][0] + halo[sweep][1]
         n_sweep = 1 if sweep is None else choice.grid[sweep]
+        legacy_total = (
+            legacy_priced[0] if legacy_priced is not None
+            else T * legacy.traffic_bytes
+        )
         return StencilPlan(
             request=request,
             lattice=lattice,
@@ -364,10 +442,13 @@ class Planner:
             efficiency=float(min(lb_total / max(traffic_total, 1), 1.0)),
             legacy_tile=legacy.tile,
             legacy_sweep_axis=legacy.sweep_axis,
-            legacy_traffic_bytes=int(T * legacy.traffic_bytes),
+            legacy_traffic_bytes=int(legacy_total),
             time_steps=T,
             fused_depth=int(fused_depth),
             single_pass_traffic_bytes=int(single_total),
+            modeled_flops=int(flops_total),
+            recompute_flops=int(rflops_total),
+            depth_scores=depth_scores,
         )
 
     # -- optional exact validation ----------------------------------------

@@ -28,15 +28,20 @@ __all__ = [
     "PlanRequest",
     "LatticeReport",
     "PadPlan",
+    "StageSpec",
     "StencilPlan",
     "validate_plan_call",
 ]
 
-# v2: temporal blocking — ``time_steps`` joined the request (and the plan
-# gained ``fused_depth``/``single_pass_traffic_bytes``), which changes the
-# canonical request JSON and therefore every cache key; the version bump
-# retires all v1 on-disk plans in one stroke.
-PLANNER_VERSION = 2
+# v3: stage chains — the request canonicalizes every temporal chain into
+# an ordered ``stages`` list (a ``time_steps=T`` single-operator request
+# becomes T repeated stages), and the plan grew the streaming-vs-recompute
+# flop fields plus the per-depth score table.  The version participates in
+# every cache key, so all v2 on-disk plans are invalidated in one stroke —
+# re-planned, never mis-parsed.
+# (v2: temporal blocking — ``time_steps`` joined the request and the plan
+# gained ``fused_depth``/``single_pass_traffic_bytes``.)
+PLANNER_VERSION = 3
 
 # Default VMEM budget mirrors core.tiling (import-free to keep this module
 # pure data): half of a v5e core's VMEM.
@@ -57,6 +62,63 @@ def _offsets_tuple(offsets, d: int):
 
 
 @dataclass(frozen=True)
+class StageSpec:
+    """One stage of a stage-chain program: a single stencil operator.
+
+    ``offsets`` is the canonical (s, d) offset tuple of this stage's
+    operator; ``weights`` are optional — the planner's decisions (halo,
+    window, traffic, flops) depend only on the offsets, so kernel-driven
+    requests leave weights ``None`` to keep cache keys weight-independent,
+    while explicit requests may carry them for the record.
+    """
+
+    offsets: tuple[tuple[int, ...], ...]
+    weights: tuple[float, ...] | None = None
+
+    @classmethod
+    def make(cls, spec, d: int) -> "StageSpec":
+        """Canonicalize one stage spec: a :class:`StageSpec`, a
+        ``{"offsets": ..., "weights": ...}`` dict, an ``(offsets,
+        weights)`` pair, or a bare (s, d) offset array."""
+        if isinstance(spec, StageSpec):
+            offsets, weights = spec.offsets, spec.weights
+        elif isinstance(spec, dict):
+            offsets, weights = spec["offsets"], spec.get("weights")
+        else:
+            # An (offsets, weights) pair is distinguished from a bare
+            # offset array by its first element being a 2-D offset table.
+            is_pair = False
+            if isinstance(spec, (tuple, list)) and len(spec) == 2:
+                try:
+                    is_pair = np.asarray(spec[0], dtype=np.int64).ndim == 2
+                except (ValueError, TypeError):
+                    is_pair = False
+            if is_pair:
+                offsets, weights = spec
+            else:
+                offsets, weights = spec, None
+        offs = _offsets_tuple([offsets], d)[0]
+        if weights is not None:
+            weights = tuple(float(w) for w in weights)
+            if len(weights) != len(offs):
+                raise ValueError(
+                    f"stage has {len(offs)} offsets but {len(weights)} weights"
+                )
+        return cls(offsets=offs, weights=weights)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StageSpec":
+        return cls(
+            offsets=tuple(_int_tuple(o) for o in d["offsets"]),
+            weights=(
+                tuple(float(w) for w in d["weights"])
+                if d.get("weights") is not None
+                else None
+            ),
+        )
+
+
+@dataclass(frozen=True)
 class PlanRequest:
     """Canonical inputs of one planning problem (the cache key's preimage).
 
@@ -65,9 +127,15 @@ class PlanRequest:
     1-tuple).  ``geometry`` is an ``(a, z, w)`` hardware-cache model for the
     paper's CPU pipeline (unfavorable-grid detection + padding); ``None``
     means an explicitly-managed memory (TPU VMEM), where conflict misses do
-    not exist and the pad stage is a no-op.  ``time_steps`` asks for T
-    consecutive applications of the stencil (a Jacobi/RK sub-step chain);
-    the planner decides how deeply to fuse them (DESIGN.md §8).
+    not exist and the pad stage is a no-op.
+
+    ``stages`` is the ordered stage-chain program (DESIGN.md §9): one
+    :class:`StageSpec` per application, with ``time_steps ==
+    len(stages)``.  A single-operator ``time_steps=T`` request is
+    canonicalized to T repeated stages, so the old spelling and the
+    explicit-chain spelling of the same computation share one cache key.
+    Multi-RHS requests (``len(offsets) > 1``) cannot chain and carry an
+    empty ``stages``.
     """
 
     shape: tuple[int, ...]
@@ -81,12 +149,13 @@ class PlanRequest:
     strategy: str = "paper"
     max_pad: int = 16
     time_steps: int = 1
+    stages: tuple[StageSpec, ...] = ()
 
     @classmethod
     def make(
         cls,
         shape: Sequence[int],
-        offsets,
+        offsets=None,
         dtype_bytes: int = 4,
         vmem_budget: int | None = None,
         n_operands: int | None = None,
@@ -96,22 +165,62 @@ class PlanRequest:
         strategy: str = "paper",
         max_pad: int = 16,
         time_steps: int = 1,
+        stages: Sequence | None = None,
     ) -> "PlanRequest":
         """Build a canonical request.  ``offsets`` may be a single (s, d)
-        offset array or a sequence of per-RHS arrays."""
+        offset array or a sequence of per-RHS arrays.  ``stages`` instead
+        gives the ordered stage chain (each entry a :class:`StageSpec`,
+        ``(offsets, weights)`` pair, dict, or bare offset array); it is
+        mutually exclusive with ``offsets``+``time_steps``."""
         shape = _int_tuple(shape)
         d = len(shape)
-        try:
-            arr = np.asarray(offsets, dtype=np.int64)
-        except (ValueError, TypeError):
-            arr = None  # ragged: per-RHS groups of different sizes
-        if arr is not None and arr.ndim == 2:
-            groups = [arr]  # one RHS: a single (s, d) offset array
-        elif arr is not None and arr.ndim == 3:
-            groups = list(arr)  # p RHS groups of equal size
+        if stages is not None:
+            if offsets is not None:
+                raise ValueError("pass offsets or stages, not both")
+            specs = tuple(StageSpec.make(s, d) for s in stages)
+            if not specs:
+                raise ValueError("stages must contain at least one stage")
+            if int(time_steps) not in (1, len(specs)):
+                raise ValueError(
+                    f"time_steps={time_steps} contradicts {len(specs)} stages"
+                )
+            offs = (specs[0].offsets,)
+            time_steps = len(specs)
         else:
-            groups = list(offsets)
-        offs = _offsets_tuple(groups, d)
+            if offsets is None:
+                raise ValueError("pass offsets or stages")
+            try:
+                arr = np.asarray(offsets, dtype=np.int64)
+            except (ValueError, TypeError):
+                arr = None  # ragged: per-RHS groups of different sizes
+            if arr is not None and arr.ndim == 2:
+                groups = [arr]  # one RHS: a single (s, d) offset array
+            elif arr is not None and arr.ndim == 3:
+                groups = list(arr)  # p RHS groups of equal size
+            else:
+                groups = list(offsets)
+            offs = _offsets_tuple(groups, d)
+            time_steps = int(time_steps)
+            if time_steps < 1:
+                raise ValueError(f"time_steps must be >= 1, got {time_steps}")
+            if time_steps > 1 and len(offs) != 1:
+                # q = Σ_p K_p u_p has no well-defined iterate: which operand
+                # would receive the intermediate result?
+                raise ValueError(
+                    "temporal fusion (time_steps > 1) requires a single RHS; "
+                    f"got {len(offs)} offset groups"
+                )
+            # Canonical stage chain: a single-RHS request IS a (possibly
+            # repeated) chain; multi-RHS requests cannot chain.
+            if len(offs) == 1:
+                specs = (StageSpec(offsets=offs[0]),) * time_steps
+            else:
+                specs = ()
+        if len(specs) > 1 and len(offs) != 1:
+            raise ValueError(
+                "stage chains (len(stages) > 1) require a single RHS; "
+                f"got {len(offs)} offset groups"
+            )
         if n_operands is None:
             n_operands = len(offs) + 1  # p inputs + the output tile (§5)
         if geometry is not None:
@@ -123,16 +232,6 @@ class PlanRequest:
                 vmem_budget = a * z * w * int(dtype_bytes)  # S words
             else:
                 vmem_budget = _DEFAULT_VMEM_BUDGET
-        time_steps = int(time_steps)
-        if time_steps < 1:
-            raise ValueError(f"time_steps must be >= 1, got {time_steps}")
-        if time_steps > 1 and len(offs) != 1:
-            # q = Σ_p K_p u_p has no well-defined iterate: which operand
-            # would receive the intermediate result?
-            raise ValueError(
-                "temporal fusion (time_steps > 1) requires a single RHS; "
-                f"got {len(offs)} offset groups"
-            )
         return cls(
             shape=shape,
             offsets=offs,
@@ -144,7 +243,8 @@ class PlanRequest:
             pipelined=bool(pipelined),
             strategy=str(strategy),
             max_pad=int(max_pad),
-            time_steps=time_steps,
+            time_steps=int(time_steps),
+            stages=specs,
         )
 
     def canonical(self) -> dict:
@@ -159,11 +259,19 @@ class PlanRequest:
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlanRequest":
+        offs = tuple(tuple(_int_tuple(o) for o in g) for g in d["offsets"])
+        time_steps = int(d.get("time_steps", 1))
+        if d.get("stages") is not None:
+            stages = tuple(StageSpec.from_dict(s) for s in d["stages"])
+        elif len(offs) == 1:
+            # v1/v2 dicts predate the stages field: derive the canonical
+            # repeated chain (their cache keys are stale either way).
+            stages = (StageSpec(offsets=offs[0]),) * time_steps
+        else:
+            stages = ()
         return cls(
             shape=_int_tuple(d["shape"]),
-            offsets=tuple(
-                tuple(_int_tuple(o) for o in g) for g in d["offsets"]
-            ),
+            offsets=offs,
             dtype_bytes=int(d["dtype_bytes"]),
             vmem_budget=int(d["vmem_budget"]),
             n_operands=int(d["n_operands"]),
@@ -172,7 +280,8 @@ class PlanRequest:
             pipelined=bool(d["pipelined"]),
             strategy=str(d["strategy"]),
             max_pad=int(d["max_pad"]),
-            time_steps=int(d.get("time_steps", 1)),
+            time_steps=time_steps,
+            stages=stages,
         )
 
 
@@ -272,6 +381,14 @@ class StencilPlan:
     chain, and ``single_pass_traffic_bytes`` records what the planner's own
     best depth-1 choice would have cost — the fused plan is only ever
     emitted when it wins that comparison.
+
+    Stage chains + streaming frontiers (DESIGN.md §9): ``modeled_flops``
+    prices the executed streaming-frontier kernel for the whole chain,
+    ``recompute_flops`` what the §8 recompute trapezoid would have cost at
+    identical traffic — their ratio is the flops the streaming path gives
+    back.  ``depth_scores`` is the planner's per-depth score table,
+    ``(depth, chain traffic bytes, chain streaming flops)`` rows for every
+    feasible fusion depth (the row with ``depth == fused_depth`` won).
     """
 
     request: PlanRequest
@@ -292,6 +409,9 @@ class StencilPlan:
     time_steps: int = 1
     fused_depth: int = 1
     single_pass_traffic_bytes: int = 0       # 0 only in legacy v1 dicts
+    modeled_flops: int = 0                   # streaming-frontier chain flops
+    recompute_flops: int = 0                 # §8 recompute-trapezoid flops
+    depth_scores: tuple[tuple[int, int, int], ...] = ()
     version: int = PLANNER_VERSION
 
     @property
@@ -304,6 +424,12 @@ class StencilPlan:
         """Fused / own-single-pass modeled traffic — ≤ 1 by construction
         (depth 1 is always in the planner's candidate set)."""
         return self.traffic_bytes / max(self.single_pass_traffic_bytes, 1)
+
+    @property
+    def flops_vs_recompute(self) -> float:
+        """Streaming / recompute modeled flops — ≤ 1 by construction (the
+        streaming kernel computes a subset of the recompute extents)."""
+        return self.modeled_flops / max(self.recompute_flops, 1)
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -339,6 +465,12 @@ class StencilPlan:
             single_pass_traffic_bytes=int(
                 d.get("single_pass_traffic_bytes", d["traffic_bytes"])
             ),
+            modeled_flops=int(d.get("modeled_flops", 0)),
+            recompute_flops=int(d.get("recompute_flops", 0)),
+            depth_scores=tuple(
+                (int(r[0]), int(r[1]), int(r[2]))
+                for r in d.get("depth_scores", ())
+            ),
             version=int(d.get("version", PLANNER_VERSION)),
         )
 
@@ -362,15 +494,18 @@ def validate_plan_call(
     offsets,
     dtype_bytes: int,
     time_steps: int = 1,
+    stages: Sequence | None = None,
 ) -> None:
     """Raise :class:`PlanMismatchError` unless ``plan`` was compiled for
     exactly this call: same grid shape, same canonicalized offset groups,
-    same element width, same requested step count.
+    same element width, same requested step count, and — when the call
+    runs a stage chain — the same per-stage operator offsets.
 
     Budget/strategy knobs are deliberately *not* checked — a plan compiled
     under a custom VMEM budget is still a valid (if different) answer for
-    the same computation; shape/offsets/dtype/time_steps are what change
-    the computation itself.
+    the same computation; shape/offsets/dtype/time_steps/stages are what
+    change the computation itself.  Per-stage *weights* are also not
+    checked: they scale values, never the halo geometry the plan encodes.
     """
     req = plan.request
     shape = _int_tuple(shape)
@@ -391,6 +526,16 @@ def validate_plan_call(
         mismatches.append(
             f"time_steps: plan {req.time_steps} vs call {int(time_steps)}"
         )
+    if stages is not None:
+        call_stages = tuple(
+            StageSpec.make(s, len(shape)).offsets for s in stages
+        )
+        plan_stages = tuple(st.offsets for st in req.stages)
+        if plan_stages != call_stages:
+            mismatches.append(
+                f"stages: plan has {len(plan_stages)} stage(s) "
+                f"{plan_stages} vs call {call_stages}"
+            )
     if mismatches:
         raise PlanMismatchError(
             "StencilPlan does not match this call (plan request key "

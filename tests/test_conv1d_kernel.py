@@ -31,3 +31,34 @@ def test_causality():
     o0 = causal_conv1d(x0, cw, cb, tile_s=16)
     o1 = causal_conv1d(x1, cw, cb, tile_s=16)
     np.testing.assert_allclose(o0[:, :20], o1[:, :20], atol=1e-6)
+
+
+@pytest.mark.parametrize("b,s,c,w", [
+    (2, 101, 8, 4),   # prime length: planner tile forces the round-up path
+    (1, 45, 16, 3),
+])
+def test_vjp_planner_chosen_tiles_nondivisible(b, s, c, w):
+    """Forward/backward parity under planner-chosen tiles (tile_s=None)
+    on lengths the tile does not divide — the custom VJP must agree with
+    the reference gradient through the pad/crop round-trip."""
+    x = jax.random.normal(KEY, (b, s, c), jnp.float32)
+    cw = jax.random.normal(jax.random.PRNGKey(1), (w, c), jnp.float32) * 0.3
+    cb = jax.random.normal(jax.random.PRNGKey(2), (c,), jnp.float32) * 0.1
+    g = jax.random.normal(jax.random.PRNGKey(3), (b, s, c), jnp.float32)
+
+    def loss_kernel(x, cw, cb):
+        return (causal_conv1d(x, cw, cb, tile_s=None) * g).sum()
+
+    def loss_ref(x, cw, cb):
+        ref, _ = _causal_conv(x, cw, cb, None)
+        return (ref * g).sum()
+
+    np.testing.assert_allclose(
+        float(loss_kernel(x, cw, cb)), float(loss_ref(x, cw, cb)), rtol=1e-4)
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, cw, cb)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, cw, cb)
+    for got, want, name in zip(gk, gr, ("dx", "dw", "db")):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4,
+            err_msg=name,
+        )

@@ -95,6 +95,32 @@ def test_wrong_key_content_rejected(tmp_path):
     assert cold.stats["corrupt"] == 1
 
 
+def test_v2_schema_entry_reinvalidated(tmp_path):
+    """A v2-era on-disk entry (predating stage chains: no ``stages``, no
+    flop fields, version 2) must be re-planned cleanly, never crashed on
+    or served — even if it sits under the new key's filename."""
+    cache = PlanCache(cache_dir=str(tmp_path))
+    planner = Planner(cache=cache)
+    req = _request()
+    plan = planner.plan(req)
+    key = req.cache_key()
+    d = plan.to_dict()
+    d["version"] = 2
+    d["request"].pop("stages")
+    for f in ("modeled_flops", "recompute_flops", "depth_scores"):
+        d.pop(f)
+    path = os.path.join(str(tmp_path), f"{key}.json")
+    with open(path, "w") as fh:
+        json.dump(d, fh)
+    cold = PlanCache(cache_dir=str(tmp_path))
+    assert cold.get(key) is None             # stale schema: never served
+    assert cold.stats["corrupt"] == 1
+    assert not os.path.exists(path)          # dropped, not left to rot
+    replanned = Planner(cache=cold).plan(req)  # clean re-plan...
+    assert replanned == plan
+    assert PlanCache(cache_dir=str(tmp_path)).get(key) == plan  # ...healed
+
+
 def test_lru_eviction_falls_back_to_disk(tmp_path):
     cache = PlanCache(cache_dir=str(tmp_path), capacity=2)
     planner = Planner(cache=cache)
