@@ -1,8 +1,30 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.  Keep this module jax-free:
+:func:`force_cpu_devices` must run before the first jax import."""
 from __future__ import annotations
 
 import json
+import os
+import sys
 import time
+
+
+def force_cpu_devices(n: int = 4) -> None:
+    """The §10 sharding parity gates need a multi-device CPU mesh, and the
+    host platform's device count is fixed at first jax import — call this
+    before any benchmark module pulls jax in (harmless on real TPUs; it
+    only affects the host platform).  A device count the user already
+    set in XLA_FLAGS wins — XLA honors the *last* duplicate flag, so
+    appending ours would silently override theirs.  tests/conftest.py
+    carries its own copy so test collection never depends on this
+    package being importable."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if (
+        "jax" not in sys.modules
+        and "--xla_force_host_platform_device_count" not in flags
+    ):
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

@@ -2,22 +2,26 @@
 
 Prints ``name,us_per_call,derived`` CSV per benchmark (spec format).
 ``--full`` runs paper-scale sweeps; default is the quick CI-sized pass.
-``--json [PATH]`` runs only the PR-tracked stage-chain record (which
-embeds the PR3 temporal-fusion record, which embeds PR2's, which embeds
-PR1's) and writes it to PATH (default: ``BENCH_PR4.json`` at the repo
-root) — the perf trajectory artifact scripts/ci.sh checks on every PR.
+``--json [PATH]`` runs only the PR-tracked shard-columns record (which
+embeds the PR4 stage-chain record, which embeds PR3's, which embeds
+PR2's, which embeds PR1's) and writes it to PATH (default:
+``BENCH_PR5.json`` at the repo root) — the perf trajectory artifact
+scripts/ci.sh checks on every PR.
 """
 from __future__ import annotations
 
 import os
 import sys
 
+from .common import force_cpu_devices
+
 
 def main() -> None:
     argv = sys.argv[1:]
     quick = "--full" not in argv
+    force_cpu_devices()
     if "--json" in argv:
-        from . import stage_chain
+        from . import shard_columns
         from .common import gates_ok
 
         i = argv.index("--json")
@@ -26,17 +30,19 @@ def main() -> None:
         else:
             path = os.path.join(
                 os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                "BENCH_PR4.json",
+                "BENCH_PR5.json",
             )
-        report = stage_chain.main(quick, json_path=path)
+        report = shard_columns.main(quick, json_path=path)
         ok = report["acceptance"]
         print(
-            f"wrote {path}: streaming flop cut "
-            f"x{ok['achieved_flop_reduction_vmem']:.2f} "
-            f"(ok={ok['flop_reduction_ok']}) "
-            f"bitwise={ok['bitwise_vs_engine_iter']} "
-            f"pr3[traffic_ok={ok['pr3_fused_traffic_ok']} "
-            f"le_single={ok['pr3_fused_le_single_ok']}] "
+            f"wrote {path}: per-core scaling eff@8 "
+            f"{ok['achieved_parallel_efficiency_s8']:.3f} "
+            f"(ok={ok['scaling_ok']}) "
+            f"sharded_bitwise={ok['sharded_bitwise_ok']} "
+            f"one_shard_identical={ok['one_shard_plan_identical']} "
+            f"pr4[flops_ok={ok['pr4_flop_reduction_ok']} "
+            f"bitwise={ok['pr4_bitwise_vs_engine_iter']}] "
+            f"pr3[traffic_ok={ok['pr3_fused_traffic_ok']}] "
             f"pr2[planned<=legacy={ok['pr2_planned_le_legacy_ok']}] "
             f"pr1[traffic={ok['pr1_traffic_ok']}]"
         )
@@ -45,20 +51,21 @@ def main() -> None:
         return
     from . import (
         bounds_table, fig4_miss_reduction, fig5_unfavorable,
-        padding_effect, planner_traffic, roofline_report, stage_chain,
-        sweep_traffic, temporal_fusion, tpu_tiling,
+        padding_effect, planner_traffic, roofline_report, shard_columns,
+        stage_chain, sweep_traffic, temporal_fusion, tpu_tiling,
     )
     fig4_miss_reduction.main(quick)
     fig5_unfavorable.main(quick)
     bounds_table.main(quick)
     padding_effect.main(quick)
     tpu_tiling.main(quick)
-    # The PR records nest (PR4 ⊃ PR3 ⊃ PR2 ⊃ PR1); build each once and
-    # pass the embedded reports down instead of re-deriving them per level.
+    # The PR records nest (PR5 ⊃ PR4 ⊃ PR3 ⊃ PR2 ⊃ PR1); build each once
+    # and pass the embedded reports down instead of re-deriving per level.
     pr1 = sweep_traffic.main(quick)
     pr2 = planner_traffic.main(quick, pr1=pr1)
     pr3 = temporal_fusion.main(quick, pr2=pr2)
-    stage_chain.main(quick, pr3=pr3)
+    pr4 = stage_chain.main(quick, pr3=pr3)
+    shard_columns.main(quick, pr4=pr4)
     roofline_report.main(quick)
 
 

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Docs-rot gate: every repo module referenced in the documentation exists.
+
+Scans README.md, DESIGN.md and docs/*.md for backticked references that
+look like repo paths (``core/tiling.py``, ``src/repro/plan/schema.py``,
+``benchmarks/shard_columns.py``) or importable module dotpaths
+(``repro.plan.explain``) and fails if any named file cannot be resolved —
+the cheap guard against documentation drifting from renamed/removed
+modules.  Run by scripts/ci.sh.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+DOC_FILES = [ROOT / "README.md", ROOT / "DESIGN.md"]
+DOC_FILES += sorted((ROOT / "docs").glob("*.md")) if (ROOT / "docs").is_dir() else []
+
+# Roots a bare ``pkg/module.py`` reference may live under.
+SEARCH_ROOTS = ["", "src/", "src/repro/", "docs/"]
+
+
+def resolve_path(token: str) -> bool:
+    token = token.strip().lstrip("./")
+    return any((ROOT / base / token).exists() for base in SEARCH_ROOTS)
+
+
+def resolve_module(dotted: str) -> bool:
+    # Accept `repro.plan.Planner` (module + attribute): some prefix of
+    # the dotted path must name a real module or package.
+    parts = dotted.split(".")
+    for end in range(len(parts), 0, -1):
+        rel = "/".join(parts[:end])
+        if any(
+            (ROOT / "src" / (rel + suffix)).exists()
+            for suffix in (".py", "/__init__.py")
+        ):
+            return True
+    return False
+
+
+def main() -> int:
+    missing: list[tuple[str, str]] = []
+    checked = 0
+    for doc in DOC_FILES:
+        if not doc.exists():
+            missing.append((str(doc.relative_to(ROOT)), "<file itself>"))
+            continue
+        text = doc.read_text()
+        for span in re.findall(r"`([^`\n]+)`", text):
+            span = span.strip()
+            # path-like: contains a slash and names a .py/.sh/.md/.json file
+            # or a src/repro-rooted path
+            m = re.match(r"^[\w./-]+\.(py|sh|md|json)$", span)
+            if m and "/" in span:
+                checked += 1
+                if not resolve_path(span):
+                    missing.append((doc.name, span))
+                continue
+            # module dotpath: repro.x[.y] (with or without `python -m`)
+            dm = re.match(r"^(?:python -m )?(repro(?:\.\w+)+)", span)
+            if dm:
+                checked += 1
+                if not resolve_module(dm.group(1)):
+                    missing.append((doc.name, span))
+    if missing:
+        print("check_docs: dangling documentation references:")
+        for doc, span in missing:
+            print(f"  {doc}: `{span}`")
+        return 1
+    print(
+        f"check_docs: {checked} module/path references across "
+        f"{len(DOC_FILES)} docs all resolve"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,17 +1,19 @@
 #!/usr/bin/env bash
-# Tier-1 CI: the full test suite, the planner smoke, and the PR-tracked
-# perf record.
+# Tier-1 CI: the full test suite, the planner smoke, the docs-rot check,
+# and the PR-tracked perf record.
 #
-#   scripts/ci.sh            # tests + planner smoke + BENCH_PR4.json
+#   scripts/ci.sh            # tests + planner smoke + docs check + BENCH_PR5.json
 #
-# The planner smoke plans 5 shapes (one Fig. 5 unfavorable grid, one
-# time_steps=3 fused plan, one two-stage heterogeneous chain) and asserts
-# the pad triggers and the planned-traffic + fused<=single-pass +
-# streaming<=recompute-flops gates hold.  The JSON pass re-derives the
-# modeled numbers checked in at BENCH_PR4.json (streaming >= 1.5x flop
-# cut at T=3 256^3 at unchanged traffic, fused-chain bitwise parity,
-# PR3/PR2/PR1 gates embedded); a drift there is a perf regression, not
-# flake.
+# The planner smoke plans 6 shapes (one Fig. 5 unfavorable grid, one
+# time_steps=3 fused plan, one two-stage heterogeneous chain, one 4-way
+# sharded request) and asserts the pad triggers and the planned-traffic +
+# fused<=single-pass + streaming<=recompute-flops + per-shard-slab gates
+# hold.  check_docs.py fails on documentation referencing renamed or
+# removed modules.  The JSON pass re-derives the modeled numbers checked
+# in at BENCH_PR5.json (>=0.85 modeled parallel efficiency at 8 shards on
+# the 256^3 star, bit-wise sharded-vs-single-device parity on a CPU mesh,
+# PR4/PR3/PR2/PR1 gates embedded); a drift there is a perf regression,
+# not flake.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,4 +21,5 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m pytest -x -q
 python -m repro.plan.explain --smoke
+python scripts/check_docs.py
 python -m benchmarks.run --json

@@ -424,6 +424,7 @@ def select_tile(
     extra_tiles: Sequence[Sequence[int]] | None = None,
     time_steps: int = 1,
     stage_halos: Sequence[Sequence[tuple[int, int]]] | None = None,
+    exclude_sweep_axis: int | None = None,
 ) -> TileChoice:
     """Pick the traffic-minimizing VMEM tile (paper §4 adapted, §5 for the
     per-operand budget split: budget/n_operands per array).
@@ -431,6 +432,12 @@ def select_tile(
     ``sweep_axis``: ``"auto"`` tries every axis with halo reuse (and the
     per-tile-halo fallback) and keeps the cheapest; an int forces that
     sweep axis; ``None`` forces the seed's per-tile-halo model.
+
+    ``exclude_sweep_axis`` (the §10 shard axis) removes one axis from the
+    ``"auto"`` enumeration — a shard sweeps within its own column slab,
+    never along the partitioned axis.  Excluding axis 0 also drops the
+    per-tile-halo fallback: the engine realizes ``sweep_axis=None`` as
+    axis-0 grid order, which would collide with the shard partition.
 
     ``extra_tiles``: additional candidate tiles scored alongside the
     default enumeration under every sweep axis — the plan compiler feeds
@@ -463,6 +470,12 @@ def select_tile(
         axes: list[int | None] = [None] + [
             i for i, n in enumerate(shape) if n > 1
         ]
+        if exclude_sweep_axis is not None:
+            axes = [
+                s for s in axes
+                if s != exclude_sweep_axis
+                and not (s is None and exclude_sweep_axis == 0)
+            ]
     else:
         axes = [sweep_axis]
     # The radius fed to the lower bound must dominate the halo: an
@@ -521,8 +534,14 @@ def select_tile(
                 sweep_axis=axis,
             )
     if best is None:
+        constraint = (
+            f" with the sweep constrained off shard axis {exclude_sweep_axis}"
+            if exclude_sweep_axis is not None
+            else ""
+        )
         raise ValueError(
             f"no tile of {shape} (halo {halo}) fits VMEM budget {budget} B"
+            + constraint
         )
     return best
 

@@ -42,6 +42,17 @@ stage by stage.
 Boundary semantics match ``kernels.ref.stencil_ref``: zero fill, via a
 host-side ``jnp.pad`` that also rounds each extent up to the tile (grids
 not divisible by the tile take this round-up path).
+
+**Multi-core sharding** (DESIGN.md §10): sweep columns are independent
+even with frontier state (each column warms its own rings at ``k == 0``),
+so the cross-axis tile columns can be partitioned over a device mesh.
+``stencil_pallas(..., num_shards=N)`` (or an explicit ``mesh=``) routes
+every launch through :mod:`repro.parallel.shard_columns`: each shard runs
+this same sweep kernel on its column slab, with halo exchange only at
+shard boundaries.  The kernel itself is shard-agnostic — it receives a
+``(d,)`` domain-offset vector in SMEM giving the true-grid coordinate of
+the local array's origin (all-zero on a single device), which keeps the
+§8/§9 intermediate-stage masks in *global* coordinates under SPMD.
 """
 
 from __future__ import annotations
@@ -102,8 +113,12 @@ def _sweep_kernel(
 ):
     """Generic d-dim, p-RHS sweep kernel, optionally stage-chain fused.
 
-    refs = (*x_hbm, out_ref, *windows, [*slabs,] *frontiers, win_sem,
-    [slab_sem]).  Each x_hbm is the whole padded array (ANY memory space);
+    refs = (dom_ref, *x_hbm, out_ref, *windows, [*slabs,] *frontiers,
+    win_sem, [slab_sem]).  ``dom_ref`` is a ``(d,)`` int32 SMEM vector:
+    the true-grid coordinate of local element ``(0, ..., 0)`` of the
+    (unpadded) array — all-zero on a single device, the shard's column
+    offset under the §10 sharded launch, so the domain masks stay global
+    under SPMD.  Each x_hbm is the whole padded array (ANY memory space);
     windows are VMEM refs of the halo'd tile (halo = the chain's summed
     cone ``lo_w``/``hi_w``); slabs are the 2-slot landing buffers for the
     double-buffered next-slab prefetch; frontiers are the ``T - 1``
@@ -119,10 +134,11 @@ def _sweep_kernel(
     p = len(offsets)
     T = 1 if stages is None else len(stages)
     cross_axes = [i for i in range(d) if i != sweep]
-    x_hbm = refs[:p]
-    out_ref = refs[p]
-    windows = refs[p + 1 : 2 * p + 1]
-    pos = 2 * p + 1
+    dom_ref = refs[0]
+    x_hbm = refs[1 : p + 1]
+    out_ref = refs[p + 1]
+    windows = refs[p + 2 : 2 * p + 2]
+    pos = 2 * p + 2
     if pipelined:
         slabs = refs[pos : pos + p]
         pos += p
@@ -256,7 +272,8 @@ def _sweep_kernel(
 
     def mask_domain(acc, starts, ext):
         """Zero everything outside the true grid (coordinates here are
-        true-grid: the domain is [0, n_true_i) per axis) — the zero-fill
+        true-grid: the domain is [0, n_true_i) per axis; ``dom_ref`` lifts
+        the local ``starts`` into that global frame) — the zero-fill
         boundary every intermediate iterate must carry."""
         inside = None
         for i in range(d):
@@ -264,7 +281,10 @@ def _sweep_kernel(
                 # No stage mixes along this axis: pad/slack stays exactly
                 # zero through every stage, so no mask is needed.
                 continue
-            posn = starts[i] + jax.lax.broadcasted_iota(jnp.int32, ext, i)
+            posn = (
+                dom_ref[i] + starts[i]
+                + jax.lax.broadcasted_iota(jnp.int32, ext, i)
+            )
             ok = (posn >= 0) & (posn < n_true[i])
             inside = ok if inside is None else inside & ok
         if inside is None:
@@ -352,31 +372,19 @@ def _sweep_kernel(
             streaming_step()
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "offsets_w", "tile", "sweep", "pipelined", "interpret", "stages_w",
-    ),
-)
-def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
-                  stages_w=None):
-    """us: tuple of p same-shape arrays.  offsets_w: tuple per array of
-    (offsets_tuple, weights_tuple) — hashable static spec.  ``stages_w``
-    (tuple per stage of (offsets_tuple, weights_tuple), single RHS only)
-    fuses the whole chain into this one launch: one HBM pass, T
-    applications with streaming per-stage frontiers."""
-    u0 = us[0]
-    d = u0.ndim
-    tile = tuple(int(t) for t in tile)
+def _launch_geometry(offsets_w, stages_w, tile):
+    """Static launch geometry shared by the single-device and sharded
+    paths: per-RHS offset/weight arrays, the per-stage chain (``None`` =
+    single application), and the window cone ``lo_w``/``hi_w`` — the same
+    helpers the planner prices VMEM/traffic with, so kernel geometry and
+    planned geometry cannot diverge."""
+    d = len(tile)
     if stages_w is not None:
         T = len(stages_w)
         st_offs = [np.asarray(s[0], dtype=np.int64).reshape(-1, d)
                    for s in stages_w]
         st_wts = [tuple(float(w) for w in s[1]) for s in stages_w]
         st_halos = [halo_from_offsets([o], d) for o in st_offs]
-        # Window halo: the chain's dependency cone, and per-stage suffix
-        # halos — the same helpers the planner prices VMEM/traffic with,
-        # so kernel geometry and planned geometry cannot diverge.
         cone = chain_halo(st_halos)
         lo_w = tuple(lo for lo, _ in cone)
         hi_w = tuple(hi for _, hi in cone)
@@ -408,27 +416,37 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
         halo = halo_from_offsets(offsets, d)
         lo_w = tuple(h[0] for h in halo)
         hi_w = tuple(h[1] for h in halo)
-    padded_shape = tuple(_round_up(n, t) for n, t in zip(u0.shape, tile))
-    ntiles = tuple(ps // t for ps, t in zip(padded_shape, tile))
+    return offsets, weights, stages, lo_w, hi_w
+
+
+def _padded_call(ins, dom, offsets, weights, stages, lo_w, hi_w, tile,
+                 sweep, pipelined, interpret, n_true):
+    """Run the sweep kernel over already-padded arrays and return the
+    *padded* result (``∏ ntiles_i · tile_i`` per dim, no trim).
+
+    ``ins`` carry the window halo on every dim (``lo_w_i + k_i·tile_i +
+    hi_w_i``); callers own padding and trimming so the §10 sharded launch
+    can substitute halo *exchange* for the shard-axis pad.  ``dom`` is the
+    traced ``(d,)`` int32 true-grid coordinate of local element 0 (zeros
+    on a single device) and ``n_true`` the *global* unpadded grid shape —
+    together they keep the intermediate-stage domain masks global under
+    ``shard_map``."""
+    d = len(tile)
+    p = len(ins)
+    T = 1 if stages is None else len(stages)
+    u0 = ins[0]
+    ntiles = tuple(
+        (u0.shape[i] - lo_w[i] - hi_w[i]) // tile[i] for i in range(d)
+    )
     nswp = ntiles[sweep]
     cross_axes = [i for i in range(d) if i != sweep]
     grid = tuple(ntiles[i] for i in cross_axes) + (nswp,)
     pipelined = bool(pipelined) and nswp > 1 and (lo_w[sweep] + hi_w[sweep]) > 0
 
-    ins = []
-    for u in us:
-        # zero-pad: lo halo on the low side, hi + round-up slack on the high.
-        pads = [
-            (l, h + ps - n)
-            for l, h, ps, n in zip(lo_w, hi_w, padded_shape, u.shape)
-        ]
-        ins.append(jnp.pad(u, pads))
-
     window_shape = tuple(t + l + h for t, l, h in zip(tile, lo_w, hi_w))
     slab_shape = tuple(
         tile[sweep] if i == sweep else window_shape[i] for i in range(d)
     )
-    p = len(us)
     scratch = [pltpu.VMEM(window_shape, u0.dtype) for _ in range(p)]
     if pipelined:
         scratch += [pltpu.VMEM((2,) + slab_shape, u0.dtype) for _ in range(p)]
@@ -447,23 +465,60 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
         idx[sweep] = g[-1]
         return tuple(idx)
 
-    out = pl.pallas_call(
+    return pl.pallas_call(
         functools.partial(
             _sweep_kernel, offsets, weights, lo_w, hi_w, stages, tile,
-            sweep, nswp, pipelined, tuple(int(n) for n in u0.shape),
+            sweep, nswp, pipelined, tuple(int(n) for n in n_true),
         ),
         grid=grid,
-        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY) for _ in us],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)]
+        + [pl.BlockSpec(memory_space=pltpu.ANY) for _ in ins],
         out_specs=pl.BlockSpec(tile, out_index_map),
-        out_shape=jax.ShapeDtypeStruct(padded_shape, u0.dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            tuple(k * t for k, t in zip(ntiles, tile)), u0.dtype
+        ),
         scratch_shapes=scratch,
         interpret=interpret,
-    )(*ins)
+    )(dom, *ins)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "offsets_w", "tile", "sweep", "pipelined", "interpret", "stages_w",
+    ),
+)
+def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
+                  stages_w=None):
+    """us: tuple of p same-shape arrays.  offsets_w: tuple per array of
+    (offsets_tuple, weights_tuple) — hashable static spec.  ``stages_w``
+    (tuple per stage of (offsets_tuple, weights_tuple), single RHS only)
+    fuses the whole chain into this one launch: one HBM pass, T
+    applications with streaming per-stage frontiers."""
+    u0 = us[0]
+    d = u0.ndim
+    tile = tuple(int(t) for t in tile)
+    offsets, weights, stages, lo_w, hi_w = _launch_geometry(
+        offsets_w, stages_w, tile
+    )
+    padded_shape = tuple(_round_up(n, t) for n, t in zip(u0.shape, tile))
+    ins = []
+    for u in us:
+        # zero-pad: lo halo on the low side, hi + round-up slack on the high.
+        pads = [
+            (l, h + ps - n)
+            for l, h, ps, n in zip(lo_w, hi_w, padded_shape, u.shape)
+        ]
+        ins.append(jnp.pad(u, pads))
+    out = _padded_call(
+        ins, jnp.zeros((d,), jnp.int32), offsets, weights, stages, lo_w,
+        hi_w, tile, sweep, pipelined, interpret, u0.shape,
+    )
     return out[tuple(slice(0, n) for n in u0.shape)]
 
 
 def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None,
-               time_steps=1, stages=None):
+               time_steps=1, stages=None, num_shards=1):
     """Tile decision for an un-planned call: a thin wrapper over the plan
     compiler (``repro.plan``), whose persistent cache makes repeated shapes
     — the serving case — O(1).  The old ad-hoc heuristic survives as
@@ -482,6 +537,7 @@ def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None,
         dtype_bytes=dtype_bytes,
         vmem_budget=vmem_budget,
         n_operands=n_arrays + 1,  # p inputs + the output tile (§5 split)
+        num_shards=int(num_shards),
     )
     if stages is not None:
         kw["stages"] = [np.asarray(o).reshape(-1, d) for o in stages]
@@ -502,6 +558,9 @@ def stencil_pallas(
     pipelined: bool = True,
     plan: "StencilPlan | None" = None,
     time_steps: int = 1,
+    num_shards: int | None = None,
+    shard_axis: int | None = None,
+    mesh=None,
 ) -> jnp.ndarray:
     """Single-array weighted stencil, zero boundary fill (matches ref).
 
@@ -512,11 +571,19 @@ def stencil_pallas(
     ``time_steps=T > 1`` applies the stencil T times (a Jacobi/RK sub-step
     chain), lowered onto the same stage-chain engine as
     ``stencil_iterate(stages=...)``: the planner picks the fusion depth,
-    or an explicit ``tile`` fuses all T steps into one launch."""
+    or an explicit ``tile`` fuses all T steps into one launch.
+
+    ``num_shards=N > 1`` (or an explicit 1-axis ``mesh``) partitions the
+    cross-axis tile columns over N devices via ``jax.shard_map``
+    (DESIGN.md §10, :mod:`repro.parallel.shard_columns`): bit-wise equal
+    to the single-device launch, with halo exchange only at shard
+    boundaries.  ``shard_axis`` picks the partitioned cross axis
+    (default: the plan's, else the cross axis with the most columns)."""
     return multi_stencil_pallas(
         [u], [offsets], [weights], tile=tile, interpret=interpret,
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
-        plan=plan, time_steps=time_steps,
+        plan=plan, time_steps=time_steps, num_shards=num_shards,
+        shard_axis=shard_axis, mesh=mesh,
     )
 
 
@@ -532,6 +599,9 @@ def stencil_iterate(
     pipelined: bool = True,
     plan: "StencilPlan | None" = None,
     stages: Sequence[tuple] | None = None,
+    num_shards: int | None = None,
+    shard_axis: int | None = None,
+    mesh=None,
 ) -> jnp.ndarray:
     """Run a stage-chain stencil program — the iterative-solver workload.
 
@@ -550,7 +620,12 @@ def stencil_iterate(
     pass via the §8/§9 trapezoid window with streaming frontiers, and the
     chain runs ``ceil(T / fused_depth)`` launches.  A fused plan is only
     ever chosen when its modeled traffic beats the planner's own
-    single-pass choice."""
+    single-pass choice.
+
+    ``num_shards``/``shard_axis``/``mesh`` shard every launch of the
+    chain over cross-axis tile columns (DESIGN.md §10) — frontier rings
+    are per-column state, so the fused streaming launch shards exactly
+    like the single application."""
     if stages is not None:
         if offsets is not None or weights is not None:
             raise ValueError("pass (offsets, weights) or stages, not both")
@@ -562,6 +637,7 @@ def stencil_iterate(
             [u], None, None, tile=tile, interpret=interpret,
             vmem_budget=vmem_budget, sweep_axis=sweep_axis,
             pipelined=pipelined, plan=plan, stages=stages,
+            num_shards=num_shards, shard_axis=shard_axis, mesh=mesh,
         )
     if offsets is None or weights is None or time_steps is None:
         raise ValueError(
@@ -570,7 +646,8 @@ def stencil_iterate(
     return multi_stencil_pallas(
         [u], [offsets], [weights], tile=tile, interpret=interpret,
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
-        plan=plan, time_steps=time_steps,
+        plan=plan, time_steps=time_steps, num_shards=num_shards,
+        shard_axis=shard_axis, mesh=mesh,
     )
 
 
@@ -586,6 +663,9 @@ def multi_stencil_pallas(
     plan: "StencilPlan | None" = None,
     time_steps: int = 1,
     stages: Sequence[tuple] | None = None,
+    num_shards: int | None = None,
+    shard_axis: int | None = None,
+    mesh=None,
 ) -> jnp.ndarray:
     """p-RHS stencil  q = Σ_p K_p u_p  (paper §5): one VMEM budget split
     across p operand windows plus the output tile, one shared sweep.
@@ -601,7 +681,12 @@ def multi_stencil_pallas(
     ``stages=[(offsets, weights), ...]`` runs a chain with a distinct
     operator per stage.  Both lower onto the §8/§9 stage-chain engine:
     launches of up to ``fused_depth`` consecutive stages, one HBM pass
-    each, streaming per-stage frontiers inside."""
+    each, streaming per-stage frontiers inside.
+
+    ``num_shards``/``shard_axis``/``mesh`` resolve the same way as the
+    tile (explicit args win, then the plan, then 1 / auto) and route every
+    launch through the §10 column-sharded path; sharding is an execution
+    knob — it never changes the result (bit-wise) or the tile choice."""
     us = tuple(us)
     assert len({u.shape for u in us}) == 1, "RHS arrays must share a shape"
     d = us[0].ndim
@@ -651,6 +736,13 @@ def multi_stencil_pallas(
         else:
             chain = None
     interpret = resolve_interpret(interpret)
+    explicit_sweep = sweep_axis is not None
+    explicit_shard = shard_axis is not None
+    if num_shards is None:
+        if mesh is not None:
+            num_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        elif plan is not None:
+            num_shards = plan.num_shards
     depth = None
     if plan is not None:
         from repro.plan import validate_plan_call
@@ -667,6 +759,8 @@ def multi_stencil_pallas(
             tile = plan.tile
         if sweep_axis is None:
             sweep_axis = plan.sweep_axis
+        if shard_axis is None:
+            shard_axis = plan.shard_axis
         pipelined = pipelined and plan.pipelined
         depth = plan.fused_depth
     elif tile is None:
@@ -676,10 +770,13 @@ def multi_stencil_pallas(
             stages=(
                 [offs for offs, _ in chain] if chain is not None else None
             ),
+            num_shards=num_shards or 1,
         )
         tile = choice.tile
         if sweep_axis is None:
             sweep_axis = choice.sweep_axis
+        if shard_axis is None:
+            shard_axis = choice.shard_axis
         depth = choice.fused_depth
     if sweep_axis is None:
         sweep_axis = 0
@@ -688,6 +785,40 @@ def multi_stencil_pallas(
     tile = tuple(int(t) for t in tile)
     sweep_axis = int(sweep_axis)
     pipelined = bool(pipelined)
+    num_shards = 1 if num_shards is None else int(num_shards)
+
+    if (
+        (num_shards > 1 or mesh is not None)
+        and shard_axis is not None
+        and int(shard_axis) == sweep_axis
+        and explicit_shard != explicit_sweep
+    ):
+        # Exactly one of the two axes was pinned by the caller and the
+        # planner's independent choice of the other collided with it: the
+        # explicit pin wins — re-derive the free axis instead of refusing
+        # a feasible call.
+        if explicit_shard:
+            ncols = {
+                i: -(-us[0].shape[i] // tile[i])
+                for i in range(d)
+                if i != int(shard_axis)
+            }
+            if not ncols:  # 1-d grid: let the launcher raise its error
+                ncols = {sweep_axis: 1}
+            sweep_axis = max(ncols, key=lambda i: (ncols[i], -i))
+        else:
+            from repro.parallel.shard_columns import pick_shard_axis
+
+            shard_axis = pick_shard_axis(us[0].shape, tile, sweep_axis)
+
+    if num_shards > 1 or mesh is not None:
+        from repro.parallel.shard_columns import column_launcher
+
+        launcher = column_launcher(
+            num_shards=num_shards, shard_axis=shard_axis, mesh=mesh,
+        )
+    else:
+        launcher = _stencil_call
 
     def static_spec(op):
         offs, wts = op
@@ -698,7 +829,7 @@ def multi_stencil_pallas(
             static_spec((o, tuple(float(w) for w in ws)))
             for o, ws in zip(offsets_list, weights_list)
         )
-        return _stencil_call(
+        return launcher(
             us, offsets_w, tile, sweep_axis, pipelined, interpret,
         )
     arrays = us
@@ -707,12 +838,12 @@ def multi_stencil_pallas(
         run = chain[pos : pos + int(depth)]
         pos += len(run)
         if len(run) == 1:
-            result = _stencil_call(
+            result = launcher(
                 arrays, (static_spec(run[0]),), tile, sweep_axis, pipelined,
                 interpret,
             )
         else:
-            result = _stencil_call(
+            result = launcher(
                 arrays, (static_spec(run[0]),), tile, sweep_axis, pipelined,
                 interpret, stages_w=tuple(static_spec(op) for op in run),
             )

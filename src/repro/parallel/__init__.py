@@ -1,3 +1,8 @@
+from .shard_columns import (  # noqa: F401
+    column_launcher,
+    pick_shard_axis,
+    sharded_stencil_call,
+)
 from .sharding import (  # noqa: F401
     LOGICAL_RULES,
     ParamSpec,

@@ -1,0 +1,216 @@
+"""Column-sharded stencil launches: ``jax.shard_map`` over sweep columns.
+
+Implements DESIGN.md §10.  The paper's cache-fitting decomposition makes
+cross-axis tile columns independent by construction, and the §9 frontier
+rings keep them that way (each sweep column warms its own rings at
+``k == 0``), so the sweep engine parallelizes over cores by *partitioning
+columns*, not by changing the kernel: this module splits one cross axis
+of the grid over a 1-axis device mesh, runs the unmodified
+:func:`repro.kernels.stencil._padded_call` sweep kernel on each shard's
+column slab, and exchanges only the shard-boundary halos.
+
+Mechanics, per launch of a (possibly stage-fused) stencil program:
+
+* **Partition**: the shard axis ``a`` is a cross axis (never the sweep
+  axis).  Columns are rounded up so every shard owns ``k`` whole tile
+  columns (``C = k·tile_a`` rows) and the chain's dependency cone along
+  ``a`` fits inside one neighbor (``C ≥ max(lo_a, hi_a)``); round-up
+  slack computes zeros and is trimmed, exactly like the single-device
+  pad path, so non-divisible column counts need no special casing.
+* **Halo exchange**: each shard ``ppermute``s its trailing ``lo_a`` rows
+  to the next shard and its leading ``hi_a`` rows to the previous one —
+  the only cross-device traffic.  Mesh-edge shards receive ``ppermute``'s
+  zero fill, which is bit-identical to the zero pad the single-device
+  launch reads there, so the sharded result equals the single-device
+  result **bit-wise** (same windows, same f32 accumulation order).
+* **Global masks**: the §8/§9 intermediate-stage domain masks need
+  true-grid coordinates; each shard passes its column offset
+  (``axis_index · C``) into the kernel's SMEM domain-offset vector, so
+  the one SPMD trace masks correctly on every shard.
+
+The planner prices this decomposition (plan schema v4:
+``PlanRequest.num_shards``, ``StencilPlan.shard_axis`` /
+``per_shard_traffic_bytes`` / ``halo_exchange_bytes``); the kernel
+frontends (``stencil_pallas(num_shards=...)``) route launches here.
+"""
+
+from __future__ import annotations
+
+import functools
+from math import prod
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["column_launcher", "pick_shard_axis", "sharded_stencil_call"]
+
+
+def pick_shard_axis(shape, tile, sweep_axis) -> int:
+    """Default shard axis: the cross axis with the most tile columns
+    (ties to the lowest index) — never the sweep axis, whose columns are
+    the unit of the engine's halo reuse, not a partitionable extent."""
+    d = len(shape)
+    cross = [i for i in range(d) if i != sweep_axis]
+    if not cross:
+        raise ValueError(
+            f"column sharding needs a cross axis: grid {tuple(shape)} has "
+            f"none besides sweep axis {sweep_axis}"
+        )
+    ncols = {i: -(-int(shape[i]) // int(tile[i])) for i in cross}
+    return max(cross, key=lambda i: (ncols[i], -i))
+
+
+def column_launcher(num_shards=None, shard_axis=None, mesh=None):
+    """A drop-in for ``kernels.stencil._stencil_call`` that runs every
+    launch column-sharded — what ``multi_stencil_pallas`` substitutes
+    when the call (or its plan) asks for more than one shard."""
+
+    def launch(us, offsets_w, tile, sweep, pipelined, interpret,
+               stages_w=None):
+        return sharded_stencil_call(
+            us, offsets_w, tile, sweep, pipelined, interpret,
+            stages_w=stages_w, num_shards=num_shards,
+            shard_axis=shard_axis, mesh=mesh,
+        )
+
+    return launch
+
+
+def sharded_stencil_call(
+    us, offsets_w, tile, sweep, pipelined, interpret, stages_w=None,
+    num_shards=None, shard_axis=None, mesh=None,
+):
+    """One column-sharded launch; signature and result match
+    ``_stencil_call`` exactly (bit-wise).  ``mesh`` must be a 1-axis
+    mesh; ``mesh=None`` builds one over the first ``num_shards`` devices
+    (:func:`repro.launch.mesh.make_column_mesh`).  A 1-shard request
+    falls back to the plain single-device call."""
+    from repro.kernels.stencil import _stencil_call
+
+    us = tuple(us)
+    u0 = us[0]
+    d = u0.ndim
+    tile = tuple(int(t) for t in tile)
+    sweep = int(sweep)
+    if mesh is None:
+        num_shards = 1 if num_shards is None else int(num_shards)
+        if num_shards == 1:
+            return _stencil_call(
+                us, offsets_w, tile, sweep, pipelined, interpret,
+                stages_w=stages_w,
+            )
+        from repro.launch.mesh import make_column_mesh
+
+        mesh = make_column_mesh(num_shards)
+    else:
+        size = int(prod(mesh.shape[a] for a in mesh.axis_names))
+        if num_shards is not None and int(num_shards) != size:
+            raise ValueError(
+                f"num_shards={num_shards} contradicts mesh of {size} devices"
+            )
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"column sharding wants a 1-axis mesh, got axes "
+                f"{mesh.axis_names}"
+            )
+        if size == 1:
+            return _stencil_call(
+                us, offsets_w, tile, sweep, pipelined, interpret,
+                stages_w=stages_w,
+            )
+    if shard_axis is None:
+        shard_axis = pick_shard_axis(u0.shape, tile, sweep)
+    a = int(shard_axis)
+    if not 0 <= a < d:
+        raise ValueError(f"shard_axis {a} out of range for {d}-d grid")
+    if a == sweep:
+        raise ValueError(
+            f"shard_axis {a} is the sweep axis: columns are partitioned "
+            "across the sweep, not along it"
+        )
+    run = _build_sharded(
+        mesh, a, tile, sweep, bool(pipelined), bool(interpret), offsets_w,
+        stages_w, tuple(int(n) for n in u0.shape), str(u0.dtype), len(us),
+    )
+    return run(*us)
+
+
+@functools.lru_cache(maxsize=128)
+def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
+                   stages_w, shape, dtype, p):
+    """Build (and cache) the jitted shard_map'd launch for one static
+    configuration — meshes and the offset/stage specs are hashable, so
+    repeated shapes re-enter the compiled function directly."""
+    from repro.kernels.stencil import (
+        _launch_geometry,
+        _padded_call,
+        _round_up,
+    )
+
+    del dtype  # part of the cache key only (shapes close over `pads`)
+    d = len(shape)
+    axis_name = mesh.axis_names[0]
+    S = int(mesh.shape[axis_name])
+    offsets, weights, stages, lo_w, hi_w = _launch_geometry(
+        offsets_w, stages_w, tile
+    )
+    t_a = tile[a]
+    lo_a, hi_a = lo_w[a], hi_w[a]
+    ncols = -(-shape[a] // t_a)
+    # Whole columns per shard: enough to cover the columns evenly AND to
+    # contain the chain's cone within one neighbor (halo exchange is
+    # nearest-neighbor only); the round-up slack computes zeros and is
+    # trimmed, like the single-device pad path.
+    k = max(-(-ncols // S), -(-lo_a // t_a), -(-hi_a // t_a), 1)
+    C = k * t_a
+    padded = [_round_up(n, t) for n, t in zip(shape, tile)]
+    padded[a] = S * C
+    # Host pad: window halo on every dim except the shard axis, whose
+    # boundary rows come from the exchange (or its zero fill at the ends).
+    pads = [
+        (0, padded[i] - shape[i]) if i == a
+        else (lo_w[i], hi_w[i] + padded[i] - shape[i])
+        for i in range(d)
+    ]
+    fwd = [(s, s + 1) for s in range(S - 1)]
+    bwd = [(s + 1, s) for s in range(S - 1)]
+
+    def local_fn(*blocks):
+        idx = jax.lax.axis_index(axis_name)
+        locs = []
+        for b in blocks:
+            parts = []
+            if lo_a:
+                tail = jax.lax.slice_in_dim(b, C - lo_a, C, axis=a)
+                parts.append(jax.lax.ppermute(tail, axis_name, fwd))
+            parts.append(b)
+            if hi_a:
+                head = jax.lax.slice_in_dim(b, 0, hi_a, axis=a)
+                parts.append(jax.lax.ppermute(head, axis_name, bwd))
+            locs.append(
+                jnp.concatenate(parts, axis=a) if len(parts) > 1 else b
+            )
+        # The shard's column offset, in true-grid coordinates: lifts the
+        # kernel's intermediate-stage domain masks into the global frame.
+        dom = jnp.zeros((d,), jnp.int32).at[a].set(
+            idx.astype(jnp.int32) * C
+        )
+        return _padded_call(
+            locs, dom, offsets, weights, stages, lo_w, hi_w, tile, sweep,
+            pipelined, interpret, shape,
+        )
+
+    spec = P(*[axis_name if i == a else None for i in range(d)])
+    sharded = shard_map(
+        local_fn, mesh=mesh, in_specs=(spec,) * p, out_specs=spec,
+        check_rep=False,
+    )
+
+    def run(*arrays):
+        ins = [jnp.pad(u, pads) for u in arrays]
+        out = sharded(*ins)
+        return out[tuple(slice(0, n) for n in shape)]
+
+    return jax.jit(run)

@@ -1,15 +1,21 @@
 """Logical-axis sharding: one place that maps model dims to mesh axes.
 
-Every parameter/activation dim carries a *logical* name; a rule table maps
-names to mesh axes.  The same model code therefore runs on the single-pod
-(data, model) mesh, the multi-pod (pod, data, model) mesh, and the 1-device
-CPU test mesh — only the rules change.  This is the DP/FSDP/TP/EP/SP switch
-board (DESIGN.md §6).
+Implements the model-parallel half of DESIGN.md §6: every parameter/
+activation dim carries a *logical* name; a rule table maps names to mesh
+axes.  The same model code therefore runs on the single-pod (data, model)
+mesh, the multi-pod (pod, data, model) mesh, and the 1-device CPU test
+mesh (all built by :mod:`repro.launch.mesh`) — only the rules change.
+This is the DP/FSDP/TP/EP/SP switch board.
 
 Dims whose extent does not divide the assigned mesh axes fall back to
 replication *after consulting the paper's padding advisor* — unfavorable
 dims (paper §6) should instead be padded upstream in the config; we log
 them loudly.
+
+This module shards *models* by named axis rules.  Stencil grids shard
+differently — by partitioning sweep columns over a 1-axis mesh with
+explicit halo exchange (DESIGN.md §10) — and that lives in its sibling
+:mod:`repro.parallel.shard_columns`.
 """
 
 from __future__ import annotations

@@ -6,12 +6,17 @@ reduction, shortest vector, why a pad was (not) chosen, the winning tile
 table (modeled chain traffic + streaming flops per candidate fusion
 depth), and the predicted traffic against the legacy heuristic, the
 planner's own single-pass choice, and the isoperimetric lower bound.
-``--smoke`` runs the CI gate: five shapes (one unfavorable, one
-``time_steps=3`` fused, one two-stage heterogeneous chain), asserting the
-pad triggers, the planner never predicts more traffic than the legacy
-heuristic, a fused plan never predicts more traffic than its own
-single-pass choice, and the streaming-frontier path never models more
-flops than the recompute trapezoid.
+``--num-shards N`` plans the §10 column-sharded launch (per-shard
+figures + halo-exchange bytes).  ``--smoke`` runs the CI gate: six
+shapes (one unfavorable, one ``time_steps=3`` fused, one two-stage
+heterogeneous chain, one 4-way sharded), asserting the pad triggers, the
+planner never predicts more traffic than the legacy heuristic, a fused
+plan never predicts more traffic than its own single-pass choice, the
+streaming-frontier path never models more flops than the recompute
+trapezoid, and a shard's slab moves well under the whole-grid bytes.
+
+The full CLI reference (flags, the per-depth score table, a captured
+transcript) lives in ``docs/plan_explain.md``.
 """
 
 from __future__ import annotations
@@ -97,6 +102,14 @@ def format_plan(plan: StencilPlan, validation: dict | None = None) -> str:
             f"{plan.fused_depth} ({n_launch} launch(es); §9 streaming "
             f"trapezoid frontiers)"
         )
+    if plan.num_shards > 1:
+        lines.append(
+            f"  sharding: {plan.num_shards} shards over axis "
+            f"{plan.shard_axis} (mesh axis {req.mesh_axis!r}); per-shard "
+            f"traffic {_fmt_bytes(plan.per_shard_traffic_bytes)}, halo "
+            f"exchange {_fmt_bytes(plan.halo_exchange_bytes)} "
+            "(§10 column sharding — all figures below are per shard)"
+        )
     if len(plan.depth_scores) > 1:
         lines.append("  fused-depth scores (whole chain, modeled):")
         lines.append("    depth        traffic     flops(streaming)  chosen")
@@ -147,12 +160,14 @@ def format_plan(plan: StencilPlan, validation: dict | None = None) -> str:
 
 
 def smoke() -> int:
-    """CI gate: plan 5 shapes (one unfavorable, one T=3 fused, one
-    two-stage heterogeneous chain), assert the pipeline's promises — pad
-    triggers and clears the threshold, planned traffic never exceeds the
-    legacy heuristic, a fused plan never exceeds the planner's own
-    single-pass choice, the streaming path never models more flops than
-    the recompute trapezoid, warm cache hits are O(1)."""
+    """CI gate: plan 6 shapes (one unfavorable, one T=3 fused, one
+    two-stage heterogeneous chain, one 4-way sharded), assert the
+    pipeline's promises — pad triggers and clears the threshold, planned
+    traffic never exceeds the legacy heuristic, a fused plan never
+    exceeds the planner's own single-pass choice, the streaming path
+    never models more flops than the recompute trapezoid, a sharded
+    plan's per-shard slab beats the whole grid (and 1 shard == unsharded
+    exactly), warm cache hits are O(1)."""
     import time
 
     from repro.core.padding import is_unfavorable
@@ -174,6 +189,9 @@ def smoke() -> int:
         # heterogeneous per-stage halos through planning and pricing.
         ("stage_chain_2", (128, 128, 128), None, 16 << 20, True,
          [star_stencil(3, 1), star_stencil(3, 2)]),
+        # §10 column sharding: the planner tiles the worst shard's slab
+        # and must beat the unsharded whole-grid traffic per core.
+        ("sharded_4", (256, 256, 256), None, 16 << 20, True, 1),
     ]
     for name, shape, g, budget, aligned, t_steps in cases:
         kw = dict(shape=shape, geometry=g, vmem_budget=budget, aligned=aligned)
@@ -181,6 +199,8 @@ def smoke() -> int:
             kw["stages"] = t_steps
         else:
             kw.update(offsets=offs, time_steps=t_steps)
+        if name == "sharded_4":
+            kw["num_shards"] = 4
         plan = planner.plan(**kw)
         assert plan.traffic_bytes <= plan.legacy_traffic_bytes, (
             name, plan.traffic_bytes, plan.legacy_traffic_bytes)
@@ -206,6 +226,22 @@ def smoke() -> int:
             assert plan.time_steps == 2 and len(plan.request.stages) == 2
             assert len(plan.depth_scores) >= 1
             assert any(d == plan.fused_depth for d, _, _ in plan.depth_scores)
+        if name == "sharded_4":
+            base = planner.plan(**{k: v for k, v in kw.items()
+                                   if k != "num_shards"})
+            assert plan.num_shards == 4 and plan.shard_axis is not None
+            assert plan.shard_axis != (plan.sweep_axis
+                                       if plan.sweep_axis is not None else 0)
+            assert plan.halo_exchange_bytes > 0
+            assert plan.per_shard_traffic_bytes == plan.traffic_bytes
+            # The per-core win: one shard's slab must move well under the
+            # whole-grid single-device bytes (ideal = 1/4).
+            assert plan.per_shard_traffic_bytes <= base.traffic_bytes / 2, (
+                plan.per_shard_traffic_bytes, base.traffic_bytes)
+            # 1-shard request == unsharded request: same canonical key.
+            one = dict(kw, num_shards=1)
+            assert planner.plan(**one) == base
+            assert plan.request.cache_key() != base.request.cache_key()
         warm = []
         for _ in range(3):  # best-of-3: absorb one-time warmup/GC noise
             t0 = time.perf_counter()
@@ -242,6 +278,8 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--dtype-bytes", type=int, default=4)
     ap.add_argument("--time-steps", type=int, default=1,
                     help="fuse T stencil applications (§8 temporal blocking)")
+    ap.add_argument("--num-shards", type=int, default=1,
+                    help="plan the §10 column-sharded launch over N cores")
     ap.add_argument("--aligned", action="store_true",
                     help="restrict tiles to lane/sublane-aligned extents")
     ap.add_argument("--legacy", action="store_true",
@@ -262,7 +300,7 @@ def main(argv: list[str] | None = None) -> int:
     plan = planner.plan(
         shape=shape, offsets=offs, dtype_bytes=args.dtype_bytes,
         vmem_budget=args.budget, geometry=geometry, aligned=args.aligned,
-        time_steps=args.time_steps,
+        time_steps=args.time_steps, num_shards=args.num_shards,
     )
     if args.json:
         print(plan.to_json())

@@ -27,6 +27,13 @@
    baseline become a frozen, serializable
    :class:`~repro.plan.schema.StencilPlan`.
 
+With ``num_shards=S > 1`` (DESIGN.md §10) step 4 runs on the *worst
+shard's column slab* — the per-core cache-fitting problem, with the
+sweep constrained off the shard axis — so all traffic/flop fields become
+per-shard, and the plan additionally freezes the shard axis and the
+modeled halo-exchange bytes.  ``num_shards=1`` is byte-identical to an
+unsharded request.
+
 Steps 1–3 only run when the request carries a hardware ``geometry``
 (a, z, w); on an explicitly-managed memory (TPU VMEM) conflict misses do
 not exist and the pad stage is a documented no-op.
@@ -59,6 +66,7 @@ from repro.core.tiling import (
     SUBLANE,
     TileChoice,
     chain_flops,
+    chain_halo,
     fused_stage_bytes,
     halo_from_offsets,
     select_tile,
@@ -291,11 +299,30 @@ class Planner:
                     "windows have no conflict misses, padding not required"
                 ),
             )
-        work = pad.padded_shape
+        work_full = pad.padded_shape
         T = request.time_steps
         db = request.dtype_bytes
         n_ops = max(request.n_operands, 1)
         per_op_budget = request.vmem_budget // n_ops
+
+        # §10 column sharding: a sharded request tiles the *worst shard's
+        # column slab* — the per-core cache-fitting problem — with the
+        # sweep constrained off the shard axis.  The shard axis is the
+        # longest partitionable dim (most columns to split; ties to the
+        # lowest index).  With num_shards == 1 nothing changes and the
+        # plan is byte-identical to an unsharded one.
+        num_shards = request.num_shards
+        shard_axis = None
+        work = work_full
+        if num_shards > 1:
+            dims = [i for i, n in enumerate(work_full) if n > 1]
+            if not dims:
+                dims = list(range(d))
+            shard_axis = max(dims, key=lambda i: (work_full[i], -i))
+            work = tuple(
+                max(-(-n // num_shards), 1) if i == shard_axis else n
+                for i, n in enumerate(work_full)
+            )
 
         def tiled(depth: int, extras=None) -> TileChoice:
             """Tile for one launch: depth 1 scores the per-application
@@ -317,6 +344,7 @@ class Planner:
                 extra_tiles=extras,
                 time_steps=1 if launch is not None else depth,
                 stage_halos=launch,
+                exclude_sweep_axis=shard_axis,
             )
 
         def price_chain(depth: int, c: TileChoice):
@@ -327,7 +355,9 @@ class Planner:
             its own (shorter) run, not with the tile a standalone plan
             would pick.  Returns None when some launch's window + staged
             buffers outgrow VMEM with this tile (heterogeneous chains can
-            put their largest halos in a later run)."""
+            put their largest halos in a later run).  (Under §10 sharding
+            ``work`` is already the shard's column slab, so every figure
+            here is per-shard.)"""
             if stage_halos is None:
                 fl = chain_flops(
                     work, c.tile, stage_points, [halo], c.sweep_axis,
@@ -424,13 +454,45 @@ class Planner:
             legacy_priced[0] if legacy_priced is not None
             else T * legacy.traffic_bytes
         )
+
+        # -- §10 shard accounting: the scoring above already ran on the
+        # worst shard's column slab, so traffic_total IS the per-shard
+        # figure; what remains is the cross-device boundary exchange.
+        grid_full = tuple(
+            -(-n // t) for n, t in zip(work_full, choice.tile)
+        )
+        halo_exchange = 0
+        if num_shards > 1:
+            a = shard_axis
+            # Each of the S-1 interior boundaries moves the launch's
+            # shard-axis cone over the halo'd cross extents of the global
+            # padded grid, once per launch of the chain and once per RHS
+            # operand (the launcher exchanges every input block).
+            if stage_halos is not None:
+                launch_halos = [
+                    chain_halo(stage_halos[i : i + fused_depth])
+                    for i in range(0, T, fused_depth)
+                ]
+            else:
+                launch_halos = [halo]
+            p_rhs = max(len(request.offsets), 1)
+            for cone in launch_halos:
+                ext = prod(
+                    grid_full[i] * choice.tile[i] + cone[i][0] + cone[i][1]
+                    for i in range(d)
+                    if i != a
+                )
+                halo_exchange += (
+                    p_rhs * (num_shards - 1)
+                    * (cone[a][0] + cone[a][1]) * ext * db
+                )
         return StencilPlan(
             request=request,
             lattice=lattice,
             pad=pad,
             tile=choice.tile,
             sweep_axis=sweep,
-            grid=choice.grid,
+            grid=grid_full,
             pipelined=bool(
                 request.pipelined and sweep is not None
                 and h_s > 0 and n_sweep > 1
@@ -449,6 +511,10 @@ class Planner:
             modeled_flops=int(flops_total),
             recompute_flops=int(rflops_total),
             depth_scores=depth_scores,
+            num_shards=int(num_shards),
+            shard_axis=shard_axis,
+            per_shard_traffic_bytes=int(traffic_total),
+            halo_exchange_bytes=int(halo_exchange),
         )
 
     # -- optional exact validation ----------------------------------------

@@ -33,15 +33,17 @@ __all__ = [
     "validate_plan_call",
 ]
 
-# v3: stage chains — the request canonicalizes every temporal chain into
-# an ordered ``stages`` list (a ``time_steps=T`` single-operator request
-# becomes T repeated stages), and the plan grew the streaming-vs-recompute
-# flop fields plus the per-depth score table.  The version participates in
-# every cache key, so all v2 on-disk plans are invalidated in one stroke —
-# re-planned, never mis-parsed.
+# v4: multi-core column sharding — ``num_shards``/``mesh_axis`` joined the
+# request and the plan gained the shard decomposition (``shard_axis``,
+# worst-shard ``per_shard_traffic_bytes``, ``halo_exchange_bytes``).  The
+# version participates in every cache key, so all v3 on-disk plans are
+# invalidated in one stroke — re-planned, never mis-parsed.
+# (v3: stage chains — the request canonicalizes every temporal chain into
+# an ordered ``stages`` list, and the plan grew the streaming-vs-recompute
+# flop fields plus the per-depth score table.)
 # (v2: temporal blocking — ``time_steps`` joined the request and the plan
 # gained ``fused_depth``/``single_pass_traffic_bytes``.)
-PLANNER_VERSION = 3
+PLANNER_VERSION = 4
 
 # Default VMEM budget mirrors core.tiling (import-free to keep this module
 # pure data): half of a v5e core's VMEM.
@@ -136,6 +138,12 @@ class PlanRequest:
     explicit-chain spelling of the same computation share one cache key.
     Multi-RHS requests (``len(offsets) > 1``) cannot chain and carry an
     empty ``stages``.
+
+    ``num_shards``/``mesh_axis`` (DESIGN.md §10) ask for the column-
+    sharded launch over a ``num_shards``-device mesh axis.  Sharding
+    never changes the tile decision (the decomposition is per-column),
+    so a ``num_shards=1`` request is *the same request* — same canonical
+    dict, same cache key — as one that never mentions sharding.
     """
 
     shape: tuple[int, ...]
@@ -150,6 +158,8 @@ class PlanRequest:
     max_pad: int = 16
     time_steps: int = 1
     stages: tuple[StageSpec, ...] = ()
+    num_shards: int = 1
+    mesh_axis: str = "columns"
 
     @classmethod
     def make(
@@ -166,6 +176,8 @@ class PlanRequest:
         max_pad: int = 16,
         time_steps: int = 1,
         stages: Sequence | None = None,
+        num_shards: int = 1,
+        mesh_axis: str = "columns",
     ) -> "PlanRequest":
         """Build a canonical request.  ``offsets`` may be a single (s, d)
         offset array or a sequence of per-RHS arrays.  ``stages`` instead
@@ -221,6 +233,18 @@ class PlanRequest:
                 "stage chains (len(stages) > 1) require a single RHS; "
                 f"got {len(offs)} offset groups"
             )
+        num_shards = int(num_shards)
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        if num_shards > 1 and sum(1 for n in shape if n > 1) < 2:
+            # Needs one axis to partition AND a distinct axis to sweep;
+            # rejecting here keeps the failure mode a clear request error,
+            # not a misleading downstream no-tile-fits-budget one.
+            raise ValueError(
+                "column sharding partitions a cross axis: grid "
+                f"{shape} has fewer than 2 non-unit dims "
+                f"(num_shards={num_shards})"
+            )
         if n_operands is None:
             n_operands = len(offs) + 1  # p inputs + the output tile (§5)
         if geometry is not None:
@@ -245,11 +269,17 @@ class PlanRequest:
             max_pad=int(max_pad),
             time_steps=int(time_steps),
             stages=specs,
+            num_shards=num_shards,
+            mesh_axis=str(mesh_axis),
         )
 
     def canonical(self) -> dict:
         d = asdict(self)
         d["version"] = PLANNER_VERSION
+        # mesh_axis only names the mesh axis in reports — it never
+        # influences the decomposition, so it stays out of the cache key
+        # (requests differing only in the axis name share one plan).
+        d.pop("mesh_axis")
         return d
 
     def cache_key(self) -> str:
@@ -282,6 +312,8 @@ class PlanRequest:
             max_pad=int(d["max_pad"]),
             time_steps=time_steps,
             stages=stages,
+            num_shards=int(d.get("num_shards", 1)),
+            mesh_axis=str(d.get("mesh_axis", "columns")),
         )
 
 
@@ -389,6 +421,17 @@ class StencilPlan:
     back.  ``depth_scores`` is the planner's per-depth score table,
     ``(depth, chain traffic bytes, chain streaming flops)`` rows for every
     feasible fusion depth (the row with ``depth == fused_depth`` won).
+
+    Column sharding (DESIGN.md §10): ``num_shards`` echoes the request,
+    ``shard_axis`` is the partitioned axis (``None`` when unsharded), and
+    ``halo_exchange_bytes`` the total cross-device bytes the boundary
+    exchange moves.  A sharded request is planned as the *worst shard's
+    column slab* — the per-core cache-fitting problem, with the sweep
+    constrained off the shard axis — so for ``num_shards > 1`` every
+    traffic/flop field (and the legacy/single-pass baselines they gate
+    against) is per-shard; ``per_shard_traffic_bytes`` names that figure
+    explicitly.  ``grid`` stays the global launch grid.  A 1-shard plan
+    is byte-identical to an unsharded plan.
     """
 
     request: PlanRequest
@@ -412,6 +455,10 @@ class StencilPlan:
     modeled_flops: int = 0                   # streaming-frontier chain flops
     recompute_flops: int = 0                 # §8 recompute-trapezoid flops
     depth_scores: tuple[tuple[int, int, int], ...] = ()
+    num_shards: int = 1
+    shard_axis: int | None = None            # partitioned cross axis (§10)
+    per_shard_traffic_bytes: int = 0         # worst shard's chain traffic
+    halo_exchange_bytes: int = 0             # cross-device boundary bytes
     version: int = PLANNER_VERSION
 
     @property
@@ -471,6 +518,14 @@ class StencilPlan:
                 (int(r[0]), int(r[1]), int(r[2]))
                 for r in d.get("depth_scores", ())
             ),
+            num_shards=int(d.get("num_shards", 1)),
+            shard_axis=(
+                None if d.get("shard_axis") is None else int(d["shard_axis"])
+            ),
+            per_shard_traffic_bytes=int(
+                d.get("per_shard_traffic_bytes", d["traffic_bytes"])
+            ),
+            halo_exchange_bytes=int(d.get("halo_exchange_bytes", 0)),
             version=int(d.get("version", PLANNER_VERSION)),
         )
 
@@ -506,6 +561,9 @@ def validate_plan_call(
     the same computation; shape/offsets/dtype/time_steps/stages are what
     change the computation itself.  Per-stage *weights* are also not
     checked: they scale values, never the halo geometry the plan encodes.
+    ``num_shards`` is likewise an execution knob (§10 sharding is
+    bit-wise invariant), so a sharded plan may be executed on any shard
+    count — callers override with ``num_shards=``/``mesh=`` at the call.
     """
     req = plan.request
     shape = _int_tuple(shape)

@@ -1,3 +1,23 @@
+import os
+import sys
+
+# The §10 column-sharding parity tests need a multi-device CPU mesh, and
+# the host platform's device count is fixed at first jax import — so the
+# flag must be set here, before any test module imports jax.  A count
+# the user already set in XLA_FLAGS wins (XLA honors the last duplicate,
+# so appending would override theirs).  Everything else is device-count
+# agnostic (meshes clamp to what exists).  This mirrors
+# benchmarks/common.py::force_cpu_devices; it stays inline so test
+# collection never depends on the benchmarks package.
+_flags = os.environ.get("XLA_FLAGS", "")
+if (
+    "jax" not in sys.modules
+    and "--xla_force_host_platform_device_count" not in _flags
+):
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4"
+    ).strip()
+
 import numpy as np
 import pytest
 

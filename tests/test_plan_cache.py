@@ -121,6 +121,35 @@ def test_v2_schema_entry_reinvalidated(tmp_path):
     assert PlanCache(cache_dir=str(tmp_path)).get(key) == plan  # ...healed
 
 
+def test_v3_schema_entry_reinvalidated(tmp_path):
+    """A v3-era on-disk entry (predating column sharding: no
+    ``num_shards``/``mesh_axis`` in the request, no shard fields in the
+    plan, version 3) must be re-planned cleanly, never crashed on or
+    served — the schema-v4 mirror of the v2 regression above."""
+    cache = PlanCache(cache_dir=str(tmp_path))
+    planner = Planner(cache=cache)
+    req = _request()
+    plan = planner.plan(req)
+    key = req.cache_key()
+    d = plan.to_dict()
+    d["version"] = 3
+    for f in ("num_shards", "mesh_axis"):
+        d["request"].pop(f)
+    for f in ("num_shards", "shard_axis", "per_shard_traffic_bytes",
+              "halo_exchange_bytes"):
+        d.pop(f)
+    path = os.path.join(str(tmp_path), f"{key}.json")
+    with open(path, "w") as fh:
+        json.dump(d, fh)
+    cold = PlanCache(cache_dir=str(tmp_path))
+    assert cold.get(key) is None             # stale schema: never served
+    assert cold.stats["corrupt"] == 1
+    assert not os.path.exists(path)          # dropped, not left to rot
+    replanned = Planner(cache=cold).plan(req)  # clean re-plan...
+    assert replanned == plan
+    assert PlanCache(cache_dir=str(tmp_path)).get(key) == plan  # ...healed
+
+
 def test_lru_eviction_falls_back_to_disk(tmp_path):
     cache = PlanCache(cache_dir=str(tmp_path), capacity=2)
     planner = Planner(cache=cache)
