@@ -1,0 +1,180 @@
+"""PR-tracked perf record: the §11 measured-cost autotune loop.
+
+Emits the machine-readable ``BENCH_PR6.json`` consumed by scripts/ci.sh:
+
+* **Measured-vs-modeled table** — the paper validates its miss model by
+  direct measurement (Fig. 5: predicted vs observed on R10000); this
+  record does the same on our own engine.  For three grids — a
+  lattice-favorable and a lattice-unfavorable paper-geometry grid (the
+  Fig. 5 pair) and a fused T=3 chain — the tuner races the planner's
+  top-k candidate plans on the live backend and records each candidate's
+  modeled bytes, measured median ± IQR, achieved bandwidth, and
+  model-vs-measured ratio, plus the Spearman rank correlation between
+  the modeled ordering and the measured one (informational: on
+  interpret-mode CPU CI the "backend" is an emulator, so the correlation
+  is recorded for the trend, not gated).
+
+* **never_slower gate**: for every grid the measured winner is at least
+  as fast as the analytic choice — the analytic plan is always in the
+  raced set, so a violation means the harness is broken.
+
+* **Warm-hit gate**: after tuning, a Planner with the TunedPlanDB
+  attached serves the measured winner in < 1 ms without re-measuring.
+
+* The PR5 shard-columns record (which embeds PR4 ⊃ PR3 ⊃ PR2 ⊃ PR1)
+  rides along unchanged so the perf trajectory keeps its history.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from .common import force_cpu_devices
+
+# The embedded PR5 parity record needs a multi-device CPU mesh; claim it
+# while this module can still win the race against the first jax import.
+force_cpu_devices()
+
+from repro.core.cache_fitting import star_stencil
+from repro.plan import AutoTuner, PlanCache, Planner, TunedPlanDB
+
+from .common import emit_bench, timed
+from .timing import device_fingerprint
+from . import shard_columns
+
+RADIUS = 2
+GEOM = (2, 512, 4)  # the paper's R10000-like (a, z, w) cache model
+CASES = [
+    # (name, k, request kwargs) — favorable/unfavorable is the Fig. 5
+    # pair from the planner smoke; the third case tunes a fused chain.
+    ("favorable_64x91x60", 3, dict(
+        shape=(64, 91, 60), geometry=GEOM, vmem_budget=16 * 1024,
+        aligned=False,
+    )),
+    ("unfavorable_45x91x24", 3, dict(
+        shape=(45, 91, 24), geometry=GEOM, vmem_budget=16 * 1024,
+        aligned=False,
+    )),
+    ("fused_t3_32x64x128", 3, dict(
+        shape=(32, 64, 128), vmem_budget=4 << 20, aligned=True,
+        time_steps=3,
+    )),
+]
+
+
+def tune_cases(quick: bool = True) -> list[dict]:
+    """Race the top-k candidates for every case, then prove the warm-hit
+    contract: a tuned-DB-backed Planner serves the measured winner
+    sub-ms, without touching the backend again."""
+    db = TunedPlanDB(persistent=False)
+    tuner = AutoTuner(
+        db=db, planner=Planner(cache=PlanCache(persistent=False)),
+        reps=3 if quick else 5, warmup=1,
+    )
+    serving = Planner(cache=PlanCache(persistent=False), tuned_db=db)
+    offs = star_stencil(3, RADIUS)
+    rows = []
+    for name, k, kw in CASES:
+        tuner.k = k
+        rec, tune_us = timed(lambda: tuner.tune(offsets=offs, **kw))
+        misses_before = db.stats["misses"]
+        warm, served_tuned = [], True
+        for _ in range(3):  # best-of-3: absorb one-time warm-up noise
+            t0 = time.perf_counter()
+            p = serving.plan(offsets=offs, **kw)
+            warm.append((time.perf_counter() - t0) * 1e3)
+            served_tuned = served_tuned and serving.last_plan_tuned \
+                and p == rec.winner_plan
+        rows.append({
+            "case": name,
+            "request": {
+                kk: list(v) if isinstance(v, tuple) else v
+                for kk, v in kw.items()
+            },
+            "k": k,
+            "tune_us": tune_us,
+            "candidates": [c.to_dict() for c in rec.candidates],
+            "winner": rec.winner,
+            "analytic": rec.analytic,
+            "never_slower": rec.never_slower,
+            "speedup_vs_analytic": rec.speedup_vs_analytic,
+            "rank_correlation": rec.rank_correlation,
+            "warm_hit_ms": min(warm),
+            "warm_served_tuned": served_tuned,
+            "warm_no_remeasure": db.stats["misses"] == misses_before,
+        })
+    return rows
+
+
+def build_report(quick: bool = True, pr5: dict | None = None) -> dict:
+    """``pr5``: a pre-built PR5 shard-columns report to embed — callers
+    that already ran it (benchmarks.run's full pass) skip re-derivation."""
+    rows = tune_cases(quick)
+    if pr5 is None:
+        pr5 = shard_columns.build_report(quick)
+    ok5 = pr5["acceptance"]
+    unfav = next(r for r in rows if r["case"].startswith("unfavorable"))
+    corr = [r["rank_correlation"] for r in rows]
+    return {
+        "pr": 6,
+        "benchmark": "autotune_measured_cost",
+        "operator": f"star13_r{RADIUS}",
+        "fingerprint": device_fingerprint(),
+        "grids": [r["case"] for r in rows],
+        "measured_vs_modeled": rows,
+        "pr5_shard_columns": pr5,
+        "acceptance": {
+            "grids_measured": len(rows),
+            "grids_ok": len(rows) >= 3,
+            "includes_unfavorable": unfav is not None,
+            "never_slower_ok": all(r["never_slower"] for r in rows),
+            "required_warm_hit_ms": 1.0,
+            "achieved_warm_hit_ms": max(r["warm_hit_ms"] for r in rows),
+            "warm_hit_ok": all(
+                r["warm_hit_ms"] < 1.0 and r["warm_served_tuned"]
+                and r["warm_no_remeasure"]
+                for r in rows
+            ),
+            # Informational on interpret-mode CI (the emulator's cost
+            # surface is not HBM's); the trajectory is what matters.
+            "mean_rank_correlation": sum(corr) / len(corr),
+            "max_speedup_vs_analytic": max(
+                r["speedup_vs_analytic"] for r in rows
+            ),
+            # PR5 gates (which include PR4 ⊃ PR3 ⊃ PR2 ⊃ PR1) ride along.
+            "pr5_scaling_ok": ok5["scaling_ok"],
+            "pr5_sharded_bitwise_ok": ok5["sharded_bitwise_ok"],
+            "pr5_one_shard_plan_identical": ok5["one_shard_plan_identical"],
+            "pr4_flop_reduction_ok": ok5["pr4_flop_reduction_ok"],
+            "pr4_bitwise_vs_engine_iter": ok5["pr4_bitwise_vs_engine_iter"],
+            "pr3_fused_traffic_ok": ok5["pr3_fused_traffic_ok"],
+            "pr2_planned_le_legacy_ok": ok5["pr2_planned_le_legacy_ok"],
+            "pr1_traffic_ok": ok5["pr1_traffic_ok"],
+        },
+    }
+
+
+def main(quick: bool = True, json_path: str | None = None,
+         pr5: dict | None = None) -> dict:
+    report, us = timed(build_report, quick, pr5)
+    ok = report["acceptance"]
+    emit_bench(
+        "autotune",
+        {
+            "grids_ok": ok["grids_ok"],
+            "never_slower_ok": ok["never_slower_ok"],
+            "warm_hit_ms": ok["achieved_warm_hit_ms"],
+            "warm_hit_ok": ok["warm_hit_ok"],
+            "mean_rank_corr": ok["mean_rank_correlation"],
+            "max_speedup_x": ok["max_speedup_vs_analytic"],
+        },
+        report,
+        json_path=json_path,
+        us=us,
+    )
+    return report
+
+
+if __name__ == "__main__":
+    rep = main()
+    print(json.dumps(rep["acceptance"], indent=2))

@@ -2,11 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV per benchmark (spec format).
 ``--full`` runs paper-scale sweeps; default is the quick CI-sized pass.
-``--json [PATH]`` runs only the PR-tracked shard-columns record (which
-embeds the PR4 stage-chain record, which embeds PR3's, which embeds
-PR2's, which embeds PR1's) and writes it to PATH (default:
-``BENCH_PR5.json`` at the repo root) — the perf trajectory artifact
-scripts/ci.sh checks on every PR.
+``--json [PATH]`` runs only the PR-tracked autotune record (which embeds
+the PR5 shard-columns record, which embeds PR4's, PR3's, PR2's, and
+PR1's) and writes it to PATH (default: ``BENCH_PR6.json`` at the repo
+root) — the perf trajectory artifact scripts/ci.sh checks on every PR.
 """
 from __future__ import annotations
 
@@ -21,7 +20,7 @@ def main() -> None:
     quick = "--full" not in argv
     force_cpu_devices()
     if "--json" in argv:
-        from . import shard_columns
+        from . import autotune
         from .common import gates_ok
 
         i = argv.index("--json")
@@ -30,18 +29,19 @@ def main() -> None:
         else:
             path = os.path.join(
                 os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                "BENCH_PR5.json",
+                "BENCH_PR6.json",
             )
-        report = shard_columns.main(quick, json_path=path)
+        report = autotune.main(quick, json_path=path)
         ok = report["acceptance"]
         print(
-            f"wrote {path}: per-core scaling eff@8 "
-            f"{ok['achieved_parallel_efficiency_s8']:.3f} "
-            f"(ok={ok['scaling_ok']}) "
-            f"sharded_bitwise={ok['sharded_bitwise_ok']} "
-            f"one_shard_identical={ok['one_shard_plan_identical']} "
-            f"pr4[flops_ok={ok['pr4_flop_reduction_ok']} "
-            f"bitwise={ok['pr4_bitwise_vs_engine_iter']}] "
+            f"wrote {path}: autotune never_slower={ok['never_slower_ok']} "
+            f"warm_hit {ok['achieved_warm_hit_ms']:.3f}ms "
+            f"(ok={ok['warm_hit_ok']}) "
+            f"rank_corr {ok['mean_rank_correlation']:.2f} "
+            f"max_speedup {ok['max_speedup_vs_analytic']:.2f}x "
+            f"pr5[scaling_ok={ok['pr5_scaling_ok']} "
+            f"bitwise={ok['pr5_sharded_bitwise_ok']}] "
+            f"pr4[flops_ok={ok['pr4_flop_reduction_ok']}] "
             f"pr3[traffic_ok={ok['pr3_fused_traffic_ok']}] "
             f"pr2[planned<=legacy={ok['pr2_planned_le_legacy_ok']}] "
             f"pr1[traffic={ok['pr1_traffic_ok']}]"
@@ -50,7 +50,7 @@ def main() -> None:
             sys.exit(1)  # the perf gate IS the CI signal — fail loudly
         return
     from . import (
-        bounds_table, fig4_miss_reduction, fig5_unfavorable,
+        autotune, bounds_table, fig4_miss_reduction, fig5_unfavorable,
         padding_effect, planner_traffic, roofline_report, shard_columns,
         stage_chain, sweep_traffic, temporal_fusion, tpu_tiling,
     )
@@ -65,7 +65,8 @@ def main() -> None:
     pr2 = planner_traffic.main(quick, pr1=pr1)
     pr3 = temporal_fusion.main(quick, pr2=pr2)
     pr4 = stage_chain.main(quick, pr3=pr3)
-    shard_columns.main(quick, pr4=pr4)
+    pr5 = shard_columns.main(quick, pr4=pr4)
+    autotune.main(quick, pr5=pr5)
     roofline_report.main(quick)
 
 

@@ -38,6 +38,7 @@ from repro.kernels.stencil import stencil_iterate, stencil_pallas
 from repro.plan import PlanCache, Planner
 
 from .common import emit_bench, timed
+from .timing import device_fingerprint, measure as measure_timed
 from . import stage_chain
 
 RADIUS = 2
@@ -98,22 +99,25 @@ def measure(quick: bool = True) -> dict:
         "shard_counts": shard_counts,
         "interpret": jax.default_backend() != "tpu",
         "backend": jax.default_backend(),
+        "fingerprint": device_fingerprint(),
     }
     base = stencil_pallas(
         u, offs, weights, tile=MEASURE_TILE, sweep_axis=0,
     )
     t1 = []
     for s in shard_counts:
-        sh, us = timed(
-            lambda s=s: jax.block_until_ready(stencil_pallas(
+        def sharded(s=s):
+            return stencil_pallas(
                 u, offs, weights, tile=MEASURE_TILE, sweep_axis=0,
                 num_shards=s,
-            )),
-        )
+            )
+
+        t = measure_timed(sharded, reps=3, warmup=1)
         t1.append({
             "num_shards": s,
-            "bitwise": bool(jnp.all(sh == base)),
-            "us": us,
+            "bitwise": bool(jnp.all(sharded() == base)),
+            "us": t.median_us,
+            "iqr_us": t.iqr_s * 1e6,
         })
     out["t1_parity"] = t1
     base3 = stencil_iterate(

@@ -34,6 +34,7 @@ from repro.kernels.stencil import stencil_iterate, stencil_pallas
 from repro.plan import PlanCache, Planner
 
 from .common import emit_bench, timed
+from .timing import device_fingerprint, measure as measure_timed
 from . import temporal_fusion
 
 RADIUS = 2
@@ -93,12 +94,12 @@ def measure(quick: bool = True) -> dict:
 
     stages = [(offs, jacobi_weights(0.8)), (offs, jacobi_weights(0.5))]
     tile = (4, 8, 64)
-    fused, fused_us = timed(
-        lambda: jax.block_until_ready(
-            stencil_iterate(u, stages=stages, tile=tile, sweep_axis=0)
-        ),
-        repeats=3,
-    )
+
+    def run_fused():
+        return stencil_iterate(u, stages=stages, tile=tile, sweep_axis=0)
+
+    fused_t = measure_timed(run_fused, reps=3, warmup=1)
+    fused = run_fused()
     x = u
     for st_offs, st_w in stages:  # one engine launch per stage
         x = stencil_pallas(x, st_offs, st_w, tile=tile, sweep_axis=0)
@@ -109,11 +110,15 @@ def measure(quick: bool = True) -> dict:
         "shape": list(shape),
         "tile": list(tile),
         "stages": 2,
-        "fused_us": fused_us,
+        "fused_us": fused_t.median_us,
+        "fused_iqr_us": fused_t.iqr_s * 1e6,
+        "reps": fused_t.reps,
+        "warmup": fused_t.warmup,
         "bitwise_vs_engine_iter": bool(jnp.all(fused == x)),
         "parity_max_abs_err": float(jnp.abs(fused - r).max()),
         "interpret": jax.default_backend() != "tpu",
         "backend": jax.default_backend(),
+        "fingerprint": device_fingerprint(),
     }
 
 

@@ -27,7 +27,8 @@ import numpy as np
 from repro.kernels.ops import apply_star_2nd_order, traffic_report
 from repro.kernels.ref import star_weights_2nd_order, stencil_ref
 
-from .common import emit_bench, timed
+from .common import emit_bench
+from .timing import device_fingerprint, measure as measure_timed
 
 GRID = (256, 256, 256)
 RADIUS = 2
@@ -60,28 +61,27 @@ def measure(quick: bool = True) -> dict:
     offs, w = star_weights_2nd_order(3, RADIUS)
 
     ref_fn = jax.jit(lambda x: stencil_ref(x, offs, w))
-    jax.block_until_ready(ref_fn(u))  # compile
-    _, ref_us = timed(lambda: jax.block_until_ready(ref_fn(u)), repeats=3)
 
-    jax.block_until_ready(
-        apply_star_2nd_order(u, tile=MEASURE_TILE, sweep_axis=0)
-    )  # compile
-    out, pallas_us = timed(
-        lambda: jax.block_until_ready(
-            apply_star_2nd_order(u, tile=MEASURE_TILE, sweep_axis=0)
-        ),
-        repeats=3,
-    )
-    err = float(jnp.abs(out - ref_fn(u)).max())
+    def kernel():
+        return apply_star_2nd_order(u, tile=MEASURE_TILE, sweep_axis=0)
+
+    ref_t = measure_timed(lambda: ref_fn(u), reps=3, warmup=1)
+    pallas_t = measure_timed(kernel, reps=3, warmup=1)
+    err = float(jnp.abs(kernel() - ref_fn(u)).max())
     return {
         "shape": list(shape),
         "tile": list(MEASURE_TILE),
         "sweep_axis": 0,
-        "pallas_us": pallas_us,
-        "ref_us": ref_us,
+        "pallas_us": pallas_t.median_us,
+        "pallas_iqr_us": pallas_t.iqr_s * 1e6,
+        "ref_us": ref_t.median_us,
+        "ref_iqr_us": ref_t.iqr_s * 1e6,
+        "reps": pallas_t.reps,
+        "warmup": pallas_t.warmup,
         "parity_max_abs_err": err,
         "interpret": jax.default_backend() == "cpu",
         "backend": jax.default_backend(),
+        "fingerprint": device_fingerprint(),
     }
 
 

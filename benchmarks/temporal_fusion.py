@@ -37,6 +37,7 @@ from repro.kernels.stencil import stencil_iterate
 from repro.plan import PlanCache, Planner
 
 from .common import emit_bench, timed
+from .timing import device_fingerprint, measure as measure_timed
 from . import planner_traffic
 
 RADIUS = 2
@@ -121,21 +122,25 @@ def measure(quick: bool = True) -> dict:
 
     ref = jax.jit(ref_chain)(u)
     tile = (4, 8, 64)
-    out, fused_us = timed(
-        lambda: jax.block_until_ready(
-            stencil_iterate(u, offs, w, TIME_STEPS, tile=tile, sweep_axis=0)
-        ),
-        repeats=3,
-    )
-    err = float(jnp.abs(out - ref).max())
+
+    def fused():
+        return stencil_iterate(u, offs, w, TIME_STEPS, tile=tile,
+                               sweep_axis=0)
+
+    fused_t = measure_timed(fused, reps=3, warmup=1)
+    err = float(jnp.abs(fused() - ref).max())
     return {
         "shape": list(shape),
         "tile": list(tile),
         "time_steps": TIME_STEPS,
-        "fused_us": fused_us,
+        "fused_us": fused_t.median_us,
+        "fused_iqr_us": fused_t.iqr_s * 1e6,
+        "reps": fused_t.reps,
+        "warmup": fused_t.warmup,
         "parity_max_abs_err": err,
         "interpret": jax.default_backend() != "tpu",
         "backend": jax.default_backend(),
+        "fingerprint": device_fingerprint(),
     }
 
 

@@ -1,0 +1,22 @@
+"""Benchmark-harness timing: the one measurement methodology, shared.
+
+This is a thin re-export of :mod:`repro.runtime.timing` so every
+``BENCH_PR*.json`` emitter and the §11 autotune loop time things the same
+way — ``warmup`` un-timed calls first (jit compile excluded), every timed
+call blocked via ``jax.block_until_ready``, median-of-``reps`` with the
+IQR as the noise bar — and stamp measurements with the same
+:func:`device_fingerprint`.
+
+Import-time jax-free (``measure`` imports jax lazily), so
+``common.force_cpu_devices`` still wins the race against the first jax
+import no matter which benchmark module loads first.
+"""
+from __future__ import annotations
+
+from repro.runtime.timing import (  # noqa: F401
+    TimingResult,
+    device_fingerprint,
+    measure,
+)
+
+__all__ = ["TimingResult", "device_fingerprint", "measure"]

@@ -10,6 +10,7 @@ from repro.core.tiling import select_tile, tile_traffic_bytes
 from repro.kernels.ops import apply_star_2nd_order
 
 from .common import emit, timed
+from .timing import measure as measure_timed
 
 SHAPES = [(64, 128, 512), (128, 128, 1024), (32, 512, 512)]
 
@@ -29,7 +30,9 @@ def run():
 def main(quick: bool = True):
     rows, us = timed(run)
     u = jax.random.normal(jax.random.PRNGKey(0), (24, 40, 256), jnp.float32)
-    _, kus = timed(lambda: jax.block_until_ready(apply_star_2nd_order(u)))
+    kus = measure_timed(
+        lambda: apply_star_2nd_order(u), reps=3, warmup=1
+    ).median_us
     gain = max(r[4] for r in rows)
     eff = min(r[5] for r in rows)
     emit("tpu_tiling", kus,

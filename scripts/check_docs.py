@@ -6,7 +6,14 @@ look like repo paths (``core/tiling.py``, ``src/repro/plan/schema.py``,
 ``benchmarks/shard_columns.py``) or importable module dotpaths
 (``repro.plan.explain``) and fails if any named file cannot be resolved —
 the cheap guard against documentation drifting from renamed/removed
-modules.  Run by scripts/ci.sh.
+modules.
+
+Also validates DESIGN.md section anchors: every ``§N`` referenced
+anywhere in the docs, the source tree, or the benchmark harness must
+have a matching ``## §N`` heading in DESIGN.md, so a renumbering (or a
+reference to a section that was never written, e.g. §11 before the
+autotune loop landed) fails CI instead of rotting.  Run by
+scripts/ci.sh.
 """
 from __future__ import annotations
 
@@ -42,6 +49,27 @@ def resolve_module(dotted: str) -> bool:
     return False
 
 
+def check_section_anchors() -> tuple[int, list[tuple[str, str]]]:
+    """Every §N reference resolves to a ``## §N`` DESIGN.md heading."""
+    design = ROOT / "DESIGN.md"
+    defined = set(re.findall(r"^## §(\d+)\b", design.read_text(), re.M)) \
+        if design.exists() else set()
+    sources = list(DOC_FILES)
+    for sub in ("src", "benchmarks", "scripts", "tests"):
+        base = ROOT / sub
+        if base.is_dir():
+            sources += sorted(base.rglob("*.py"))
+    checked, missing = 0, []
+    for f in sources:
+        if not f.exists():
+            continue
+        for num in sorted(set(re.findall(r"§(\d+)", f.read_text()))):
+            checked += 1
+            if num not in defined:
+                missing.append((str(f.relative_to(ROOT)), f"§{num}"))
+    return checked, missing
+
+
 def main() -> int:
     missing: list[tuple[str, str]] = []
     checked = 0
@@ -66,6 +94,8 @@ def main() -> int:
                 checked += 1
                 if not resolve_module(dm.group(1)):
                     missing.append((doc.name, span))
+    anchors_checked, anchors_missing = check_section_anchors()
+    missing += anchors_missing
     if missing:
         print("check_docs: dangling documentation references:")
         for doc, span in missing:
@@ -73,7 +103,8 @@ def main() -> int:
         return 1
     print(
         f"check_docs: {checked} module/path references across "
-        f"{len(DOC_FILES)} docs all resolve"
+        f"{len(DOC_FILES)} docs and {anchors_checked} per-file § anchors "
+        f"all resolve"
     )
     return 0
 

@@ -1,19 +1,21 @@
 #!/usr/bin/env bash
-# Tier-1 CI: the full test suite, the planner smoke, the docs-rot check,
-# and the PR-tracked perf record.
+# Tier-1 CI: the full test suite, the planner and autotuner smokes, the
+# docs-rot check, and the PR-tracked perf record.
 #
-#   scripts/ci.sh            # tests + planner smoke + docs check + BENCH_PR5.json
+#   scripts/ci.sh            # tests + smokes + docs check + BENCH_PR6.json
 #
 # The planner smoke plans 6 shapes (one Fig. 5 unfavorable grid, one
 # time_steps=3 fused plan, one two-stage heterogeneous chain, one 4-way
 # sharded request) and asserts the pad triggers and the planned-traffic +
 # fused<=single-pass + streaming<=recompute-flops + per-shard-slab gates
-# hold.  check_docs.py fails on documentation referencing renamed or
-# removed modules.  The JSON pass re-derives the modeled numbers checked
-# in at BENCH_PR5.json (>=0.85 modeled parallel efficiency at 8 shards on
-# the 256^3 star, bit-wise sharded-vs-single-device parity on a CPU mesh,
-# PR4/PR3/PR2/PR1 gates embedded); a drift there is a perf regression,
-# not flake.
+# hold.  The autotune smoke (§11) races the planner's top-k candidates on
+# the live backend and asserts never_slower, the record round-trip, and
+# the sub-ms warm TunedPlanDB hit.  check_docs.py fails on documentation
+# referencing renamed or removed modules or dangling DESIGN.md § anchors.
+# The JSON pass re-derives the measured-vs-modeled table checked in at
+# BENCH_PR6.json (never_slower on every grid incl. the unfavorable one,
+# warm hit < 1 ms without re-measurement, PR5/PR4/PR3/PR2/PR1 gates
+# embedded); a drift there is a perf regression, not flake.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,5 +23,6 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m pytest -x -q
 python -m repro.plan.explain --smoke
+python -m repro.plan.tune --smoke
 python scripts/check_docs.py
 python -m benchmarks.run --json

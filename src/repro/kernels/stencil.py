@@ -518,7 +518,7 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
 
 
 def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None,
-               time_steps=1, stages=None, num_shards=1):
+               time_steps=1, stages=None, num_shards=1, tune=None):
     """Tile decision for an un-planned call: a thin wrapper over the plan
     compiler (``repro.plan``), whose persistent cache makes repeated shapes
     — the serving case — O(1).  The old ad-hoc heuristic survives as
@@ -528,8 +528,13 @@ def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None,
     ``stages`` (per-stage offset arrays, weights deliberately stripped so
     cache keys stay weight-independent) requests a stage-chain plan; a
     homogeneous chain canonicalizes to the same request — and cache key —
-    as the ``offsets + time_steps`` spelling."""
-    from repro.plan import default_planner
+    as the ``offsets + time_steps`` spelling.
+
+    ``tune`` (``True`` or an ``AutoTuner``) routes the decision through
+    the §11 measured-cost loop instead: a warm TunedPlanDB hit serves the
+    measured winner, a miss races the top-k candidates on the live
+    backend first (``repro.plan.tune``)."""
+    from repro.plan import default_planner, resolve_tuner
 
     d = len(shape)
     kw = dict(
@@ -544,6 +549,9 @@ def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None,
     else:
         kw["offsets"] = [np.asarray(o).reshape(-1, d) for o in offsets_list]
         kw["time_steps"] = time_steps
+    tuner = resolve_tuner(tune)
+    if tuner is not None:
+        return tuner.plan(**kw)
     return default_planner().plan(**kw)
 
 
@@ -561,12 +569,20 @@ def stencil_pallas(
     num_shards: int | None = None,
     shard_axis: int | None = None,
     mesh=None,
+    tune=None,
 ) -> jnp.ndarray:
     """Single-array weighted stencil, zero boundary fill (matches ref).
 
     ``plan``: a precompiled ``repro.plan.StencilPlan`` — the single source
     of truth for tile/sweep/pipelining when given; otherwise the default
     planner is consulted (and its cache makes repeats O(1)).
+
+    ``tune=True`` (or an ``repro.plan.AutoTuner``) opts the planning step
+    into the §11 measured-cost loop: the first call for a given request
+    races the top-k candidate plans on this backend and persists the
+    measured winner; every later call serves it sub-ms from the
+    TunedPlanDB.  Mutually exclusive with ``plan``/``tile`` (which pin
+    the decision already).
 
     ``time_steps=T > 1`` applies the stencil T times (a Jacobi/RK sub-step
     chain), lowered onto the same stage-chain engine as
@@ -583,7 +599,7 @@ def stencil_pallas(
         [u], [offsets], [weights], tile=tile, interpret=interpret,
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
         plan=plan, time_steps=time_steps, num_shards=num_shards,
-        shard_axis=shard_axis, mesh=mesh,
+        shard_axis=shard_axis, mesh=mesh, tune=tune,
     )
 
 
@@ -602,6 +618,7 @@ def stencil_iterate(
     num_shards: int | None = None,
     shard_axis: int | None = None,
     mesh=None,
+    tune=None,
 ) -> jnp.ndarray:
     """Run a stage-chain stencil program — the iterative-solver workload.
 
@@ -638,6 +655,7 @@ def stencil_iterate(
             vmem_budget=vmem_budget, sweep_axis=sweep_axis,
             pipelined=pipelined, plan=plan, stages=stages,
             num_shards=num_shards, shard_axis=shard_axis, mesh=mesh,
+            tune=tune,
         )
     if offsets is None or weights is None or time_steps is None:
         raise ValueError(
@@ -647,7 +665,7 @@ def stencil_iterate(
         [u], [offsets], [weights], tile=tile, interpret=interpret,
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
         plan=plan, time_steps=time_steps, num_shards=num_shards,
-        shard_axis=shard_axis, mesh=mesh,
+        shard_axis=shard_axis, mesh=mesh, tune=tune,
     )
 
 
@@ -666,12 +684,16 @@ def multi_stencil_pallas(
     num_shards: int | None = None,
     shard_axis: int | None = None,
     mesh=None,
+    tune=None,
 ) -> jnp.ndarray:
     """p-RHS stencil  q = Σ_p K_p u_p  (paper §5): one VMEM budget split
     across p operand windows plus the output tile, one shared sweep.
 
     Tile/sweep resolution order: explicit ``tile``/``sweep_axis`` args win,
-    then the ``plan``'s decision, then the default planner.  A ``plan`` is
+    then the ``plan``'s decision, then the default planner (``tune=``
+    swaps that last step for the §11 measured-cost loop — warm TunedPlanDB
+    hits serve the measured winner; mutually exclusive with
+    ``plan``/``tile``).  A ``plan`` is
     validated against the call (shape, offsets, dtype, time_steps, stage
     chain) and a mismatch raises :class:`repro.plan.PlanMismatchError` —
     executing a plan compiled for different inputs silently mis-tiles or
@@ -744,6 +766,11 @@ def multi_stencil_pallas(
         elif plan is not None:
             num_shards = plan.num_shards
     depth = None
+    if tune and (plan is not None or tile is not None):
+        raise ValueError(
+            "tune= requests the §11 measured-cost planning loop, but "
+            "plan=/tile= pin the decision already — pass one or the other"
+        )
     if plan is not None:
         from repro.plan import validate_plan_call
 
@@ -771,6 +798,7 @@ def multi_stencil_pallas(
                 [offs for offs, _ in chain] if chain is not None else None
             ),
             num_shards=num_shards or 1,
+            tune=tune,
         )
         tile = choice.tile
         if sweep_axis is None:

@@ -10,11 +10,21 @@ harness — treat the plan as the single source of truth for padding, tile
 shape, sweep axis and pipelining.
 
 ``python -m repro.plan.explain SHAPE`` prints a human-readable plan
-report (see :mod:`repro.plan.explain`).
+report (see :mod:`repro.plan.explain`); ``python -m repro.plan.tune
+SHAPE`` races the top-k candidate plans on the live backend and persists
+the measured winner in the :class:`TunedPlanDB` (DESIGN.md §11 — a
+Planner built with ``tuned_db=`` then prefers measured winners).
 """
 
 from .cache import PlanCache, default_cache_dir  # noqa: F401
 from .planner import Planner, default_planner, plan_stencil  # noqa: F401
+from .tune import AutoTuner, default_tuner, resolve_tuner  # noqa: F401
+from .tunedb import (  # noqa: F401
+    TUNEDB_SCHEMA,
+    CandidateTiming,
+    TunedPlanDB,
+    TuneRecord,
+)
 from .schema import (  # noqa: F401
     PLANNER_VERSION,
     LatticeReport,
@@ -28,6 +38,9 @@ from .schema import (  # noqa: F401
 
 __all__ = [
     "PLANNER_VERSION",
+    "TUNEDB_SCHEMA",
+    "AutoTuner",
+    "CandidateTiming",
     "LatticeReport",
     "PadPlan",
     "PlanCache",
@@ -36,8 +49,12 @@ __all__ = [
     "Planner",
     "StageSpec",
     "StencilPlan",
+    "TunedPlanDB",
+    "TuneRecord",
     "default_cache_dir",
     "default_planner",
+    "default_tuner",
     "plan_stencil",
+    "resolve_tuner",
     "validate_plan_call",
 ]

@@ -9,11 +9,16 @@ restarts and invalidate themselves when the pipeline changes.
 Robustness contract: the cache can only ever *miss*.  A corrupted or
 truncated on-disk entry, an unwritable cache dir, a permission error —
 all degrade to re-planning, never to an exception reaching the caller.
+A broken directory (anything beyond a plain entry-not-found) is dropped
+after the *first* error — one logged warning, then in-memory-only for
+the rest of the process — instead of re-stat-ing the dead path on every
+request.
 """
 
 from __future__ import annotations
 
 import json
+import logging
 import os
 import tempfile
 from collections import OrderedDict
@@ -23,6 +28,8 @@ from .schema import PLANNER_VERSION, StencilPlan
 __all__ = ["PlanCache", "default_cache_dir"]
 
 _ENV_DIR = "REPRO_PLAN_CACHE_DIR"
+
+logger = logging.getLogger(__name__)
 
 
 def default_cache_dir() -> str:
@@ -64,6 +71,19 @@ class PlanCache:
     def _path(self, key: str) -> str:
         return os.path.join(self.dir, f"{key}.json")
 
+    def _disable_disk(self, exc: BaseException) -> None:
+        """First disk error wins: log one warning, drop the directory, and
+        serve memory-only from here on (a broken cache dir must cost one
+        log line, not a failing stat per request)."""
+        self.stats["disk_errors"] += 1
+        if self.dir is not None:
+            logger.warning(
+                "plan cache dir %r unusable (%s: %s); degrading to "
+                "in-memory-only for this process",
+                self.dir, type(exc).__name__, exc,
+            )
+            self.dir = None
+
     def _remember(self, key: str, plan: StencilPlan) -> None:
         self._mem[key] = plan
         self._mem.move_to_end(key)
@@ -82,11 +102,14 @@ class PlanCache:
             return plan
         if self.dir is not None:
             path = self._path(key)
+            raw = None
             try:
                 with open(path) as f:
                     raw = f.read()
-            except OSError:
-                raw = None  # not on disk (or unreadable): plain miss
+            except FileNotFoundError:
+                pass  # not on disk: plain miss, the directory is fine
+            except OSError as e:
+                self._disable_disk(e)  # broken dir: degrade once
             if raw is not None:
                 try:
                     plan = StencilPlan.from_dict(json.loads(raw))
@@ -131,8 +154,8 @@ class PlanCache:
                 except OSError:
                     pass
                 raise
-        except OSError:
-            self.stats["disk_errors"] += 1  # degrade to memory-only
+        except OSError as e:
+            self._disable_disk(e)  # degrade to memory-only, log once
 
     def clear(self, disk: bool = False) -> None:
         self._mem.clear()

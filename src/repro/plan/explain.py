@@ -7,7 +7,10 @@ table (modeled chain traffic + streaming flops per candidate fusion
 depth), and the predicted traffic against the legacy heuristic, the
 planner's own single-pass choice, and the isoperimetric lower bound.
 ``--num-shards N`` plans the §10 column-sharded launch (per-shard
-figures + halo-exchange bytes).  ``--smoke`` runs the CI gate: six
+figures + halo-exchange bytes).  ``--tuned`` additionally looks the
+request up in the §11 TunedPlanDB for this backend fingerprint and, on a
+hit, prints the stored measured-candidate table (``repro.plan.tune`` is
+the tool that writes it).  ``--smoke`` runs the CI gate: six
 shapes (one unfavorable, one ``time_steps=3`` fused, one two-stage
 heterogeneous chain, one 4-way sharded), asserting the pad triggers, the
 planner never predicts more traffic than the legacy heuristic, a fused
@@ -286,6 +289,12 @@ def main(argv: list[str] | None = None) -> int:
                     help="use the legacy _auto_tile strategy")
     ap.add_argument("--validate", action="store_true",
                     help="cache-simulate original vs padded grid")
+    ap.add_argument("--tuned", action="store_true",
+                    help="show the §11 TunedPlanDB record for this request "
+                    "(measured candidate table), if one exists")
+    ap.add_argument("--db", default=None,
+                    help="tuned-plan DB directory for --tuned "
+                    "(default: REPRO_TUNED_DB_DIR or ~/.cache/repro/tuned)")
     ap.add_argument("--json", action="store_true", help="dump the plan JSON")
     ap.add_argument("--smoke", action="store_true",
                     help="run the CI smoke gates instead")
@@ -307,6 +316,21 @@ def main(argv: list[str] | None = None) -> int:
         return 0
     validation = planner.validate(plan) if args.validate else None
     print(format_plan(plan, validation))
+    if args.tuned:
+        from .tune import backend_fingerprint, format_record
+        from .tunedb import TunedPlanDB
+
+        fp = backend_fingerprint()
+        rec = TunedPlanDB(db_dir=args.db).get(plan.request.cache_key(), fp)
+        if rec is None:
+            print(
+                f"\ntuned: no record for this request at fingerprint {fp}\n"
+                "  (run `python -m repro.plan.tune "
+                f"{args.shape} --stencil {args.stencil}` to measure one)"
+            )
+        else:
+            print("\ntuned record (§11 measured candidates):")
+            print(format_record(rec))
     return 0
 
 

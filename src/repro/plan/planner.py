@@ -110,6 +110,26 @@ def _fit_to_budget(tile, shape, halo, dtype_bytes, budget, aligned):
     return None
 
 
+class _Survey:
+    """One request's scored planning state, shared by ``plan()``'s argmin
+    and ``candidates()``'s enumeration: the lattice/pad decisions, the
+    (possibly shard-slab) work shape, the legacy baseline, the per-depth
+    best tiles with their whole-chain prices, and the ``tiled``/
+    ``price_chain`` closures for scoring further (depth, sweep-axis)
+    combinations under identical budgets."""
+
+    __slots__ = (
+        "request", "d", "T", "db", "halo", "stage_halos", "lattice", "pad",
+        "work", "work_full", "num_shards", "shard_axis", "extras", "legacy",
+        "legacy_priced", "per_depth", "scored", "tiled", "price_chain",
+    )
+
+    def __init__(self, **kw):
+        for name in self.__slots__:
+            setattr(self, name, kw.pop(name))
+        assert not kw, f"unexpected survey fields: {sorted(kw)}"
+
+
 class Planner:
     """Compiles :class:`PlanRequest` → :class:`StencilPlan`, memoized by a
     :class:`PlanCache` (content-addressed, persistent)."""
@@ -118,11 +138,18 @@ class Planner:
         self,
         strategy: str = "paper",
         cache: PlanCache | None = None,
+        tuned_db=None,
     ):
         assert strategy in ("paper", "legacy"), strategy
         self.strategy = strategy
         self.cache = cache if cache is not None else PlanCache()
+        # Optional repro.plan.tunedb.TunedPlanDB: when attached, plan()
+        # prefers a measured winner recorded for this exact request on
+        # this exact backend (DESIGN.md §11); a DB miss falls back to the
+        # analytic choice unchanged.
+        self.tuned_db = tuned_db
         self.last_plan_seconds: float | None = None  # cold-vs-warm telemetry
+        self.last_plan_tuned: bool = False           # did a tuned entry win?
 
     # -- cheap diagnostics (no tile search) --------------------------------
 
@@ -244,22 +271,156 @@ class Planner:
     def plan(self, request: PlanRequest | None = None, /, **kw) -> StencilPlan:
         """Compile (or fetch from cache) the plan for one request.  Keyword
         form builds the request via :meth:`PlanRequest.make`, with the
-        planner's strategy as default."""
+        planner's strategy as default.
+
+        With a ``tuned_db`` attached, a measured winner recorded for this
+        request on this backend wins over the analytic choice (§11 autotune
+        loop); a DB miss — or no DB — resolves analytically, unchanged."""
         if request is None:
             kw.setdefault("strategy", self.strategy)
             request = PlanRequest.make(**kw)
         key = request.cache_key()
         t0 = time.perf_counter()
-        cached = self.cache.get(key)
-        if cached is not None:
-            self.last_plan_seconds = time.perf_counter() - t0
-            return cached
-        plan = self._compile(request)
-        self.cache.put(key, plan)
+        self.last_plan_tuned = False
+        if self.tuned_db is not None:
+            tuned = self._tuned_winner(key)
+            if tuned is not None:
+                self.last_plan_tuned = True
+                self.last_plan_seconds = time.perf_counter() - t0
+                return tuned
+        plan = self._analytic(request, key)
         self.last_plan_seconds = time.perf_counter() - t0
         return plan
 
+    def _analytic(
+        self, request: PlanRequest, key: str | None = None
+    ) -> StencilPlan:
+        """The model-driven plan (PlanCache-memoized), never consulting the
+        tuned DB — the autotuner's baseline and candidate source."""
+        key = key if key is not None else request.cache_key()
+        cached = self.cache.get(key)
+        if cached is not None:
+            return cached
+        plan = self._compile(request)
+        self.cache.put(key, plan)
+        return plan
+
+    def _tuned_winner(self, key: str) -> StencilPlan | None:
+        from .tune import backend_fingerprint  # lazy: pulls in jax
+
+        rec = self.tuned_db.get(key, backend_fingerprint())
+        return None if rec is None else rec.winner_plan
+
+    # -- candidate enumeration (the §11 autotune surface) ------------------
+
+    def candidates(
+        self, request: PlanRequest | None = None, /, k: int = 3, **kw
+    ) -> list[StencilPlan]:
+        """The top-``k`` candidate plans by modeled chain cost — the scored
+        tile/depth/shard enumeration behind :meth:`plan`'s argmin, exposed
+        so the §11 autotune loop can *measure* the near-ties instead of
+        trusting the model to break them.
+
+        ``candidates()[0]`` is always exactly :meth:`plan`'s analytic
+        choice (same object the cache serves); the rest are distinct
+        execution signatures — per sweep axis and fusion depth the best
+        tile, the legacy-heuristic tile, and (under §10 sharding) every
+        alternative shard axis — ranked by modeled whole-chain traffic.
+        Fewer than ``k`` plans come back when the request admits fewer
+        distinct feasible signatures.  Every returned plan executes this
+        request correctly; only their cost fields differ."""
+        if request is None:
+            kw.setdefault("strategy", self.strategy)
+            request = PlanRequest.make(**kw)
+        analytic = self._analytic(request)
+        k = int(k)
+        if k <= 1:
+            return [analytic]
+
+        pool: list[tuple] = []
+        seen = {
+            (analytic.tile, analytic.sweep_axis, analytic.fused_depth,
+             analytic.shard_axis)
+        }
+
+        def harvest(sv: "_Survey", shard_rank: int) -> None:
+            axes: list[int | None] = [None] + [
+                i for i, n in enumerate(sv.work) if n > 1
+            ]
+            if sv.shard_axis is not None:
+                # The engine realizes sweep_axis=None as axis-0 grid order,
+                # which collides with an axis-0 shard partition (§10).
+                axes = [
+                    a for a in axes
+                    if a != sv.shard_axis
+                    and not (a is None and sv.shard_axis == 0)
+                ]
+            for depth in sorted(sv.scored):
+                for rank, axis in enumerate(axes):
+                    try:
+                        c = sv.tiled(depth, sv.extras, sweep_axis=axis)
+                    except ValueError:
+                        continue  # no tile fits the budget on this axis
+                    priced = sv.price_chain(depth, c)
+                    if priced is None:
+                        continue
+                    s = (c.tile, c.sweep_axis, int(depth), sv.shard_axis)
+                    if s in seen:
+                        continue
+                    seen.add(s)
+                    pool.append((priced[0], depth, shard_rank, rank, sv, c,
+                                 priced))
+            # The legacy heuristic's depth-1 choice is a candidate too:
+            # when the analytic model is wrong it is the natural hedge.
+            if sv.legacy_priced is not None:
+                s = (sv.legacy.tile, sv.legacy.sweep_axis, 1, sv.shard_axis)
+                if s not in seen:
+                    seen.add(s)
+                    pool.append((sv.legacy_priced[0], 1, shard_rank,
+                                 len(axes), sv, sv.legacy, sv.legacy_priced))
+
+        sv0 = self._survey(request)
+        harvest(sv0, 0)
+        if request.num_shards > 1:
+            # §10: also enumerate the alternative shard axes — a different
+            # column partition changes the per-shard slab, the feasible
+            # sweep axes, and the halo-exchange bytes.
+            dims = [i for i, n in enumerate(sv0.work_full) if n > 1]
+            for j, axis in enumerate(a for a in dims if a != sv0.shard_axis):
+                try:
+                    sva = self._survey(request, shard_axis_override=axis)
+                except (ValueError, AssertionError):
+                    continue  # no feasible tiling under this partition
+                harvest(sva, j + 1)
+
+        # Rank by modeled whole-chain traffic; ties break shallow-first,
+        # then planner-preferred shard/sweep order (stable, like plan()).
+        pool.sort(key=lambda t: (t[0], t[1], t[2], t[3]))
+        out = [analytic]
+        for _traffic, depth, _sr, _ar, sv, c, priced in pool[: k - 1]:
+            out.append(self._freeze(sv, int(depth), c, priced))
+        return out
+
     def _compile(self, request: PlanRequest) -> StencilPlan:
+        sv = self._survey(request)
+        single_total = sv.scored[1][0]
+        # Shallower wins ties: same modeled traffic, smaller VMEM webs and
+        # fewer staged buffers.
+        fused_depth = min(sv.scored, key=lambda t: (sv.scored[t][0], t))
+        traffic_total = sv.scored[fused_depth][0]
+        # Depth 1 is always in the candidate set, so the fused choice can
+        # never score worse than the planner's own single-pass plan.
+        assert traffic_total <= single_total, (
+            f"fused plan regressed vs single-pass: {traffic_total} > "
+            f"{single_total} on {sv.work} (T={sv.T}, depth={fused_depth})"
+        )
+        return self._freeze(
+            sv, fused_depth, sv.per_depth[fused_depth], sv.scored[fused_depth]
+        )
+
+    def _survey(
+        self, request: PlanRequest, shard_axis_override: int | None = None
+    ) -> "_Survey":
         shape = request.shape
         d = len(shape)
         stages = request.stages
@@ -318,17 +479,26 @@ class Planner:
             dims = [i for i, n in enumerate(work_full) if n > 1]
             if not dims:
                 dims = list(range(d))
-            shard_axis = max(dims, key=lambda i: (work_full[i], -i))
+            if shard_axis_override is not None:
+                if shard_axis_override not in dims:
+                    raise ValueError(
+                        f"shard axis {shard_axis_override} not partitionable "
+                        f"on padded grid {work_full}"
+                    )
+                shard_axis = int(shard_axis_override)
+            else:
+                shard_axis = max(dims, key=lambda i: (work_full[i], -i))
             work = tuple(
                 max(-(-n // num_shards), 1) if i == shard_axis else n
                 for i, n in enumerate(work_full)
             )
 
-        def tiled(depth: int, extras=None) -> TileChoice:
+        def tiled(depth: int, extras=None, sweep_axis="auto") -> TileChoice:
             """Tile for one launch: depth 1 scores the per-application
             union halo (a window sized for the union admits every stage of
             a heterogeneous chain); deeper launches score the chain's
-            leading ``depth``-stage prefix."""
+            leading ``depth``-stage prefix.  ``sweep_axis`` pins one axis
+            (the candidate enumeration); ``"auto"`` is plan()'s argmin."""
             launch = None
             if stage_halos is not None and depth > 1:
                 launch = stage_halos[:depth]
@@ -338,7 +508,7 @@ class Planner:
                 dtype_bytes=db,
                 vmem_budget=request.vmem_budget,
                 n_operands=request.n_operands,
-                sweep_axis="auto",
+                sweep_axis=sweep_axis,
                 aligned=request.aligned,
                 prefetch=request.pipelined,
                 extra_tiles=extras,
@@ -395,6 +565,7 @@ class Planner:
         legacy = tiled(1)  # the old heuristic: per-step, never fused
         legacy_priced = price_chain(1, legacy)
         if request.strategy == "legacy":
+            extras = None
             per_depth = {1: legacy}
         else:
             extras = self._extra_candidates(work, halo, request, lattice)
@@ -430,36 +601,60 @@ class Planner:
         ):
             per_depth[1] = legacy
             scored[1] = legacy_priced
-        single_total = scored[1][0]
-        # Shallower wins ties: same modeled traffic, smaller VMEM webs and
-        # fewer staged buffers.
-        fused_depth = min(scored, key=lambda t: (scored[t][0], t))
-        traffic_total, lb_total, flops_total, rflops_total = scored[fused_depth]
-        # Depth 1 is always in the candidate set, so the fused choice can
-        # never score worse than the planner's own single-pass plan.
-        assert traffic_total <= single_total, (
-            f"fused plan regressed vs single-pass: {traffic_total} > "
-            f"{single_total} on {work} (T={T}, depth={fused_depth})"
+        return _Survey(
+            request=request,
+            d=d,
+            T=T,
+            db=db,
+            halo=halo,
+            stage_halos=stage_halos,
+            lattice=lattice,
+            pad=pad,
+            work=work,
+            work_full=work_full,
+            num_shards=num_shards,
+            shard_axis=shard_axis,
+            extras=extras,
+            legacy=legacy,
+            legacy_priced=legacy_priced,
+            per_depth=per_depth,
+            scored=scored,
+            tiled=tiled,
+            price_chain=price_chain,
         )
-        choice = per_depth[fused_depth]
+
+    def _freeze(
+        self, sv: "_Survey", fused_depth: int, choice: TileChoice, priced
+    ) -> StencilPlan:
+        """Freeze one scored (tile, depth) candidate of a survey into a
+        full :class:`StencilPlan`.  ``plan()`` freezes the modeled argmin;
+        :meth:`candidates` freezes the runners-up too, so a frozen
+        candidate's chain fields honestly describe *its own* cost (its
+        ``traffic_vs_single_pass`` may exceed 1 — that is exactly the
+        information the autotuner measures against)."""
+        request, T, d, db = sv.request, sv.T, sv.d, sv.db
+        halo, stage_halos = sv.halo, sv.stage_halos
+        num_shards, shard_axis = sv.num_shards, sv.shard_axis
+        traffic_total, lb_total, flops_total, rflops_total = priced
+        single_total = sv.scored[1][0]
         depth_scores = tuple(
             (int(depth), int(tr), int(fs))
-            for depth, (tr, _lb, fs, _fr) in sorted(scored.items())
+            for depth, (tr, _lb, fs, _fr) in sorted(sv.scored.items())
         )
 
         sweep = choice.sweep_axis
         h_s = 0 if sweep is None else halo[sweep][0] + halo[sweep][1]
         n_sweep = 1 if sweep is None else choice.grid[sweep]
         legacy_total = (
-            legacy_priced[0] if legacy_priced is not None
-            else T * legacy.traffic_bytes
+            sv.legacy_priced[0] if sv.legacy_priced is not None
+            else T * sv.legacy.traffic_bytes
         )
 
-        # -- §10 shard accounting: the scoring above already ran on the
-        # worst shard's column slab, so traffic_total IS the per-shard
-        # figure; what remains is the cross-device boundary exchange.
+        # -- §10 shard accounting: the scoring already ran on the worst
+        # shard's column slab, so traffic_total IS the per-shard figure;
+        # what remains is the cross-device boundary exchange.
         grid_full = tuple(
-            -(-n // t) for n, t in zip(work_full, choice.tile)
+            -(-n // t) for n, t in zip(sv.work_full, choice.tile)
         )
         halo_exchange = 0
         if num_shards > 1:
@@ -488,8 +683,8 @@ class Planner:
                 )
         return StencilPlan(
             request=request,
-            lattice=lattice,
-            pad=pad,
+            lattice=sv.lattice,
+            pad=sv.pad,
             tile=choice.tile,
             sweep_axis=sweep,
             grid=grid_full,
@@ -502,8 +697,8 @@ class Planner:
             surface_to_volume=float(choice.surface_to_volume),
             lower_bound_bytes=float(lb_total),
             efficiency=float(min(lb_total / max(traffic_total, 1), 1.0)),
-            legacy_tile=legacy.tile,
-            legacy_sweep_axis=legacy.sweep_axis,
+            legacy_tile=sv.legacy.tile,
+            legacy_sweep_axis=sv.legacy.sweep_axis,
             legacy_traffic_bytes=int(legacy_total),
             time_steps=T,
             fused_depth=int(fused_depth),

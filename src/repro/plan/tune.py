@@ -1,0 +1,508 @@
+"""Measured-cost autotune loop:  python -m repro.plan.tune 64x64x128
+
+The paper validates its miss model by *measuring* (Fig. 5: predicted vs
+observed misses on R10000); the planner so far trusts the §4 analytic
+model alone.  This module closes the loop (DESIGN.md §11):
+
+1. ask the :class:`~repro.plan.planner.Planner` for the top-``k``
+   candidate plans by modeled cost (``Planner.candidates`` — the scored
+   tile/depth/shard enumeration behind ``plan()``'s argmin);
+2. time every candidate on the live backend with the
+   :mod:`repro.runtime.timing` harness (jit warm-up excluded,
+   ``block_until_ready``, median-of-n with IQR);
+3. record wall-clock, achieved bandwidth, and the model-vs-measured
+   ratio per candidate into the persistent
+   :class:`~repro.plan.tunedb.TunedPlanDB` (same sha256 request keys as
+   the PlanCache, additionally keyed by backend fingerprint);
+4. keep the measured winner.  The analytic choice is always candidate 0
+   and always raced, so the ``never_slower`` gate — measured winner time
+   ≤ measured analytic time — holds by construction and is asserted at
+   tune time.
+
+A Planner constructed with ``tuned_db=`` (or an :class:`AutoTuner` used
+directly, or ``stencil_pallas(..., tune=True)``) then *prefers* the
+measured winner on a warm DB hit — sub-ms, no re-measurement — and falls
+back to the analytic choice unchanged on a miss.
+
+The tuner generates its own input arrays (the timing depends on shapes
+and dtypes, never on values) and launches each candidate with
+``plan=candidate`` explicitly, so tuning never recurses into tuning.
+
+jax and the kernel layer are imported lazily: importing ``repro.plan``
+must never fix the process's device topology before a caller (conftest,
+benchmarks, this CLI) has set ``XLA_FLAGS``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from datetime import datetime, timezone
+
+import numpy as np
+
+from .cache import PlanCache
+from .planner import Planner, default_planner
+from .schema import PlanRequest, StencilPlan
+from .tunedb import CandidateTiming, TunedPlanDB, TuneRecord
+
+__all__ = [
+    "AutoTuner",
+    "backend_fingerprint",
+    "default_tuner",
+    "format_record",
+    "main",
+    "resolve_tuner",
+    "smoke",
+]
+
+
+def backend_fingerprint(interpret: bool | None = None) -> str:
+    """Identity of what a measurement means here: the device fingerprint
+    (backend:kind:xN:jax-version) plus whether Pallas kernels compile or
+    interpret — interpret-mode CPU numbers must never be served to a
+    compiled-TPU process, even on the same host."""
+    from repro.kernels._backend import resolve_interpret
+    from repro.runtime.timing import device_fingerprint
+
+    return (
+        f"{device_fingerprint()}|interpret="
+        f"{bool(resolve_interpret(interpret))}"
+    )
+
+
+def _spearman(xs, ys) -> float:
+    """Spearman rank correlation (average ranks on ties): how well the
+    modeled-bytes *ordering* predicts the measured-time ordering — the
+    per-request analogue of the paper's Fig. 5 model validation."""
+    n = len(xs)
+    if n < 2:
+        return 0.0
+
+    def ranks(v):
+        v = np.asarray(v, dtype=float)
+        order = np.argsort(v, kind="mergesort")
+        r = np.empty(n, dtype=float)
+        r[order] = np.arange(n, dtype=float)
+        for val in np.unique(v):
+            m = v == val
+            r[m] = r[m].mean()
+        return r
+
+    rx, ry = ranks(xs), ranks(ys)
+    sx, sy = rx - rx.mean(), ry - ry.mean()
+    denom = float(np.sqrt((sx**2).sum() * (sy**2).sum()))
+    if denom == 0.0:
+        return 0.0
+    return float((sx * sy).sum() / denom)
+
+
+def _modeled_bytes(plan: StencilPlan) -> int:
+    """A candidate's total modeled HBM traffic: the (per-shard) chain
+    bytes across all shards plus the cross-device halo exchange."""
+    return (
+        plan.per_shard_traffic_bytes * plan.num_shards
+        + plan.halo_exchange_bytes
+    )
+
+
+class AutoTuner:
+    """Races candidate plans on the live backend, keeps measured winners.
+
+    ``tune()`` measures one request and records a :class:`TuneRecord`;
+    ``plan()`` is the drop-in planning entry point the kernel layer's
+    ``tune=`` knob routes through — warm DB hit returns the measured
+    winner without re-measurement, miss tunes first.  ``force=True``
+    re-measures even on a warm hit (fresh numbers after a driver or
+    clock change).
+    """
+
+    def __init__(
+        self,
+        db: TunedPlanDB | None = None,
+        planner: Planner | None = None,
+        k: int = 4,
+        reps: int = 5,
+        warmup: int = 1,
+        interpret: bool | None = None,
+        force: bool = False,
+    ):
+        self.db = db if db is not None else TunedPlanDB()
+        self.planner = planner if planner is not None else default_planner()
+        self.k = int(k)
+        self.reps = int(reps)
+        self.warmup = int(warmup)
+        self.interpret = interpret
+        self.force = bool(force)
+        self.last_plan_tuned: bool = False  # warm hit (vs fresh measurement)?
+        self.last_record: TuneRecord | None = None
+
+    # -- launching one candidate ------------------------------------------
+
+    def _launch_fn(self, request: PlanRequest, plan: StencilPlan):
+        """A zero-arg closure running the request's whole computation under
+        ``plan`` — the thing :func:`repro.runtime.timing.measure` times.
+        Inputs are synthesized here (timing depends on shape/dtype, not
+        values); weights default to uniform 1/s so deep chains stay
+        bounded.  ``plan=plan`` pins tile/sweep/depth/shard explicitly, so
+        the launch never consults a planner (and never re-tunes)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.stencil import multi_stencil_pallas
+
+        dtype = {2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}.get(
+            request.dtype_bytes, jnp.float32
+        )
+        rng = np.random.default_rng(0)
+
+        def mk():
+            return jnp.asarray(
+                rng.standard_normal(request.shape), dtype=dtype
+            )
+
+        interpret = self.interpret
+        if request.stages:
+            stages = [
+                (
+                    np.asarray(st.offsets, dtype=np.int64),
+                    st.weights if st.weights is not None
+                    else (1.0 / len(st.offsets),) * len(st.offsets),
+                )
+                for st in request.stages
+            ]
+            us = (mk(),)
+            return lambda: multi_stencil_pallas(
+                us, None, None, plan=plan, stages=stages,
+                interpret=interpret,
+            )
+        offsets_list = [
+            np.asarray(g, dtype=np.int64) for g in request.offsets
+        ]
+        weights_list = [(1.0 / len(g),) * len(g) for g in offsets_list]
+        us = tuple(mk() for _ in offsets_list)
+        return lambda: multi_stencil_pallas(
+            us, offsets_list, weights_list, plan=plan,
+            time_steps=request.time_steps, interpret=interpret,
+        )
+
+    # -- the tune pass -----------------------------------------------------
+
+    def tune(
+        self, request: PlanRequest | None = None, /, **kw
+    ) -> TuneRecord:
+        """Measure the top-k candidates of one request and persist the
+        result.  Candidate 0 is the planner's analytic argmin; the winner
+        is the measured argmin (ties break toward the analytic choice),
+        so ``never_slower`` holds by construction."""
+        from repro.runtime.timing import measure
+
+        if request is None:
+            kw.setdefault("strategy", self.planner.strategy)
+            request = PlanRequest.make(**kw)
+        cands = self.planner.candidates(request, k=self.k)
+        timed = [
+            (
+                plan,
+                measure(
+                    self._launch_fn(request, plan),
+                    reps=self.reps,
+                    warmup=self.warmup,
+                ),
+            )
+            for plan in cands
+        ]
+        base_t = max(timed[0][1].median_s, 1e-12)
+        base_m = max(_modeled_bytes(cands[0]), 1)
+        rows = []
+        for plan, t in timed:
+            m = _modeled_bytes(plan)
+            med = max(t.median_s, 1e-12)
+            rows.append(CandidateTiming(
+                tile=plan.tile,
+                sweep_axis=plan.sweep_axis,
+                fused_depth=plan.fused_depth,
+                shard_axis=plan.shard_axis,
+                modeled_bytes=m,
+                median_s=t.median_s,
+                iqr_s=t.iqr_s,
+                reps=t.reps,
+                achieved_gbps=m / med / 1e9,
+                model_measured_ratio=(m / base_m) / (med / base_t),
+            ))
+        winner = min(range(len(rows)), key=lambda i: (rows[i].median_s, i))
+        never_slower = rows[winner].median_s <= rows[0].median_s
+        # The analytic plan is in the raced set, so the measured argmin
+        # cannot lose to it — this gate failing means the harness itself
+        # is broken (e.g. a non-blocking launch), not a bad model.
+        assert never_slower, (
+            f"tuned winner slower than analytic: "
+            f"{rows[winner].median_s} > {rows[0].median_s}"
+        )
+        rec = TuneRecord(
+            key=request.cache_key(),
+            fingerprint=backend_fingerprint(self.interpret),
+            candidates=tuple(rows),
+            winner=winner,
+            analytic=0,
+            never_slower=never_slower,
+            speedup_vs_analytic=base_t / max(rows[winner].median_s, 1e-12),
+            rank_correlation=_spearman(
+                [r.modeled_bytes for r in rows],
+                [r.median_s for r in rows],
+            ),
+            winner_plan=timed[winner][0],
+            tuned_at=datetime.now(timezone.utc).isoformat(
+                timespec="seconds"
+            ),
+        )
+        self.db.put(rec)
+        self.last_record = rec
+        return rec
+
+    def plan(self, request: PlanRequest | None = None, /, **kw) -> StencilPlan:
+        """Planning entry point with measured preference: warm DB hit →
+        the measured winner (no re-measurement); miss → tune, then the
+        winner.  Signature-compatible with ``Planner.plan``, which is
+        what lets ``stencil_pallas(tune=...)`` swap it in."""
+        if request is None:
+            kw.setdefault("strategy", self.planner.strategy)
+            request = PlanRequest.make(**kw)
+        rec = None
+        if not self.force:
+            rec = self.db.get(
+                request.cache_key(), backend_fingerprint(self.interpret)
+            )
+        self.last_plan_tuned = rec is not None
+        if rec is None:
+            rec = self.tune(request)
+        self.last_record = rec
+        return rec.winner_plan
+
+
+_DEFAULT: AutoTuner | None = None
+
+
+def default_tuner() -> AutoTuner:
+    """Process-wide tuner over the default planner and persistent DB —
+    what ``stencil_pallas(tune=True)`` resolves to."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = AutoTuner()
+    return _DEFAULT
+
+
+def resolve_tuner(tune) -> AutoTuner | None:
+    """The kernel layer's ``tune=`` knob: ``None``/``False`` → no tuning,
+    ``True`` → the default tuner, an :class:`AutoTuner` → itself."""
+    if tune is None or tune is False:
+        return None
+    if tune is True:
+        return default_tuner()
+    return tune
+
+
+# -- reporting -------------------------------------------------------------
+
+
+def _fmt_t(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.3f} s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.3f} ms"
+    return f"{s * 1e6:.1f} us"
+
+
+def format_record(rec: TuneRecord) -> str:
+    """The measured-vs-modeled table of one tune record (also what
+    ``repro.plan.explain --tuned`` prints for a warm entry)."""
+    lines = [
+        f"tuned entry {rec.key[:16]}…  backend {rec.fingerprint}",
+        f"  tuned at {rec.tuned_at}  (schema v{rec.schema}, "
+        f"planner v{rec.planner_version})",
+        "  candidates (measured on the live backend):",
+        "    #  tile              sweep depth shard   modeled MiB  "
+        "measured      iqr        GB/s  model/meas",
+    ]
+    for i, c in enumerate(rec.candidates):
+        mark = (
+            "  <-- winner" if i == rec.winner else
+            "  (analytic)" if i == rec.analytic else ""
+        )
+        lines.append(
+            f"    {i}  {str(c.tile):<17} {str(c.sweep_axis):>5} "
+            f"{c.fused_depth:>5} {str(c.shard_axis):>5} "
+            f"{c.modeled_bytes / (1 << 20):>12.2f}  "
+            f"{_fmt_t(c.median_s):>9}  {_fmt_t(c.iqr_s):>9}  "
+            f"{c.achieved_gbps:>9.3f}  {c.model_measured_ratio:>9.3f}"
+            f"{mark}"
+        )
+    lines += [
+        f"  winner: candidate {rec.winner} "
+        f"({rec.speedup_vs_analytic:.3f}x vs analytic; never_slower="
+        f"{rec.never_slower})",
+        f"  rank correlation (modeled bytes vs measured time): "
+        f"{rec.rank_correlation:+.3f} over {len(rec.candidates)} candidates",
+    ]
+    return "\n".join(lines)
+
+
+# -- CLI -------------------------------------------------------------------
+
+
+def smoke() -> int:
+    """CI gate: tune one tiny grid end-to-end (k=2, n=3 reps, interpret
+    mode on CPU), assert the §11 promises — never_slower holds, the
+    record round-trips, a Planner with the DB attached serves the
+    measured winner on a warm hit in < 1 ms without re-measuring."""
+    import time
+
+    from repro.core.cache_fitting import star_stencil
+
+    db = TunedPlanDB(persistent=False)
+    tuner = AutoTuner(
+        db=db,
+        planner=Planner(cache=PlanCache(persistent=False)),
+        k=2, reps=3, warmup=1,
+    )
+    kw = dict(
+        shape=(16, 16, 128), offsets=star_stencil(3, 1),
+        vmem_budget=256 * 1024, aligned=True,
+    )
+    t0 = time.perf_counter()
+    rec = tuner.tune(**kw)
+    tune_s = time.perf_counter() - t0
+    assert rec.never_slower, "never_slower gate failed"
+    assert rec.speedup_vs_analytic >= 1.0
+    assert len(rec.candidates) >= 1
+    assert TuneRecord.from_dict(rec.to_dict()) == rec, "record round-trip"
+    print(format_record(rec))
+
+    # Warm preference: the planner serves the measured winner, fast.
+    planner = Planner(cache=PlanCache(persistent=False), tuned_db=db)
+    measured_before = db.stats["misses"]
+    warm = []
+    for _ in range(3):  # best-of-3: absorb one-time fingerprint warm-up
+        t0 = time.perf_counter()
+        served = planner.plan(**kw)
+        warm.append((time.perf_counter() - t0) * 1e3)
+        assert planner.last_plan_tuned, "warm hit not served from tuned DB"
+        assert served == rec.winner_plan
+    assert db.stats["misses"] == measured_before, "warm hit re-measured"
+    warm_ms = min(warm)
+    assert warm_ms < 1.0, f"warm tuned hit took {warm_ms:.2f} ms"
+    print(
+        f"tune smoke: {len(rec.candidates)} candidates in {tune_s:.2f} s, "
+        f"winner {rec.winner} ({rec.speedup_vs_analytic:.3f}x), "
+        f"warm_hit={warm_ms:.3f} ms  OK"
+    )
+    return 0
+
+
+def _parse_shape(s: str) -> tuple[int, ...]:
+    for sep in ("x", ","):
+        if sep in s:
+            return tuple(int(p) for p in s.split(sep) if p)
+    return (int(s),)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.plan.tune",
+        description=(
+            "Race the planner's top-k candidate plans on the live backend "
+            "and persist the measured winner (DESIGN.md §11)."
+        ),
+    )
+    ap.add_argument("shape", nargs="?", default="64x64x128",
+                    help="grid shape, e.g. 64x64x128")
+    ap.add_argument("--stencil", default="star:2",
+                    help="star:R or box:R (default star:2)")
+    ap.add_argument("--geom", default="none",
+                    help="cache geometry a,z,w for the analytic model "
+                         "(default none = explicitly managed memory; pass "
+                         "the same value used with repro.plan.explain so "
+                         "the request keys match)")
+    ap.add_argument("--dtype-bytes", type=int, default=4)
+    ap.add_argument("--budget", type=int, default=None,
+                    help="VMEM budget in bytes (default: planner default)")
+    ap.add_argument("--time-steps", type=int, default=1,
+                    help="tune the T-application fused chain (§8)")
+    ap.add_argument("--num-shards", type=int, default=1,
+                    help="tune the §10 column-sharded launch over N devices")
+    ap.add_argument("--aligned", action="store_true",
+                    help="restrict tiles to lane/sublane-aligned extents")
+    ap.add_argument("-k", type=int, default=4,
+                    help="candidates to race (default 4)")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="timed reps per candidate (default 5)")
+    ap.add_argument("--warmup", type=int, default=1,
+                    help="un-timed warm-up calls per candidate (default 1)")
+    ap.add_argument("--db", default=None,
+                    help="tuned DB dir (default $REPRO_TUNED_DB_DIR or "
+                         "~/.cache/repro/tuned)")
+    ap.add_argument("--memory-only", action="store_true",
+                    help="do not persist the record to disk")
+    ap.add_argument("--force", action="store_true",
+                    help="re-measure even when a warm entry exists")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host platform devices (sets XLA_FLAGS; "
+                         "needed for --num-shards > 1 on CPU)")
+    ap.add_argument("--json", action="store_true",
+                    help="dump the tune record JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the CI smoke gates instead")
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        # Must land before the first jax import (lazy imports everywhere
+        # in repro.plan exist exactly so this still works here).
+        import os
+        assert "jax" not in sys.modules, (
+            "--devices must be set before jax is imported"
+        )
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+
+    if args.smoke:
+        return smoke()
+
+    from repro.core.cache_fitting import box_stencil, star_stencil
+
+    shape = _parse_shape(args.shape)
+    kind, _, r = args.stencil.partition(":")
+    r = int(r or 2)
+    if kind == "star":
+        offs = star_stencil(len(shape), r)
+    elif kind == "box":
+        offs = box_stencil(len(shape), r)
+    else:
+        raise SystemExit(f"unknown stencil spec {args.stencil!r}")
+
+    db = TunedPlanDB(db_dir=args.db, persistent=not args.memory_only)
+    tuner = AutoTuner(
+        db=db, k=args.k, reps=args.reps, warmup=args.warmup,
+        force=args.force,
+    )
+    geometry = None if args.geom.lower() == "none" else _parse_shape(args.geom)
+    tuner.plan(
+        shape=shape, offsets=offs, dtype_bytes=args.dtype_bytes,
+        vmem_budget=args.budget, geometry=geometry,
+        time_steps=args.time_steps, num_shards=args.num_shards,
+        aligned=args.aligned,
+    )
+    rec = tuner.last_record
+    if args.json:
+        import json
+        print(json.dumps(rec.to_dict(), indent=2, sort_keys=True))
+        return 0
+    served = "warm DB hit (no re-measurement)" if tuner.last_plan_tuned \
+        else "measured fresh"
+    print(format_record(rec))
+    print(f"  served: {served}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -184,3 +184,22 @@ def test_unwritable_dir_degrades(tmp_path):
     plan = Planner(cache=cache).plan(_request())
     assert plan is not None
     assert cache.stats["disk_errors"] >= 1
+
+
+def test_unwritable_dir_degrades_once(tmp_path, caplog):
+    """The first disk error drops the directory and logs one warning;
+    later requests are memory-only, not one silent stat+miss per call."""
+    blocked = tmp_path / "file.txt"
+    blocked.write_text("")
+    cache = PlanCache(cache_dir=str(blocked / "sub"))
+    planner = Planner(cache=cache)
+    with caplog.at_level("WARNING", logger="repro.plan.cache"):
+        plan = planner.plan(_request())
+        planner.plan(shape=(64, 64, 64), offsets=star_stencil(3, 2))
+    assert cache.dir is None                  # degraded to memory-only
+    assert cache.stats["disk_errors"] == 1    # ... after exactly one error
+    assert len(caplog.records) == 1           # ... and exactly one warning
+    assert "degrading to in-memory-only" in caplog.records[0].message
+    # The memory level still serves warm hits.
+    assert planner.plan(_request()) == plan
+    assert cache.stats["mem_hits"] >= 1
