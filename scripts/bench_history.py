@@ -1,0 +1,166 @@
+#!/usr/bin/env python
+"""Perf-trajectory aggregator: read every BENCH_PR*.json, verify the
+embedded gate chain, print one table.
+
+Each PR's benchmark emitter embeds a freshly re-measured copy of the
+previous PR's record (``pr{n-1}_<name>`` key), so BENCH_PR6 transitively
+re-asserts every gate back to PR1.  Nothing aggregated these artifacts
+until now: this script
+
+* loads all ``BENCH_PR*.json`` in the repo root (or ``--root``),
+* verifies the chain — every standalone record and every embedded record
+  has all boolean gates true, embedded ``pr`` numbers count down without
+  gaps (PR6 ⊃ PR5 ⊃ … ⊃ PR1),
+* prints the perf trajectory: per PR the headline modeled/measured
+  metric (traffic cut, warm-hit latency, fused reduction, flop cut,
+  parallel efficiency, autotune speedup) and its gate status.
+
+Exit status 0 iff every gate in every record (embedded included) holds.
+Run by ``scripts/ci.sh``; ``--json`` emits the table machine-readably.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+# Headline metric per PR: (key into acceptance, printed label, format).
+_HEADLINES = {
+    1: ("achieved_traffic_ratio", "traffic cut vs naive", "{:.2f}x"),
+    2: ("warm_hit_ms", "warm plan-cache hit", "{:.3f} ms"),
+    3: ("achieved_reduction_vmem", "fused traffic cut (T=3)", "{:.2f}x"),
+    4: ("achieved_flop_reduction_vmem", "streaming flop cut", "{:.2f}x"),
+    5: ("achieved_parallel_efficiency_s8", "parallel efficiency (S=8)",
+        "{:.2f}"),
+    6: ("achieved_warm_hit_ms", "warm tuned hit", "{:.3f} ms"),
+}
+
+
+def gates_ok(gates: dict) -> bool:
+    """Every boolean-valued entry true (numbers are informational)."""
+    return all(v for v in gates.values() if isinstance(v, bool))
+
+
+def _embedded(record: dict) -> dict | None:
+    """The previous PR's record embedded under its ``pr{n-1}_*`` key."""
+    for key, val in record.items():
+        if re.match(r"^pr\d+_", key) and isinstance(val, dict):
+            return val
+    return None
+
+
+def verify_chain(record: dict) -> tuple[list[int], list[str]]:
+    """Walk a record's embedded chain; return (prs seen, problems)."""
+    seen: list[int] = []
+    problems: list[str] = []
+    node: dict | None = record
+    while node is not None:
+        pr = int(node.get("pr", -1))
+        acc = node.get("acceptance", {})
+        if not isinstance(acc, dict) or not acc:
+            problems.append(f"PR{pr}: no acceptance gates")
+        elif not gates_ok(acc):
+            failed = [k for k, v in acc.items() if isinstance(v, bool)
+                      and not v]
+            problems.append(f"PR{pr}: gates failed: {failed}")
+        if seen and pr != seen[-1] - 1:
+            problems.append(
+                f"PR{seen[-1]}: embedded record is PR{pr}, expected "
+                f"PR{seen[-1] - 1} (chain gap)"
+            )
+        seen.append(pr)
+        node = _embedded(node)
+    return seen, problems
+
+
+def collect(root: Path) -> list[dict]:
+    """Load every BENCH_PR*.json sorted by PR number."""
+    records = []
+    for path in sorted(root.glob("BENCH_PR*.json")):
+        with open(path) as fh:
+            rec = json.load(fh)
+        rec["_file"] = path.name
+        records.append(rec)
+    records.sort(key=lambda r: int(r.get("pr", 0)))
+    return records
+
+
+def trajectory(records: list[dict]) -> list[dict]:
+    rows = []
+    for rec in records:
+        pr = int(rec.get("pr", 0))
+        acc = rec.get("acceptance", {})
+        key, label, fmt = _HEADLINES.get(
+            pr, (None, rec.get("benchmark", "?"), "{}")
+        )
+        value = acc.get(key) if key else None
+        chain, problems = verify_chain(rec)
+        rows.append({
+            "pr": pr,
+            "file": rec["_file"],
+            "benchmark": rec.get("benchmark", "?"),
+            "headline": label,
+            "value": value,
+            "value_str": fmt.format(value) if value is not None else "-",
+            "never_slower": acc.get("never_slower_ok"),
+            "gates_ok": gates_ok(acc) if acc else False,
+            "chain": chain,
+            "chain_ok": not problems,
+            "problems": problems,
+        })
+    return rows
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Aggregate BENCH_PR*.json into one perf trajectory and "
+        "verify the embedded gate chain.",
+    )
+    ap.add_argument("--root", default=None,
+                    help="repo root holding BENCH_PR*.json (default: the "
+                    "parent of this script)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the trajectory rows as JSON")
+    args = ap.parse_args(argv)
+    root = Path(args.root) if args.root else \
+        Path(__file__).resolve().parent.parent
+    records = collect(root)
+    if not records:
+        print(f"bench_history: no BENCH_PR*.json under {root}",
+              file=sys.stderr)
+        return 1
+    rows = trajectory(records)
+    all_problems = [p for r in rows for p in r["problems"]]
+    if args.json:
+        print(json.dumps({"rows": rows, "ok": not all_problems}, indent=2))
+        return 1 if all_problems else 0
+    hdr = (
+        f"{'PR':>3}  {'benchmark':<22} {'headline metric':<26} "
+        f"{'value':>11}  {'gates':>5}  chain"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        chain = "⊃".join(f"PR{n}" for n in r["chain"])
+        print(
+            f"{r['pr']:>3}  {r['benchmark']:<22} {r['headline']:<26} "
+            f"{r['value_str']:>11}  "
+            f"{'ok' if r['gates_ok'] else 'FAIL':>5}  {chain}"
+        )
+    if all_problems:
+        print("bench_history: CHAIN BROKEN:")
+        for p in all_problems:
+            print(f"  {p}")
+        return 1
+    deepest = max(rows, key=lambda r: len(r["chain"]))
+    print(
+        f"bench_history: {len(rows)} records, deepest chain "
+        f"{len(deepest['chain'])} deep ({deepest['file']}), all gates hold"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

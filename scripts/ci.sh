@@ -15,7 +15,11 @@
 # The JSON pass re-derives the measured-vs-modeled table checked in at
 # BENCH_PR6.json (never_slower on every grid incl. the unfavorable one,
 # warm hit < 1 ms without re-measurement, PR5/PR4/PR3/PR2/PR1 gates
-# embedded); a drift there is a perf regression, not flake.
+# embedded); a drift there is a perf regression, not flake.  The obs
+# smoke (§12) runs one tuned 4-way-sharded fused T=3 chain under
+# REPRO_TRACE, asserts the trace parses as valid trace_event JSON, and
+# gates on repro.obs.report --check reconciling counters against spans;
+# bench_history.py then verifies the PR6⊃…⊃PR1 embedded gate chain.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -26,3 +30,40 @@ python -m repro.plan.explain --smoke
 python -m repro.plan.tune --smoke
 python scripts/check_docs.py
 python -m benchmarks.run --json
+
+# --- §12 observability smoke -------------------------------------------
+OBS_TMP="$(mktemp -d)"
+trap 'rm -rf "$OBS_TMP"' EXIT
+REPRO_TRACE="$OBS_TMP/trace.json" python - <<'PY'
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+import numpy as np
+import jax.numpy as jnp
+from repro.core.cache_fitting import star_stencil
+from repro.kernels.stencil import stencil_iterate
+from repro.plan import AutoTuner, PlanCache, Planner, TunedPlanDB
+
+offs = star_stencil(3, 1)
+w = [1.0 / len(offs)] * len(offs)
+u = jnp.asarray(
+    np.random.default_rng(0).standard_normal((16, 32, 128)), jnp.float32
+)
+tuner = AutoTuner(
+    db=TunedPlanDB(persistent=False),
+    planner=Planner(cache=PlanCache(persistent=False)),
+    k=2, reps=2, warmup=1,
+)
+stencil_iterate(u, offs, w, 3, num_shards=4, tune=tuner)
+PY
+python - "$OBS_TMP/trace.json" <<'PY'
+import json, sys
+from repro.obs.trace_event import validate_trace
+doc = validate_trace(json.load(open(sys.argv[1])))
+counters = doc["otherData"]["counters"]
+assert counters["launches"] > 0, counters
+assert counters["modeled_bytes"] > 0, counters
+print(f"obs smoke: trace valid, {counters['launches']} launches, "
+      f"{counters['modeled_bytes']} modeled bytes")
+PY
+python -m repro.obs.report "$OBS_TMP/trace.json" --check
+python scripts/bench_history.py

@@ -6,46 +6,71 @@ interpreter everywhere else.  The seed resolved ``interpret=None`` as
 ``backend == "cpu"``, which left any *other* backend (gpu, rocm, plugin
 devices) with ``interpret=False`` and a crash deep inside Mosaic lowering.
 ``resolve_interpret`` centralizes the decision: TPU compiles, everything
-else interprets, and unsupported backends warn once per process so the
-silent slow path is visible.
+else interprets.
+
+An unsupported backend logs a WARNING the first time it is seen (DEBUG
+thereafter — a long-lived server must not drown in repeats, but also must
+not go silent after kernel #1, which is what the seed's once-per-process
+``warnings.warn`` did) and *always* records an ``interpret_fallback``
+obs counter + event, so every fallback is countable per kernel even when
+logging is filtered.
 """
 
 from __future__ import annotations
 
-import warnings
+import logging
 
 import jax
 
+from .. import obs
+
 __all__ = ["resolve_interpret"]
+
+logger = logging.getLogger(__name__)
 
 # Backends the pltpu kernels handle natively: TPU compiles through Mosaic,
 # CPU is the documented interpret-mode CI path (no warning needed).
 _NATIVE = ("tpu", "cpu")
 
-_warned_backends: set[str] = set()
+_seen_backends: set[str] = set()
 
 
-def resolve_interpret(interpret: bool | None) -> bool:
+def resolve_interpret(
+    interpret: bool | None, kernel: str | None = None
+) -> bool:
     """Resolve the ``interpret=None`` default against the active backend.
 
     * explicit True/False is always honored (escape hatch);
     * TPU -> compiled kernels (``False``);
     * CPU -> interpreter (``True``), the CI path;
-    * anything else (gpu, plugin backends) -> interpreter with a one-time
-      ``RuntimeWarning`` instead of a Mosaic lowering crash.
+    * anything else (gpu, plugin backends) -> interpreter, logged at
+      WARNING on first sight of the backend (DEBUG after), and counted
+      via the ``interpret_fallback`` obs counter every single time.
+
+    ``kernel`` names the calling frontend (``"stencil"``, ``"conv1d"``)
+    for the log line and the obs event.
     """
     if interpret is not None:
         return bool(interpret)
     backend = jax.default_backend()
     if backend == "tpu":
         return False
-    if backend not in _NATIVE and backend not in _warned_backends:
-        _warned_backends.add(backend)
-        warnings.warn(
-            f"repro.kernels: backend {backend!r} cannot compile Pallas TPU "
-            "kernels; falling back to interpret mode (correct but slow). "
-            "Pass interpret=False to force compilation anyway.",
-            RuntimeWarning,
-            stacklevel=3,
+    if backend not in _NATIVE:
+        level = (
+            logging.DEBUG if backend in _seen_backends else logging.WARNING
         )
+        _seen_backends.add(backend)
+        logger.log(
+            level,
+            "backend %r cannot compile Pallas TPU kernels; falling back to "
+            "interpret mode for kernel %s (correct but slow). Pass "
+            "interpret=False to force compilation anyway.",
+            backend, kernel or "<unnamed>",
+        )
+        obs.add("interpret_fallback")
+        if obs.enabled():
+            obs.event(
+                "interpret_fallback", backend=backend,
+                kernel=kernel or "<unnamed>",
+            )
     return True

@@ -201,7 +201,7 @@ def causal_conv1d(
     tail of the previous sequence used as the leading halo (serving path;
     not differentiated).  ``tile_s=None`` asks the plan compiler for the
     traffic-minimizing sweep tile."""
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="conv1d")
     if tile_s is None:
         tile_s = _planned_tile_s(
             int(x.shape[1]), int(x.shape[2]), int(conv_w.shape[0]),

@@ -72,6 +72,7 @@ from repro.core.tiling import (  # shared with the planner
     stage_suffix_halos,
 )
 
+from .. import obs
 from ._backend import resolve_interpret
 
 if TYPE_CHECKING:
@@ -570,6 +571,7 @@ def stencil_pallas(
     shard_axis: int | None = None,
     mesh=None,
     tune=None,
+    trace: str | None = None,
 ) -> jnp.ndarray:
     """Single-array weighted stencil, zero boundary fill (matches ref).
 
@@ -594,12 +596,17 @@ def stencil_pallas(
     (DESIGN.md §10, :mod:`repro.parallel.shard_columns`): bit-wise equal
     to the single-device launch, with halo exchange only at shard
     boundaries.  ``shard_axis`` picks the partitioned cross axis
-    (default: the plan's, else the cross axis with the most columns)."""
+    (default: the plan's, else the cross axis with the most columns).
+
+    ``trace="path.json"`` records this one call — plan span, cache
+    lookups, kernel launches — into a Chrome ``trace_event`` file via
+    :mod:`repro.obs` (equivalent to wrapping the call in
+    ``obs.recording(path)``)."""
     return multi_stencil_pallas(
         [u], [offsets], [weights], tile=tile, interpret=interpret,
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
         plan=plan, time_steps=time_steps, num_shards=num_shards,
-        shard_axis=shard_axis, mesh=mesh, tune=tune,
+        shard_axis=shard_axis, mesh=mesh, tune=tune, trace=trace,
     )
 
 
@@ -619,6 +626,7 @@ def stencil_iterate(
     shard_axis: int | None = None,
     mesh=None,
     tune=None,
+    trace: str | None = None,
 ) -> jnp.ndarray:
     """Run a stage-chain stencil program — the iterative-solver workload.
 
@@ -655,7 +663,7 @@ def stencil_iterate(
             vmem_budget=vmem_budget, sweep_axis=sweep_axis,
             pipelined=pipelined, plan=plan, stages=stages,
             num_shards=num_shards, shard_axis=shard_axis, mesh=mesh,
-            tune=tune,
+            tune=tune, trace=trace,
         )
     if offsets is None or weights is None or time_steps is None:
         raise ValueError(
@@ -665,7 +673,7 @@ def stencil_iterate(
         [u], [offsets], [weights], tile=tile, interpret=interpret,
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
         plan=plan, time_steps=time_steps, num_shards=num_shards,
-        shard_axis=shard_axis, mesh=mesh, tune=tune,
+        shard_axis=shard_axis, mesh=mesh, tune=tune, trace=trace,
     )
 
 
@@ -685,6 +693,7 @@ def multi_stencil_pallas(
     shard_axis: int | None = None,
     mesh=None,
     tune=None,
+    trace: str | None = None,
 ) -> jnp.ndarray:
     """p-RHS stencil  q = Σ_p K_p u_p  (paper §5): one VMEM budget split
     across p operand windows plus the output tile, one shared sweep.
@@ -708,7 +717,20 @@ def multi_stencil_pallas(
     ``num_shards``/``shard_axis``/``mesh`` resolve the same way as the
     tile (explicit args win, then the plan, then 1 / auto) and route every
     launch through the §10 column-sharded path; sharding is an execution
-    knob — it never changes the result (bit-wise) or the tile choice."""
+    knob — it never changes the result (bit-wise) or the tile choice.
+
+    ``trace="path.json"`` records this call into a Chrome ``trace_event``
+    file (see :mod:`repro.obs`)."""
+    if trace is not None:
+        with obs.recording(trace):
+            return multi_stencil_pallas(
+                us, offsets_list, weights_list, tile=tile,
+                interpret=interpret, vmem_budget=vmem_budget,
+                sweep_axis=sweep_axis, pipelined=pipelined, plan=plan,
+                time_steps=time_steps, stages=stages,
+                num_shards=num_shards, shard_axis=shard_axis, mesh=mesh,
+                tune=tune,
+            )
     us = tuple(us)
     assert len({u.shape for u in us}) == 1, "RHS arrays must share a shape"
     d = us[0].ndim
@@ -757,7 +779,7 @@ def multi_stencil_pallas(
             chain = (op,) * T
         else:
             chain = None
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="stencil")
     explicit_sweep = sweep_axis is not None
     explicit_shard = shard_axis is not None
     if num_shards is None:
@@ -771,6 +793,7 @@ def multi_stencil_pallas(
             "tune= requests the §11 measured-cost planning loop, but "
             "plan=/tile= pin the decision already — pass one or the other"
         )
+    resolved_plan = None
     if plan is not None:
         from repro.plan import validate_plan_call
 
@@ -790,6 +813,7 @@ def multi_stencil_pallas(
             shard_axis = plan.shard_axis
         pipelined = pipelined and plan.pipelined
         depth = plan.fused_depth
+        resolved_plan = plan
     elif tile is None:
         choice = _auto_tile(
             us[0].shape, offsets_list, us[0].dtype.itemsize, len(us),
@@ -806,6 +830,7 @@ def multi_stencil_pallas(
         if shard_axis is None:
             shard_axis = choice.shard_axis
         depth = choice.fused_depth
+        resolved_plan = choice
     if sweep_axis is None:
         sweep_axis = 0
     if depth is None:
@@ -852,29 +877,59 @@ def multi_stencil_pallas(
         offs, wts = op
         return (tuple(map(tuple, np.asarray(offs).tolist())), tuple(wts))
 
+    def launch_span(n_run):
+        # Only called with recording on: prices this launch's slice of
+        # the plan's whole-chain model (n_run of T stages) and bumps the
+        # counters the report CLI reconciles against the spans.
+        p = resolved_plan
+        if p is not None:
+            chain_bytes = (
+                p.per_shard_traffic_bytes * p.num_shards
+                + p.halo_exchange_bytes
+            )
+            n_stages = max(len(chain) if chain is not None else 1, 1)
+            mb = round(chain_bytes * n_run / n_stages)
+            mf = round(p.modeled_flops * n_run / n_stages)
+            plan_key = p.request.cache_key()
+        else:
+            mb = mf = 0  # explicit tile: the caller owns the model
+            plan_key = "<explicit-tile>"
+        obs.add("launches")
+        obs.add("modeled_bytes", mb)
+        obs.add("modeled_flops", mf)
+        return obs.span(
+            "kernel_launch",
+            plan_key=plan_key, tile=list(tile), sweep_axis=sweep_axis,
+            fused_depth=int(depth), steps=n_run, num_shards=num_shards,
+            interpret=interpret, modeled_bytes=mb, modeled_flops=mf,
+        )
+
     if chain is None:  # multi-RHS single application
         offsets_w = tuple(
             static_spec((o, tuple(float(w) for w in ws)))
             for o, ws in zip(offsets_list, weights_list)
         )
-        return launcher(
-            us, offsets_w, tile, sweep_axis, pipelined, interpret,
-        )
+        with launch_span(1) if obs.enabled() else obs.NULL_SPAN:
+            return launcher(
+                us, offsets_w, tile, sweep_axis, pipelined, interpret,
+            )
     arrays = us
     pos = 0
     while True:
         run = chain[pos : pos + int(depth)]
         pos += len(run)
-        if len(run) == 1:
-            result = launcher(
-                arrays, (static_spec(run[0]),), tile, sweep_axis, pipelined,
-                interpret,
-            )
-        else:
-            result = launcher(
-                arrays, (static_spec(run[0]),), tile, sweep_axis, pipelined,
-                interpret, stages_w=tuple(static_spec(op) for op in run),
-            )
+        with launch_span(len(run)) if obs.enabled() else obs.NULL_SPAN:
+            if len(run) == 1:
+                result = launcher(
+                    arrays, (static_spec(run[0]),), tile, sweep_axis,
+                    pipelined, interpret,
+                )
+            else:
+                result = launcher(
+                    arrays, (static_spec(run[0]),), tile, sweep_axis,
+                    pipelined, interpret,
+                    stages_w=tuple(static_spec(op) for op in run),
+                )
         if pos == len(chain):
             return result
         arrays = (result,)

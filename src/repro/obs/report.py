@@ -1,0 +1,237 @@
+"""``python -m repro.obs.report trace.json`` — reconcile a recorded trace.
+
+Reads a ``trace_event`` JSON file written by :mod:`repro.obs` and prints
+the evidence trail the paper's model promises (DESIGN.md §12):
+
+* a per-launch reconciliation table — plan key, fused depth, shard
+  count, tile, **modeled bytes vs measured wall time vs achieved GB/s**
+  — one row per ``kernel_launch`` span;
+* the tune-race outcome (candidate ranks, measured medians, winner);
+* the counter totals (cache hits/misses, fallbacks, modeled totals).
+
+``--check`` additionally asserts the internal bookkeeping reconciles —
+the ``launches`` counter matches the number of launch spans, the summed
+per-span ``modeled_bytes`` match the ``modeled_bytes`` counter, and the
+summed ``measure`` span nanoseconds match ``measured_ns`` — exiting
+non-zero on any mismatch.  This is what the CI obs smoke runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any
+
+from .trace_event import load_trace
+
+__all__ = ["main", "reconcile", "summarize"]
+
+
+def _spans(doc: dict, name: str) -> list[dict]:
+    return [
+        ev for ev in doc["traceEvents"]
+        if ev.get("ph") == "X" and ev.get("name") == name
+    ]
+
+
+def _counters(doc: dict) -> dict[str, int]:
+    # Prefer the final totals stashed by the exporter; fall back to the
+    # last ph:"C" sample per counter for traces from other producers.
+    other = doc.get("otherData") or {}
+    if isinstance(other.get("counters"), dict):
+        return dict(other["counters"])
+    totals: dict[str, int] = {}
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") == "C":
+            for k, v in (ev.get("args") or {}).items():
+                totals[k] = v
+    return totals
+
+
+def summarize(doc: dict) -> dict[str, Any]:
+    """Digest a trace into the report's row data (pure, testable)."""
+    counters = _counters(doc)
+    launches = []
+    for ev in _spans(doc, "kernel_launch"):
+        args = ev.get("args") or {}
+        dur_us = float(ev.get("dur", 0.0))
+        modeled = int(args.get("modeled_bytes", 0))
+        launches.append({
+            "plan_key": str(args.get("plan_key", "?")),
+            "fused_depth": args.get("fused_depth"),
+            "num_shards": args.get("num_shards"),
+            "tile": args.get("tile"),
+            "steps": args.get("steps"),
+            "modeled_bytes": modeled,
+            "modeled_flops": int(args.get("modeled_flops", 0)),
+            "dur_us": dur_us,
+            "gb_per_s": (modeled / (dur_us * 1e3)) if dur_us > 0 else 0.0,
+        })
+    races = []
+    for ev in _spans(doc, "tune_race"):
+        args = ev.get("args") or {}
+        races.append({
+            "key": str(args.get("plan_key", "?")),
+            "candidates": args.get("candidates"),
+            "winner_rank": args.get("winner_rank"),
+            "winner_source": args.get("source"),
+            "dur_us": float(ev.get("dur", 0.0)),
+        })
+    candidates = []
+    for ev in _spans(doc, "tune_candidate"):
+        args = ev.get("args") or {}
+        candidates.append({
+            "rank": args.get("rank"),
+            "tile": args.get("tile"),
+            "fused_depth": args.get("fused_depth"),
+            "median_ms": args.get("median_ms"),
+            "dur_us": float(ev.get("dur", 0.0)),
+        })
+    measures = _spans(doc, "measure")
+    return {
+        "counters": counters,
+        "launches": launches,
+        "races": races,
+        "candidates": candidates,
+        "n_plan_spans": len(_spans(doc, "plan")),
+        "n_measure_spans": len(measures),
+        "measure_ns_total": int(
+            sum((m.get("args") or {}).get("measured_ns", 0) for m in measures)
+        ),
+        "n_exchange_spans": len(_spans(doc, "halo_exchange")),
+    }
+
+
+def reconcile(summary: dict[str, Any]) -> list[str]:
+    """Cross-check counters against spans; returns mismatch messages."""
+    problems: list[str] = []
+    c = summary["counters"]
+    launches = summary["launches"]
+    n_counter = int(c.get("launches", 0))
+    if n_counter != len(launches):
+        problems.append(
+            f"launches counter={n_counter} but {len(launches)} "
+            f"kernel_launch spans recorded"
+        )
+    span_bytes = sum(l["modeled_bytes"] for l in launches)
+    if span_bytes != int(c.get("modeled_bytes", 0)):
+        problems.append(
+            f"modeled_bytes counter={c.get('modeled_bytes', 0)} but launch "
+            f"spans sum to {span_bytes}"
+        )
+    span_flops = sum(l["modeled_flops"] for l in launches)
+    if span_flops != int(c.get("modeled_flops", 0)):
+        problems.append(
+            f"modeled_flops counter={c.get('modeled_flops', 0)} but launch "
+            f"spans sum to {span_flops}"
+        )
+    if summary["measure_ns_total"] != int(c.get("measured_ns", 0)):
+        problems.append(
+            f"measured_ns counter={c.get('measured_ns', 0)} but measure "
+            f"spans sum to {summary['measure_ns_total']}"
+        )
+    return problems
+
+
+def _fmt_bytes(n: int) -> str:
+    for unit, div in (("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)):
+        if n >= div:
+            return f"{n / div:.2f} {unit}"
+    return f"{n} B"
+
+
+def render(summary: dict[str, Any]) -> str:
+    lines: list[str] = []
+    launches = summary["launches"]
+    lines.append(f"launches: {len(launches)}")
+    if launches:
+        hdr = (
+            f"{'#':>3}  {'plan key':<14} {'T':>3} {'shards':>6} "
+            f"{'tile':<14} {'modeled':>12} {'wall ms':>9} {'GB/s':>8}"
+        )
+        lines += [hdr, "-" * len(hdr)]
+        for i, l in enumerate(launches):
+            tile = "x".join(map(str, l["tile"])) if l["tile"] else "-"
+            lines.append(
+                f"{i:>3}  {l['plan_key'][:14]:<14} "
+                f"{l['fused_depth'] or 1:>3} {l['num_shards'] or 1:>6} "
+                f"{tile:<14} {_fmt_bytes(l['modeled_bytes']):>12} "
+                f"{l['dur_us'] / 1e3:>9.3f} {l['gb_per_s']:>8.2f}"
+            )
+    for race in summary["races"]:
+        lines.append(
+            f"tune race: key={race['key'][:14]} "
+            f"candidates={race['candidates']} "
+            f"winner_rank={race['winner_rank']} "
+            f"source={race['winner_source']} "
+            f"({race['dur_us'] / 1e3:.1f} ms)"
+        )
+    for cand in summary["candidates"]:
+        tile = "x".join(map(str, cand["tile"])) if cand["tile"] else "-"
+        med = cand["median_ms"]
+        lines.append(
+            f"  candidate rank={cand['rank']} tile={tile} "
+            f"T={cand['fused_depth']} "
+            f"median={med:.3f} ms" if isinstance(med, (int, float))
+            else f"  candidate rank={cand['rank']} tile={tile}"
+        )
+    lines.append(
+        f"spans: plan={summary['n_plan_spans']} "
+        f"measure={summary['n_measure_spans']} "
+        f"halo_exchange={summary['n_exchange_spans']}"
+    )
+    counters = summary["counters"]
+    if counters:
+        lines.append("counters:")
+        for name in sorted(counters):
+            lines.append(f"  {name:<24} {counters[name]}")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Reconcile a repro.obs trace_event JSON file.",
+    )
+    ap.add_argument("trace", help="path to a REPRO_TRACE/recording() output")
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="exit non-zero unless counters reconcile against spans",
+    )
+    ap.add_argument(
+        "--json",
+        action="store_true",
+        help="emit the summary as JSON instead of a table",
+    )
+    ns = ap.parse_args(argv)
+    try:
+        doc = load_trace(ns.trace)
+    except (OSError, ValueError, json.JSONDecodeError) as exc:
+        print(f"repro.obs.report: invalid trace {ns.trace!r}: {exc}",
+              file=sys.stderr)
+        return 2
+    summary = summarize(doc)
+    problems = reconcile(summary)
+    if ns.json:
+        print(json.dumps(
+            {"summary": summary, "reconciled": not problems,
+             "problems": problems},
+            indent=2, default=str,
+        ))
+    else:
+        print(render(summary))
+        if problems:
+            print("RECONCILIATION MISMATCH:")
+            for p in problems:
+                print(f"  {p}")
+        else:
+            print("reconciled: counters match spans")
+    if ns.check and problems:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

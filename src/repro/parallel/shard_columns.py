@@ -44,6 +44,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from .. import obs
+
 __all__ = ["column_launcher", "pick_shard_axis", "sharded_stencil_call"]
 
 
@@ -134,6 +136,33 @@ def sharded_stencil_call(
         mesh, a, tile, sweep, bool(pipelined), bool(interpret), offsets_w,
         stages_w, tuple(int(n) for n in u0.shape), str(u0.dtype), len(us),
     )
+    if obs.enabled():
+        # The exchange itself runs inside the jitted SPMD program, so the
+        # Python layer records the *modeled* geometry (same arithmetic as
+        # _build_sharded): ppermute rounds and cross-device bytes per
+        # launch.  The span wraps the whole sharded dispatch.
+        from repro.kernels.stencil import _launch_geometry, _round_up
+
+        S = int(mesh.shape[mesh.axis_names[0]])
+        *_, lo_w, hi_w = _launch_geometry(offsets_w, stages_w, tile)
+        lo_a, hi_a = int(lo_w[a]), int(hi_w[a])
+        padded = [_round_up(int(n), t) for n, t in zip(u0.shape, tile)]
+        cross_ext = prod(
+            padded[i] + lo_w[i] + hi_w[i] for i in range(d) if i != a
+        )
+        rounds = len(us) * (int(lo_a > 0) + int(hi_a > 0))
+        xbytes = (
+            len(us) * (S - 1) * (lo_a + hi_a) * cross_ext
+            * u0.dtype.itemsize
+        )
+        obs.add("halo_exchange_rounds", rounds)
+        obs.add("halo_exchange_bytes", xbytes)
+        with obs.span(
+            "halo_exchange", shard_axis=a, num_shards=S,
+            rows_lo=lo_a, rows_hi=hi_a,
+            exchange_rounds=rounds, exchange_bytes=xbytes,
+        ):
+            return run(*us)
     return run(*us)
 
 

@@ -23,6 +23,7 @@ import os
 import tempfile
 from collections import OrderedDict
 
+from .. import obs
 from .schema import PLANNER_VERSION, StencilPlan
 
 __all__ = ["PlanCache", "default_cache_dir"]
@@ -37,6 +38,24 @@ def default_cache_dir() -> str:
     if env:
         return env
     return os.path.join(os.path.expanduser("~"), ".cache", "repro", "plans")
+
+
+class _Stats(dict):
+    """Counter store that is both a dict and callable.
+
+    ``cache.stats["misses"]`` keeps working everywhere it is used today;
+    ``cache.stats()`` returns a snapshot that additionally reports the
+    ``degraded`` flag (did a disk error drop the directory?), which is
+    state, not a counter, and so has no natural dict slot."""
+
+    def __init__(self, owner, counts: dict):
+        super().__init__(counts)
+        self._owner = owner
+
+    def __call__(self) -> dict:
+        snap = dict(self)
+        snap["degraded"] = self._owner.degraded
+        return snap
 
 
 class PlanCache:
@@ -55,8 +74,9 @@ class PlanCache:
     ):
         self.capacity = int(capacity)
         self.dir = (cache_dir or default_cache_dir()) if persistent else None
+        self._degraded = False
         self._mem: OrderedDict[str, StencilPlan] = OrderedDict()
-        self.stats = {
+        self.stats = _Stats(self, {
             "hits": 0,
             "misses": 0,
             "mem_hits": 0,
@@ -64,7 +84,13 @@ class PlanCache:
             "corrupt": 0,
             "evictions": 0,
             "disk_errors": 0,
-        }
+        })
+
+    @property
+    def degraded(self) -> bool:
+        """True once a disk error dropped the directory (memory-only now).
+        ``persistent=False`` is a *choice*, not a degrade."""
+        return self._degraded
 
     # -- internals ---------------------------------------------------------
 
@@ -82,6 +108,11 @@ class PlanCache:
                 "in-memory-only for this process",
                 self.dir, type(exc).__name__, exc,
             )
+            self._degraded = True
+            obs.add("plan_cache_degrade")
+            if obs.enabled():
+                obs.event("plan_cache_degrade", dir=self.dir,
+                          error=f"{type(exc).__name__}: {exc}")
             self.dir = None
 
     def _remember(self, key: str, plan: StencilPlan) -> None:
@@ -94,6 +125,18 @@ class PlanCache:
     # -- API ---------------------------------------------------------------
 
     def get(self, key: str) -> StencilPlan | None:
+        # The warm serving path must stay sub-ms with recording off: one
+        # predicate check, then straight to the lookup.
+        if obs.enabled():
+            with obs.span("plan_cache_lookup", key=key) as sp:
+                plan = self._get(key)
+                sp.set(outcome="hit" if plan is not None else "miss")
+            obs.add("plan_cache_hit" if plan is not None
+                    else "plan_cache_miss")
+            return plan
+        return self._get(key)
+
+    def _get(self, key: str) -> StencilPlan | None:
         plan = self._mem.get(key)
         if plan is not None:
             self._mem.move_to_end(key)

@@ -35,7 +35,7 @@ from .cache import PlanCache
 from .planner import Planner
 from .schema import StencilPlan
 
-__all__ = ["format_plan", "main", "smoke"]
+__all__ = ["format_plan", "main", "plan_json_doc", "smoke"]
 
 
 def _parse_shape(s: str) -> tuple[int, ...]:
@@ -160,6 +160,42 @@ def format_plan(plan: StencilPlan, validation: dict | None = None) -> str:
             )
         )
     return "\n".join(lines)
+
+
+def plan_json_doc(plan: StencilPlan) -> dict:
+    """The ``--json`` document: the full frozen plan (round-trips through
+    ``StencilPlan.from_dict``), the per-depth score table, and a
+    ``report`` block carrying the same fields ``repro.obs.report`` prints
+    per launch — so a trace row and an explain dump reconcile key-for-key.
+    """
+    return {
+        "plan": plan.to_dict(),
+        "depth_scores": [
+            {
+                "depth": d,
+                "traffic_bytes": tr,
+                "streaming_flops": fl,
+                "chosen": d == plan.fused_depth,
+            }
+            for d, tr, fl in plan.depth_scores
+        ],
+        "report": {
+            "plan_key": plan.request.cache_key(),
+            "tile": list(plan.tile),
+            "sweep_axis": plan.sweep_axis,
+            "fused_depth": plan.fused_depth,
+            "time_steps": plan.time_steps,
+            "num_shards": plan.num_shards,
+            "shard_axis": plan.shard_axis,
+            "modeled_bytes": (
+                plan.per_shard_traffic_bytes * plan.num_shards
+                + plan.halo_exchange_bytes
+            ),
+            "modeled_flops": plan.modeled_flops,
+            "traffic_vs_legacy": plan.traffic_vs_legacy,
+            "efficiency": plan.efficiency,
+        },
+    }
 
 
 def smoke() -> int:
@@ -295,7 +331,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--db", default=None,
                     help="tuned-plan DB directory for --tuned "
                     "(default: REPRO_TUNED_DB_DIR or ~/.cache/repro/tuned)")
-    ap.add_argument("--json", action="store_true", help="dump the plan JSON")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output: the full plan, the "
+                    "depth-score table, and the obs-report summary fields")
     ap.add_argument("--smoke", action="store_true",
                     help="run the CI smoke gates instead")
     args = ap.parse_args(argv)
@@ -312,7 +350,9 @@ def main(argv: list[str] | None = None) -> int:
         time_steps=args.time_steps, num_shards=args.num_shards,
     )
     if args.json:
-        print(plan.to_json())
+        import json
+
+        print(json.dumps(plan_json_doc(plan), indent=2, sort_keys=True))
         return 0
     validation = planner.validate(plan) if args.validate else None
     print(format_plan(plan, validation))

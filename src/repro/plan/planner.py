@@ -74,6 +74,7 @@ from repro.core.tiling import (
     tile_vmem_bytes,
 )
 
+from .. import obs
 from .cache import PlanCache
 from .schema import LatticeReport, PadPlan, PlanRequest, StencilPlan
 
@@ -280,6 +281,22 @@ class Planner:
             kw.setdefault("strategy", self.strategy)
             request = PlanRequest.make(**kw)
         key = request.cache_key()
+        # Hot serving path: one predicate check with recording off.
+        if obs.enabled():
+            with obs.span("plan", key=key) as sp:
+                plan = self._plan_resolve(request, key)
+                sp.set(
+                    tuned=self.last_plan_tuned,
+                    tile=list(plan.tile),
+                    sweep_axis=plan.sweep_axis,
+                    fused_depth=plan.fused_depth,
+                    num_shards=plan.num_shards,
+                    traffic_bytes=plan.traffic_bytes,
+                )
+            return plan
+        return self._plan_resolve(request, key)
+
+    def _plan_resolve(self, request: PlanRequest, key: str) -> StencilPlan:
         t0 = time.perf_counter()
         self.last_plan_tuned = False
         if self.tuned_db is not None:

@@ -41,6 +41,7 @@ from datetime import datetime, timezone
 
 import numpy as np
 
+from .. import obs
 from .cache import PlanCache
 from .planner import Planner, default_planner
 from .schema import PlanRequest, StencilPlan
@@ -199,18 +200,33 @@ class AutoTuner:
         if request is None:
             kw.setdefault("strategy", self.planner.strategy)
             request = PlanRequest.make(**kw)
-        cands = self.planner.candidates(request, k=self.k)
-        timed = [
-            (
-                plan,
-                measure(
-                    self._launch_fn(request, plan),
-                    reps=self.reps,
-                    warmup=self.warmup,
-                ),
-            )
-            for plan in cands
-        ]
+        key = request.cache_key()
+        race_sp = None
+        if obs.enabled():
+            # Rank = candidate index: the planner returns them ordered by
+            # modeled cost, so rank 0 is the analytic argmin.
+            race_sp = obs.span("tune_race", plan_key=key).__enter__()
+        try:
+            cands = self.planner.candidates(request, k=self.k)
+            timed = []
+            for rank, plan in enumerate(cands):
+                fn = self._launch_fn(request, plan)
+                if obs.enabled():
+                    with obs.span(
+                        "tune_candidate", plan_key=key, rank=rank,
+                        tile=list(plan.tile), fused_depth=plan.fused_depth,
+                        modeled_bytes=_modeled_bytes(plan),
+                    ) as csp:
+                        t = measure(fn, reps=self.reps, warmup=self.warmup)
+                        csp.set(median_ms=t.median_s * 1e3)
+                else:
+                    t = measure(fn, reps=self.reps, warmup=self.warmup)
+                timed.append((plan, t))
+        except BaseException:
+            if race_sp is not None:
+                race_sp.set(outcome="error")
+                race_sp.__exit__(None, None, None)
+            raise
         base_t = max(timed[0][1].median_s, 1e-12)
         base_m = max(_modeled_bytes(cands[0]), 1)
         rows = []
@@ -238,8 +254,14 @@ class AutoTuner:
             f"tuned winner slower than analytic: "
             f"{rows[winner].median_s} > {rows[0].median_s}"
         )
+        if race_sp is not None:
+            race_sp.set(
+                candidates=len(rows), winner_rank=winner,
+                source="measured", never_slower=never_slower,
+            )
+            race_sp.__exit__(None, None, None)
         rec = TuneRecord(
-            key=request.cache_key(),
+            key=key,
             fingerprint=backend_fingerprint(self.interpret),
             candidates=tuple(rows),
             winner=winner,
@@ -267,6 +289,20 @@ class AutoTuner:
         if request is None:
             kw.setdefault("strategy", self.planner.strategy)
             request = PlanRequest.make(**kw)
+        if obs.enabled():
+            with obs.span("plan", key=request.cache_key(),
+                          source="autotuner") as sp:
+                plan = self._plan_resolve(request)
+                sp.set(
+                    tuned=self.last_plan_tuned,
+                    tile=list(plan.tile),
+                    fused_depth=plan.fused_depth,
+                    num_shards=plan.num_shards,
+                )
+            return plan
+        return self._plan_resolve(request)
+
+    def _plan_resolve(self, request: PlanRequest) -> StencilPlan:
         rec = None
         if not self.force:
             rec = self.db.get(

@@ -35,6 +35,8 @@ import tempfile
 from collections import OrderedDict
 from dataclasses import dataclass
 
+from .. import obs
+from .cache import _Stats
 from .schema import PLANNER_VERSION, StencilPlan
 
 __all__ = [
@@ -204,8 +206,9 @@ class TunedPlanDB:
     ):
         self.capacity = int(capacity)
         self.dir = (db_dir or default_tuned_db_dir()) if persistent else None
+        self._degraded = False
         self._mem: OrderedDict[tuple[str, str], TuneRecord] = OrderedDict()
-        self.stats = {
+        self.stats = _Stats(self, {
             "hits": 0,
             "misses": 0,
             "mem_hits": 0,
@@ -215,7 +218,12 @@ class TunedPlanDB:
             "fingerprint_misses": 0,
             "evictions": 0,
             "disk_errors": 0,
-        }
+        })
+
+    @property
+    def degraded(self) -> bool:
+        """True once a disk error dropped the directory (memory-only now)."""
+        return self._degraded
 
     # -- internals ---------------------------------------------------------
 
@@ -230,6 +238,11 @@ class TunedPlanDB:
                 "in-memory-only for this process",
                 self.dir, type(exc).__name__, exc,
             )
+            self._degraded = True
+            obs.add("tunedb_degrade")
+            if obs.enabled():
+                obs.event("tunedb_degrade", dir=self.dir,
+                          error=f"{type(exc).__name__}: {exc}")
             self.dir = None
 
     def _remember(self, key: str, fingerprint: str, rec: TuneRecord) -> None:
@@ -267,6 +280,15 @@ class TunedPlanDB:
     # -- API ---------------------------------------------------------------
 
     def get(self, key: str, fingerprint: str) -> TuneRecord | None:
+        if obs.enabled():
+            with obs.span("tunedb_lookup", key=key) as sp:
+                rec = self._get(key, fingerprint)
+                sp.set(outcome="hit" if rec is not None else "miss")
+            obs.add("tunedb_hit" if rec is not None else "tunedb_miss")
+            return rec
+        return self._get(key, fingerprint)
+
+    def _get(self, key: str, fingerprint: str) -> TuneRecord | None:
         mk = (key, fingerprint)
         rec = self._mem.get(mk)
         if rec is not None:

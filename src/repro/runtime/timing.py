@@ -29,6 +29,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Sequence
 
+from .. import obs
+
 __all__ = ["TimingResult", "measure", "device_fingerprint"]
 
 
@@ -107,13 +109,23 @@ def measure(
         raise ValueError(f"reps must be >= 1, got {reps}")
     if warmup < 0:
         raise ValueError(f"warmup must be >= 0, got {warmup}")
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        times.append(time.perf_counter() - t0)
+    times: list[float] = []
+    sp = obs.span("measure") if obs.enabled() else None
+    if sp is not None:
+        sp.__enter__()
+    try:
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times.append(time.perf_counter() - t0)
+    finally:
+        if sp is not None:
+            measured_ns = int(sum(times) * 1e9) if times else 0
+            sp.set(reps=reps, warmup=warmup, measured_ns=measured_ns)
+            sp.__exit__(None, None, None)
+            obs.add("measured_ns", measured_ns)
     median, iqr = _median_iqr(times)
     return TimingResult(
         median_s=median,

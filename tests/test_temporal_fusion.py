@@ -7,7 +7,6 @@ guarantees; plan-mismatch validation; and the non-TPU/CPU backend
 interpret fallback.
 """
 
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -309,21 +308,25 @@ def test_matching_plan_accepted(planner):
         np.asarray(out), np.asarray(stencil_ref(u, offs, w)), atol=1e-5)
 
 
-def test_unsupported_backend_falls_back_to_interpret(monkeypatch):
-    """A non-TPU, non-CPU backend must interpret (with one warning), not
-    crash inside Mosaic lowering."""
+def test_unsupported_backend_falls_back_to_interpret(monkeypatch, caplog):
+    """A non-TPU, non-CPU backend must interpret (logged WARNING on first
+    sight, DEBUG after), not crash inside Mosaic lowering."""
+    import logging
+
     from repro.kernels import _backend
 
     monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
-    monkeypatch.setattr(_backend, "_warned_backends", set())
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
+    monkeypatch.setattr(_backend, "_seen_backends", set())
+    with caplog.at_level(logging.DEBUG, logger=_backend.logger.name):
         assert _backend.resolve_interpret(None) is True
         assert _backend.resolve_interpret(None) is True
-    runtime = [w for w in rec if issubclass(w.category, RuntimeWarning)]
-    assert len(runtime) == 1  # one-time warning
-    assert "interpret" in str(runtime[0].message)
-    # explicit values are always honored, no warning
+    fallbacks = [
+        r for r in caplog.records if "interpret mode" in r.getMessage()
+    ]
+    assert len(fallbacks) == 2  # every fallback is reported...
+    assert fallbacks[0].levelno == logging.WARNING  # ...loudly once
+    assert fallbacks[1].levelno == logging.DEBUG    # ...quietly after
+    # explicit values are always honored, no log line
     assert _backend.resolve_interpret(False) is False
     assert _backend.resolve_interpret(True) is True
 
@@ -334,13 +337,11 @@ def test_unsupported_backend_kernel_end_to_end(monkeypatch):
     from repro.kernels import _backend
 
     monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
-    monkeypatch.setattr(_backend, "_warned_backends", set())
+    monkeypatch.setattr(_backend, "_seen_backends", set())
     offs = star_stencil(2, 1)
     w = [0.1, 0.2, 0.3, 0.4, -0.5]
     u = jax.random.normal(KEY, (24, 32), jnp.float32)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", RuntimeWarning)
-        out = stencil_pallas(u, offs, w, tile=(8, 16), sweep_axis=0)
+    out = stencil_pallas(u, offs, w, tile=(8, 16), sweep_axis=0)
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(stencil_ref(u, offs, w)), atol=1e-5)
 
@@ -351,12 +352,10 @@ def test_conv1d_backend_fallback(monkeypatch):
     from repro.models.ssm import _causal_conv
 
     monkeypatch.setattr(jax, "default_backend", lambda: "rocm")
-    monkeypatch.setattr(_backend, "_warned_backends", set())
+    monkeypatch.setattr(_backend, "_seen_backends", set())
     x = jax.random.normal(KEY, (2, 32, 8), jnp.float32)
     cw = jax.random.normal(jax.random.PRNGKey(1), (4, 8), jnp.float32) * 0.3
     cb = jnp.zeros((8,), jnp.float32)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", RuntimeWarning)
-        out = causal_conv1d(x, cw, cb, tile_s=16)
+    out = causal_conv1d(x, cw, cb, tile_s=16)
     ref, _ = _causal_conv(x, cw, cb, None)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
