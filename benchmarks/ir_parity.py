@@ -1,0 +1,207 @@
+"""PR-tracked perf record: the §13 stencil-program IR.
+
+Emits the machine-readable ``BENCH_PR8.json`` consumed by scripts/ci.sh:
+
+* **Spelling-parity gate** (the refactor's contract): the legacy
+  ``time_steps=`` / ``stages=`` frontends now lower through the IR, and
+  the explicit program spelling of the same computation is **bit-wise**
+  identical for T ∈ {1, 2, 3} heterogeneous chains.
+
+* **One-key gate**: all three spellings derive the same canonical
+  serialized program, so they share one plan-cache key (schema v5).
+
+* **Boundary-tap gate**: dirichlet / neumann / reflect programs lower to
+  in-kernel correction taps and match the padded
+  :func:`repro.kernels.ref.stencil_ref` oracle; the headline is the max
+  absolute error across kinds.  On the 4-device mesh, the neumann
+  program is bit-wise equal to its single-device launch and the hot path
+  performs **zero host-side ``jnp.pad`` calls** (counted by patching).
+
+* The PR7 obs record (which embeds PR6 ⊃ … ⊃ PR1) rides along unchanged
+  so the perf trajectory keeps its history.
+"""
+from __future__ import annotations
+
+import json
+
+from .common import force_cpu_devices
+
+# The mesh half needs 4 CPU devices; claim them while this module can
+# still win the race against the first jax import.
+force_cpu_devices()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache_fitting import star_stencil
+from repro.ir import chain_program, run_program, stencil_program
+from repro.kernels.ref import stencil_ref
+from repro.kernels.stencil import stencil_iterate, stencil_pallas
+from repro.plan import PlanRequest
+
+from .common import emit_bench, timed
+from .timing import device_fingerprint
+from . import obs_overhead
+
+GRID = (50, 45)
+TILE = (8, 16)
+
+_OFFS_CONV = np.array([[-3, 0], [-2, 0], [-1, 0], [0, 0], [0, 1]])
+_W_CONV = (0.1, 0.2, 0.3, -0.2, 0.25)
+_OFFS_S1 = star_stencil(2, 1)
+_W_S1 = tuple(np.linspace(-0.3, 0.4, len(_OFFS_S1)).tolist())
+_OFFS_S2 = star_stencil(2, 2)
+_W_S2 = tuple(np.linspace(-0.1, 0.12, len(_OFFS_S2)).tolist())
+CHAIN3 = [(_OFFS_CONV, _W_CONV), (_OFFS_S1, _W_S1), (_OFFS_S2, _W_S2)]
+
+
+def spelling_parity() -> dict:
+    """Legacy spellings vs the explicit program: bit-wise, per T."""
+    u = jax.random.normal(jax.random.PRNGKey(0), GRID, jnp.float32)
+    rows = []
+    for T in (1, 2, 3):
+        stages = CHAIN3[:T]
+        legacy = stencil_iterate(u, stages=stages, tile=TILE, sweep_axis=0)
+        prog = run_program(
+            chain_program(stages, d=2), u, tile=TILE, sweep_axis=0
+        )
+        rows.append({
+            "T": T,
+            "bitwise": bool(np.array_equal(np.asarray(legacy),
+                                           np.asarray(prog))),
+        })
+    hom = stencil_pallas(u, _OFFS_S1, list(_W_S1), time_steps=3,
+                         tile=TILE, sweep_axis=0)
+    hom_prog = run_program(
+        stencil_program(_OFFS_S1, _W_S1, time_steps=3, d=2),
+        u, tile=TILE, sweep_axis=0,
+    )
+    rows.append({
+        "T": "time_steps=3",
+        "bitwise": bool(np.array_equal(np.asarray(hom),
+                                       np.asarray(hom_prog))),
+    })
+    return {
+        "rows": rows,
+        "all_bitwise": all(r["bitwise"] for r in rows),
+    }
+
+
+def one_key() -> dict:
+    """All spellings of one computation share one schema-v5 cache key."""
+    a = PlanRequest.make(shape=GRID, offsets=_OFFS_S1, time_steps=3)
+    b = PlanRequest.make(shape=GRID, stages=[_OFFS_S1] * 3)
+    c = PlanRequest.make(shape=GRID, stages=[_OFFS_S1] * 3,
+                         bcs=["zero"] * 3)
+    bc = PlanRequest.make(shape=GRID, stages=[_OFFS_S1] * 3,
+                          bcs=["neumann"] * 3)
+    return {
+        "key": a.cache_key(),
+        "spellings_share_key": a.cache_key() == b.cache_key()
+        == c.cache_key(),
+        "bc_splits_key": bc.cache_key() != a.cache_key(),
+    }
+
+
+def boundary_taps() -> dict:
+    """Correction-tap launches vs the padded oracle, plus the mesh run
+    with the host-side pad counted out of the hot path."""
+    u = jax.random.normal(jax.random.PRNGKey(1), (41, 52), jnp.float32)
+    rows = []
+    for kind, value in (("dirichlet", 1.7), ("neumann", 0.0),
+                        ("reflect", 0.0)):
+        prog = chain_program([(_OFFS_S1, _W_S1)], d=2,
+                             boundary=kind, value=value)
+        out = run_program(prog, u, tile=TILE, sweep_axis=0)
+        ref = stencil_ref(u, _OFFS_S1, list(_W_S1),
+                          boundary=kind, value=value)
+        err = float(np.max(np.abs(np.asarray(out) - np.asarray(ref))))
+        rows.append({"kind": kind, "max_abs_err": err})
+    max_err = max(r["max_abs_err"] for r in rows)
+
+    # The mesh half: neumann fused T=2, 4 shards, zero jnp.pad calls.
+    prog = chain_program([(_OFFS_S1, _W_S1)] * 2, d=2, boundary="neumann")
+    single = run_program(prog, u, tile=TILE, sweep_axis=0)
+    pad_calls = []
+    real_pad = jnp.pad
+    try:
+        jnp.pad = lambda *a, **k: (pad_calls.append(1), real_pad(*a, **k))[1]
+        sharded = run_program(prog, u, tile=TILE, sweep_axis=0,
+                              num_shards=4)
+    finally:
+        jnp.pad = real_pad
+    return {
+        "oracle_rows": rows,
+        "max_abs_err": max_err,
+        "oracle_ok": max_err < 1e-5,
+        "mesh_bitwise": bool(np.array_equal(np.asarray(single),
+                                            np.asarray(sharded))),
+        "mesh_host_pad_calls": len(pad_calls),
+        "mesh_no_host_pad": not pad_calls,
+    }
+
+
+def build_report(quick: bool = True, pr7: dict | None = None) -> dict:
+    """``pr7``: a pre-built PR7 obs report to embed — callers that
+    already ran it (benchmarks.run's full pass) skip re-derivation."""
+    parity = spelling_parity()
+    keys = one_key()
+    taps = boundary_taps()
+    if pr7 is None:
+        pr7 = obs_overhead.build_report(quick)
+    ok7 = pr7["acceptance"]
+    return {
+        "pr": 8,
+        "benchmark": "ir_parity",
+        "fingerprint": device_fingerprint(),
+        "grid": list(GRID),
+        "spelling_parity": parity,
+        "plan_keys": keys,
+        "boundary_taps": taps,
+        "pr7_obs_overhead": pr7,
+        "acceptance": {
+            "spellings_bitwise_ok": parity["all_bitwise"],
+            "spellings_one_key_ok": keys["spellings_share_key"],
+            "bc_splits_key_ok": keys["bc_splits_key"],
+            "achieved_bc_max_err": taps["max_abs_err"],
+            "bc_oracle_ok": taps["oracle_ok"],
+            "mesh_bitwise_ok": taps["mesh_bitwise"],
+            "mesh_no_host_pad_ok": taps["mesh_no_host_pad"],
+            # PR7 gates (which include PR6 ⊃ … ⊃ PR1) ride along.
+            "pr7_reconcile_ok": ok7["reconcile_ok"],
+            "pr7_recording_pure_ok": ok7["recording_pure_ok"],
+            "pr6_never_slower_ok": ok7["pr6_never_slower_ok"],
+            "pr6_warm_hit_ok": ok7["pr6_warm_hit_ok"],
+            "pr5_sharded_bitwise_ok": ok7["pr5_sharded_bitwise_ok"],
+            "pr4_flop_reduction_ok": ok7["pr4_flop_reduction_ok"],
+            "pr3_fused_traffic_ok": ok7["pr3_fused_traffic_ok"],
+            "pr2_planned_le_legacy_ok": ok7["pr2_planned_le_legacy_ok"],
+            "pr1_traffic_ok": ok7["pr1_traffic_ok"],
+        },
+    }
+
+
+def main(quick: bool = True, json_path: str | None = None,
+         pr7: dict | None = None) -> dict:
+    report, us = timed(build_report, quick, pr7)
+    ok = report["acceptance"]
+    emit_bench(
+        "ir_parity",
+        {
+            "spellings_bitwise_ok": ok["spellings_bitwise_ok"],
+            "spellings_one_key_ok": ok["spellings_one_key_ok"],
+            "bc_max_err": ok["achieved_bc_max_err"],
+            "bc_oracle_ok": ok["bc_oracle_ok"],
+            "mesh_no_host_pad_ok": ok["mesh_no_host_pad_ok"],
+        },
+        report,
+        json_path=json_path,
+        us=us,
+    )
+    return report
+
+
+if __name__ == "__main__":
+    rep = main()
+    print(json.dumps(rep["acceptance"], indent=2))

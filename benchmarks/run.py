@@ -2,10 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV per benchmark (spec format).
 ``--full`` runs paper-scale sweeps; default is the quick CI-sized pass.
-``--json [PATH]`` runs only the PR-tracked autotune record (which embeds
-the PR5 shard-columns record, which embeds PR4's, PR3's, PR2's, and
-PR1's) and writes it to PATH (default: ``BENCH_PR6.json`` at the repo
-root) — the perf trajectory artifact scripts/ci.sh checks on every PR.
+``--json [PATH]`` runs only the PR-tracked IR-parity record (which
+embeds the PR7 obs record, which embeds PR6's, PR5's, …, PR1's) and
+writes it to PATH (default: ``BENCH_PR8.json`` at the repo root) — the
+perf trajectory artifact scripts/ci.sh checks on every PR.
 """
 from __future__ import annotations
 
@@ -20,7 +20,7 @@ def main() -> None:
     quick = "--full" not in argv
     force_cpu_devices()
     if "--json" in argv:
-        from . import autotune
+        from . import ir_parity
         from .common import gates_ok
 
         i = argv.index("--json")
@@ -29,18 +29,21 @@ def main() -> None:
         else:
             path = os.path.join(
                 os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                "BENCH_PR6.json",
+                "BENCH_PR8.json",
             )
-        report = autotune.main(quick, json_path=path)
+        report = ir_parity.main(quick, json_path=path)
         ok = report["acceptance"]
         print(
-            f"wrote {path}: autotune never_slower={ok['never_slower_ok']} "
-            f"warm_hit {ok['achieved_warm_hit_ms']:.3f}ms "
-            f"(ok={ok['warm_hit_ok']}) "
-            f"rank_corr {ok['mean_rank_correlation']:.2f} "
-            f"max_speedup {ok['max_speedup_vs_analytic']:.2f}x "
-            f"pr5[scaling_ok={ok['pr5_scaling_ok']} "
-            f"bitwise={ok['pr5_sharded_bitwise_ok']}] "
+            f"wrote {path}: ir_parity "
+            f"spellings[bitwise={ok['spellings_bitwise_ok']} "
+            f"one_key={ok['spellings_one_key_ok']}] "
+            f"bc[max_err {ok['achieved_bc_max_err']:.1e} "
+            f"ok={ok['bc_oracle_ok']} "
+            f"mesh_no_pad={ok['mesh_no_host_pad_ok']}] "
+            f"pr7[reconcile={ok['pr7_reconcile_ok']}] "
+            f"pr6[never_slower={ok['pr6_never_slower_ok']} "
+            f"warm_hit={ok['pr6_warm_hit_ok']}] "
+            f"pr5[bitwise={ok['pr5_sharded_bitwise_ok']}] "
             f"pr4[flops_ok={ok['pr4_flop_reduction_ok']}] "
             f"pr3[traffic_ok={ok['pr3_fused_traffic_ok']}] "
             f"pr2[planned<=legacy={ok['pr2_planned_le_legacy_ok']}] "
@@ -51,8 +54,9 @@ def main() -> None:
         return
     from . import (
         autotune, bounds_table, fig4_miss_reduction, fig5_unfavorable,
-        padding_effect, planner_traffic, roofline_report, shard_columns,
-        stage_chain, sweep_traffic, temporal_fusion, tpu_tiling,
+        ir_parity, obs_overhead, padding_effect, planner_traffic,
+        roofline_report, shard_columns, stage_chain, sweep_traffic,
+        temporal_fusion, tpu_tiling,
     )
     fig4_miss_reduction.main(quick)
     fig5_unfavorable.main(quick)
@@ -66,7 +70,9 @@ def main() -> None:
     pr3 = temporal_fusion.main(quick, pr2=pr2)
     pr4 = stage_chain.main(quick, pr3=pr3)
     pr5 = shard_columns.main(quick, pr4=pr4)
-    autotune.main(quick, pr5=pr5)
+    pr6 = autotune.main(quick, pr5=pr5)
+    pr7 = obs_overhead.main(quick, pr6=pr6)
+    ir_parity.main(quick, pr7=pr7)
     roofline_report.main(quick)
 
 

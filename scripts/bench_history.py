@@ -35,6 +35,9 @@ _HEADLINES = {
     5: ("achieved_parallel_efficiency_s8", "parallel efficiency (S=8)",
         "{:.2f}"),
     6: ("achieved_warm_hit_ms", "warm tuned hit", "{:.3f} ms"),
+    7: ("achieved_record_overhead_ms", "tracing overhead/warm hit",
+        "{:.3f} ms"),
+    8: ("achieved_bc_max_err", "boundary-tap max |err|", "{:.1e}"),
 }
 
 

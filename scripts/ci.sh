@@ -2,7 +2,7 @@
 # Tier-1 CI: the full test suite, the planner and autotuner smokes, the
 # docs-rot check, and the PR-tracked perf record.
 #
-#   scripts/ci.sh            # tests + smokes + docs check + BENCH_PR6.json
+#   scripts/ci.sh            # tests + smokes + docs check + BENCH_PR8.json
 #
 # The planner smoke plans 6 shapes (one Fig. 5 unfavorable grid, one
 # time_steps=3 fused plan, one two-stage heterogeneous chain, one 4-way
@@ -12,14 +12,17 @@
 # the live backend and asserts never_slower, the record round-trip, and
 # the sub-ms warm TunedPlanDB hit.  check_docs.py fails on documentation
 # referencing renamed or removed modules or dangling DESIGN.md § anchors.
-# The JSON pass re-derives the measured-vs-modeled table checked in at
-# BENCH_PR6.json (never_slower on every grid incl. the unfavorable one,
-# warm hit < 1 ms without re-measurement, PR5/PR4/PR3/PR2/PR1 gates
-# embedded); a drift there is a perf regression, not flake.  The obs
-# smoke (§12) runs one tuned 4-way-sharded fused T=3 chain under
-# REPRO_TRACE, asserts the trace parses as valid trace_event JSON, and
-# gates on repro.obs.report --check reconciling counters against spans;
-# bench_history.py then verifies the PR6⊃…⊃PR1 embedded gate chain.
+# The JSON pass re-derives the spelling-parity + boundary-tap record
+# checked in at BENCH_PR8.json (legacy spellings lower through the §13
+# IR bit-wise unchanged, correction taps match the oracle, zero host-side
+# pads on the mesh, PR7..PR1 gates embedded); a drift there is a
+# regression, not flake.  The IR smoke (§13) lowers a two-stage
+# heterogeneous chain spelled as a program and asserts bit-wise parity
+# with the legacy stages= launch.  The obs smoke (§12) runs one tuned
+# 4-way-sharded fused T=3 chain under REPRO_TRACE, asserts the trace
+# parses as valid trace_event JSON, and gates on repro.obs.report --check
+# reconciling counters against spans; bench_history.py then verifies the
+# PR8⊃…⊃PR1 embedded gate chain.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -66,4 +69,32 @@ print(f"obs smoke: trace valid, {counters['launches']} launches, "
       f"{counters['modeled_bytes']} modeled bytes")
 PY
 python -m repro.obs.report "$OBS_TMP/trace.json" --check
+
+# --- §13 stencil-program IR smoke --------------------------------------
+REPRO_TRACE="$OBS_TMP/ir_trace.json" python - <<'PY'
+import numpy as np
+import jax, jax.numpy as jnp
+from repro import ir
+from repro.core.cache_fitting import star_stencil
+from repro.kernels.stencil import stencil_iterate
+
+offs1 = star_stencil(2, 1)
+w1 = list(np.linspace(-0.3, 0.4, len(offs1)))
+offs2 = star_stencil(2, 2)
+w2 = list(np.linspace(-0.1, 0.12, len(offs2)))
+u = jax.random.normal(jax.random.PRNGKey(3), (48, 56), jnp.float32)
+
+legacy = stencil_iterate(u, stages=[(offs1, w1), (offs2, w2)],
+                         tile=(8, 16), sweep_axis=0)
+prog = ir.chain_program([(offs1, w1), (offs2, w2)], d=2)
+ir.verify(prog, u.shape)
+lowered = ir.run_program(prog, u, tile=(8, 16), sweep_axis=0)
+assert np.array_equal(np.asarray(legacy), np.asarray(lowered)), \
+    "program spelling diverged from the legacy stages= launch"
+halos = ir.infer_halos(prog)   # keyed by value name; the load is "u0"
+print(f"ir smoke: {ir.summarize_program(prog)} bit-wise == stages= "
+      f"(input halo {halos['u0']})")
+PY
+python -m repro.obs.report "$OBS_TMP/ir_trace.json" --check
+
 python scripts/bench_history.py

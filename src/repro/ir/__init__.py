@@ -1,0 +1,54 @@
+"""Stencil-program IR (DESIGN.md §13): bounds-inferred programs with
+boundary ops, lowered onto the sweep engine.
+
+The numpy-only core (``ops`` + ``infer`` + ``verify``) is safe to import
+from the plan compiler; ``lower.run_program`` pulls in the jax kernels
+lazily.
+"""
+
+from .infer import infer_bounds, infer_halos, stage_halos, suffix_halos
+from .lower import IRLowerError, Lowered, lower, run_program
+from .ops import (
+    BC_KINDS,
+    Apply,
+    Boundary,
+    Bounds,
+    Combine,
+    Load,
+    Program,
+    Store,
+    chain_program,
+    normalize_bc,
+    plan_program_key,
+    rhs_program,
+    stencil_program,
+    summarize_program,
+)
+from .verify import IRVerifyError, verify
+
+__all__ = [
+    "BC_KINDS",
+    "Apply",
+    "Boundary",
+    "Bounds",
+    "Combine",
+    "IRLowerError",
+    "IRVerifyError",
+    "Load",
+    "Lowered",
+    "Program",
+    "Store",
+    "chain_program",
+    "infer_bounds",
+    "infer_halos",
+    "lower",
+    "normalize_bc",
+    "plan_program_key",
+    "rhs_program",
+    "run_program",
+    "stage_halos",
+    "stencil_program",
+    "suffix_halos",
+    "summarize_program",
+    "verify",
+]

@@ -20,17 +20,38 @@ def stencil_ref(
     u: jnp.ndarray,
     offsets: np.ndarray,
     weights: Sequence[float],
+    boundary: str = "zero",
+    value: float = 0.0,
 ) -> jnp.ndarray:
-    """Apply a weighted stencil with zero boundary fill.
+    """Apply a weighted stencil under a boundary condition.
 
     offsets: (s, d) integer array; weights: length-s floats.
+
+    ``boundary`` selects the halo fill the taps read outside the domain:
+
+    * ``"zero"`` — zero fill (convolution-'same'); the default and the
+      semantics every legacy caller gets.
+    * ``"dirichlet"`` — constant fill with ``value`` (``"zero"`` is
+      ``dirichlet(0)``).
+    * ``"neumann"`` — edge replication (numpy ``"edge"``): the zero
+      normal-derivative condition of a first-order ghost cell.
+    * ``"reflect"`` — mirror about the edge cell (numpy ``"reflect"``:
+      ``u[-1] == u[1]``).
     """
     d = u.ndim
     offsets = np.asarray(offsets)
     assert offsets.shape[1] == d, (offsets.shape, d)
     r = int(np.abs(offsets).max()) if offsets.size else 0
     pad = [(r, r)] * d
-    up = jnp.pad(u, pad)
+    if boundary in ("zero", "dirichlet"):
+        c = 0.0 if boundary == "zero" else float(value)
+        up = jnp.pad(u, pad, constant_values=c)
+    elif boundary == "neumann":
+        up = jnp.pad(u, pad, mode="edge") if r else u
+    elif boundary == "reflect":
+        up = jnp.pad(u, pad, mode="reflect") if r else u
+    else:
+        raise ValueError(f"unknown boundary {boundary!r}")
     out = jnp.zeros_like(u)
     for off, w in zip(offsets.tolist(), weights):
         sl = tuple(

@@ -58,6 +58,7 @@ the local array's origin (all-zero on a single device), which keeps the
 from __future__ import annotations
 
 import functools
+import itertools
 from typing import TYPE_CHECKING, NamedTuple, Sequence
 
 import jax
@@ -72,7 +73,7 @@ from repro.core.tiling import (  # shared with the planner
     stage_suffix_halos,
 )
 
-from .. import obs
+from .. import ir, obs
 from ._backend import resolve_interpret
 
 if TYPE_CHECKING:
@@ -97,7 +98,10 @@ class _Stage(NamedTuple):
     ``suffix_hi`` the per-dim sums over the *later* stages (how far their
     dependency cone still reaches past this stage's output); ``ext`` the
     stage's buffer extent ``tile + suffix_lo + suffix_hi`` (the final
-    stage's ``ext`` is the bare tile)."""
+    stage's ``ext`` is the bare tile).  ``bc`` is the stage *input*'s
+    boundary condition — ``None`` for the engine-native zero fill, else a
+    ``(kind, value)`` pair a §13 boundary op lowered to; the kernel
+    realizes it as in-kernel correction taps, no host-side pad."""
 
     offsets: object                 # (s, d) int array
     weights: tuple
@@ -106,6 +110,7 @@ class _Stage(NamedTuple):
     suffix_lo: tuple
     suffix_hi: tuple
     ext: tuple
+    bc: tuple | None = None
 
 
 def _sweep_kernel(
@@ -240,7 +245,9 @@ def _sweep_kernel(
                 for cp in copies:
                     cp.wait()
 
-    if T == 1:
+    if stages is None:
+        # Single application (possibly multi-RHS), engine-native zero
+        # boundary: the legacy launch form.
         acc = jnp.zeros(tuple(tile), dtype=jnp.float32)
         for a in range(p):
             x = windows[a][...].astype(jnp.float32)
@@ -255,11 +262,96 @@ def _sweep_kernel(
 
     # -- stage-chain trapezoid (p == 1, enforced by the frontend) ----------
 
-    def stage_apply(j, src, out_ext):
+    def bc_terms(st, src, out_ext, starts):
+        """Correction taps for stage ``st``'s non-zero boundary condition
+        (DESIGN.md §13): every read the zero-extended buffer resolved to 0
+        but the declared boundary would not.  For each tap and each way it
+        can exit the true domain (per-axis side × depth, all corner
+        combinations), one position-masked term reads the boundary's
+        source cell instead — clamped (neumann), mirrored (reflect), or
+        the constant (dirichlet).  Partial corner combinations read cells
+        still outside the domain, which the zero-extended buffer holds as
+        0, so they self-annihilate; the combination matching a cell's
+        actual exit pattern supplies the whole missing value.  All masks
+        compare *global* coordinates (``dom_ref``-lifted), so under §10
+        sharding corrections fire only on the shards that own a domain
+        edge."""
+        kind, cval = st.bc
+        add = jnp.zeros(out_ext, dtype=jnp.float32)
+        pos_cache: dict = {}
+
+        def axis_pos(i):
+            if i not in pos_cache:
+                pos_cache[i] = (
+                    dom_ref[i] + starts[i]
+                    + jax.lax.broadcasted_iota(jnp.int32, out_ext, i)
+                )
+            return pos_cache[i]
+
+        for off, w in zip(st.offsets, st.weights):
+            off = tuple(int(o) for o in off)
+            mix = [i for i in range(d) if off[i] != 0]
+            if not mix:
+                continue  # the center tap never exits the domain
+            if kind == "dirichlet":
+                # Outside the domain every cell reads the constant: one
+                # term per tap, on exactly the cells where the read exited.
+                inside = None
+                for i in mix:
+                    q = axis_pos(i) + off[i]
+                    ok = (q >= 0) & (q < n_true[i])
+                    inside = ok if inside is None else inside & ok
+                add = add + jnp.where(
+                    inside,
+                    jnp.float32(0),
+                    np.float32(w) * np.float32(cval),
+                )
+                continue
+            # neumann (edge-replicate) / reflect (mirror about the edge
+            # node): per-axis menus of (global output plane, corrected
+            # offset) for each exit depth e — low side reads u[-e] from
+            # plane -off_i - e, high side u[n-1+e] from plane n-1+e-off_i.
+            menus = []
+            for i in mix:
+                opts: list = [None]
+                o = off[i]
+                if o < 0:
+                    for e in range(1, -o + 1):
+                        oc = o + e if kind == "neumann" else o + 2 * e
+                        opts.append((-o - e, oc))
+                else:
+                    for e in range(1, o + 1):
+                        oc = o - e if kind == "neumann" else o - 2 * e
+                        opts.append((n_true[i] - 1 + e - o, oc))
+                menus.append(opts)
+            for combo in itertools.product(*menus):
+                if all(c is None for c in combo):
+                    continue
+                oc = list(off)
+                mask = None
+                for i, c in zip(mix, combo):
+                    if c is None:
+                        continue
+                    plane, o_corr = c
+                    oc[i] = o_corr
+                    eq = axis_pos(i) == plane
+                    mask = eq if mask is None else mask & eq
+                sl = tuple(
+                    slice(l + int(o), l + int(o) + e)
+                    for o, l, e in zip(oc, st.lo, out_ext)
+                )
+                add = add + jnp.where(
+                    mask, np.float32(w) * src[sl], jnp.float32(0)
+                )
+        return add
+
+    def stage_apply(j, src, out_ext, starts):
         """Apply stage j's operator over ``out_ext`` output points.  The
         source block is laid out so that output element 0 sits at source
         coordinate ``lo_j`` per dim — true for the full previous buffer in
-        warm-up AND for the trailing frontier block when streaming."""
+        warm-up AND for the trailing frontier block when streaming.
+        ``starts`` is the true-grid coordinate of output element 0 per dim
+        (pre-``dom_ref``), used only by the boundary correction taps."""
         st = stages[j]
         src = src.astype(jnp.float32)
         acc = jnp.zeros(out_ext, dtype=jnp.float32)
@@ -269,6 +361,8 @@ def _sweep_kernel(
                 for o, l, e in zip(off, st.lo, out_ext)
             )
             acc = acc + np.float32(w) * src[sl]
+        if st.bc is not None:
+            acc = acc + bc_terms(st, src, out_ext, starts)
         return acc
 
     def mask_domain(acc, starts, ext):
@@ -313,7 +407,7 @@ def _sweep_kernel(
         overlap to stream across)."""
         cur = windows[0][...]
         for j in range(T):
-            acc = stage_apply(j, cur, stages[j].ext)
+            acc = stage_apply(j, cur, stages[j].ext, stage_starts(j, False))
             if j < T - 1:
                 acc = mask_domain(acc, stage_starts(j, False), stages[j].ext)
                 # Round-trip through the staged scratch in the input dtype
@@ -343,7 +437,7 @@ def _sweep_kernel(
             out_ext = tuple(
                 t_s if i == sweep else st.ext[i] for i in range(d)
             )
-            acc = stage_apply(j, src, out_ext)
+            acc = stage_apply(j, src, out_ext, stage_starts(j, True))
             if j < T - 1:
                 # Ring rotation, realized as the same VMEM shift the input
                 # window uses: drop the t_s oldest rows, keep the rest.
@@ -373,12 +467,14 @@ def _sweep_kernel(
             streaming_step()
 
 
-def _launch_geometry(offsets_w, stages_w, tile):
+def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None):
     """Static launch geometry shared by the single-device and sharded
     paths: per-RHS offset/weight arrays, the per-stage chain (``None`` =
     single application), and the window cone ``lo_w``/``hi_w`` — the same
     helpers the planner prices VMEM/traffic with, so kernel geometry and
-    planned geometry cannot diverge."""
+    planned geometry cannot diverge.  ``bcs_w`` attaches each stage
+    input's lowered boundary condition (``None`` entries = native zero
+    fill)."""
     d = len(tile)
     if stages_w is not None:
         T = len(stages_w)
@@ -386,6 +482,8 @@ def _launch_geometry(offsets_w, stages_w, tile):
                    for s in stages_w]
         st_wts = [tuple(float(w) for w in s[1]) for s in stages_w]
         st_halos = [halo_from_offsets([o], d) for o in st_offs]
+        st_bcs = tuple(bcs_w) if bcs_w is not None else (None,) * T
+        assert len(st_bcs) == T, (st_bcs, T)
         cone = chain_halo(st_halos)
         lo_w = tuple(lo for lo, _ in cone)
         hi_w = tuple(hi for _, hi in cone)
@@ -404,6 +502,7 @@ def _launch_geometry(offsets_w, stages_w, tile):
                 ext=tuple(
                     t + l + h for t, l, h in zip(tile, sfx_lo, sfx_hi)
                 ),
+                bc=st_bcs[j],
             ))
         stages = tuple(stages)
         offsets = [st_offs[0]]
@@ -483,34 +582,62 @@ def _padded_call(ins, dom, offsets, weights, stages, lo_w, hi_w, tile,
     )(dom, *ins)
 
 
+def embed_inputs(us, pads, pad_free=False):
+    """Zero-extend each array into its launch buffer: per-dim ``(lo,
+    hi)`` extra extent, content at offset ``lo``, zeros elsewhere — the
+    one input prep both the single-device and §10 sharded paths share.
+
+    ``pad_free=False`` is the legacy ``jnp.pad`` spelling.  With
+    ``pad_free=True`` (boundary-op programs, DESIGN.md §13) the same
+    buffer is built as an allocation plus one ``dynamic_update_slice`` —
+    bit-identical values, no host-side pad op on the hot path (boundary
+    values come from in-kernel correction taps, not from materialized
+    ghost cells)."""
+    if not pad_free:
+        return [jnp.pad(u, pads) for u in us]
+    shape = tuple(
+        int(n) + lo + hi for (lo, hi), n in zip(pads, us[0].shape)
+    )
+    starts = tuple(lo for lo, _ in pads)
+    return [
+        jax.lax.dynamic_update_slice(jnp.zeros(shape, u.dtype), u, starts)
+        for u in us
+    ]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
         "offsets_w", "tile", "sweep", "pipelined", "interpret", "stages_w",
+        "bcs_w",
     ),
 )
 def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
-                  stages_w=None):
+                  stages_w=None, bcs_w=None):
     """us: tuple of p same-shape arrays.  offsets_w: tuple per array of
     (offsets_tuple, weights_tuple) — hashable static spec.  ``stages_w``
     (tuple per stage of (offsets_tuple, weights_tuple), single RHS only)
     fuses the whole chain into this one launch: one HBM pass, T
-    applications with streaming per-stage frontiers."""
+    applications with streaming per-stage frontiers.  ``bcs_w`` (tuple
+    per stage, ``None``/``(kind, value)``) attaches lowered §13 boundary
+    conditions; any non-zero entry switches the input prep to the
+    pad-free embed."""
     u0 = us[0]
     d = u0.ndim
     tile = tuple(int(t) for t in tile)
     offsets, weights, stages, lo_w, hi_w = _launch_geometry(
-        offsets_w, stages_w, tile
+        offsets_w, stages_w, tile, bcs_w
     )
     padded_shape = tuple(_round_up(n, t) for n, t in zip(u0.shape, tile))
-    ins = []
-    for u in us:
-        # zero-pad: lo halo on the low side, hi + round-up slack on the high.
-        pads = [
-            (l, h + ps - n)
-            for l, h, ps, n in zip(lo_w, hi_w, padded_shape, u.shape)
-        ]
-        ins.append(jnp.pad(u, pads))
+    # lo halo on the low side, hi + round-up slack on the high.
+    pads = [
+        (l, h + ps - n)
+        for l, h, ps, n in zip(lo_w, hi_w, padded_shape, u0.shape)
+    ]
+    ins = embed_inputs(
+        us, pads,
+        pad_free=bcs_w is not None and any(bc is not None for bc in bcs_w),
+    )
     out = _padded_call(
         ins, jnp.zeros((d,), jnp.int32), offsets, weights, stages, lo_w,
         hi_w, tile, sweep, pipelined, interpret, u0.shape,
@@ -519,7 +646,8 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
 
 
 def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None,
-               time_steps=1, stages=None, num_shards=1, tune=None):
+               time_steps=1, stages=None, num_shards=1, tune=None,
+               bcs=None):
     """Tile decision for an un-planned call: a thin wrapper over the plan
     compiler (``repro.plan``), whose persistent cache makes repeated shapes
     — the serving case — O(1).  The old ad-hoc heuristic survives as
@@ -547,6 +675,8 @@ def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None,
     )
     if stages is not None:
         kw["stages"] = [np.asarray(o).reshape(-1, d) for o in stages]
+        if bcs is not None and any(bc is not None for bc in bcs):
+            kw["bcs"] = tuple(bcs)
     else:
         kw["offsets"] = [np.asarray(o).reshape(-1, d) for o in offsets_list]
         kw["time_steps"] = time_steps
@@ -694,9 +824,20 @@ def multi_stencil_pallas(
     mesh=None,
     tune=None,
     trace: str | None = None,
+    program=None,
 ) -> jnp.ndarray:
     """p-RHS stencil  q = Σ_p K_p u_p  (paper §5): one VMEM budget split
     across p operand windows plus the output tile, one shared sweep.
+
+    Every spelling of a computation is lowered through the stencil-
+    program IR (DESIGN.md §13): the legacy ``offsets_list``/``stages=``/
+    ``time_steps=`` arguments are thin builders that construct the
+    equivalent :class:`repro.ir.Program` and lower it — bit-wise
+    identical launches, asserted by test.  ``program`` passes an explicit
+    :class:`repro.ir.Program` (or its serialized JSON) instead, mutually
+    exclusive with the legacy spellings; boundary ops in the program
+    lower to in-kernel correction taps (no host-side pad), and ``us``
+    matches ``program.inputs()`` order.
 
     Tile/sweep resolution order: explicit ``tile``/``sweep_axis`` args win,
     then the ``plan``'s decision, then the default planner (``tune=``
@@ -729,12 +870,25 @@ def multi_stencil_pallas(
                 sweep_axis=sweep_axis, pipelined=pipelined, plan=plan,
                 time_steps=time_steps, stages=stages,
                 num_shards=num_shards, shard_axis=shard_axis, mesh=mesh,
-                tune=tune,
+                tune=tune, program=program,
             )
     us = tuple(us)
     assert len({u.shape for u in us}) == 1, "RHS arrays must share a shape"
     d = us[0].ndim
-    if stages is not None:
+    shape = tuple(int(n) for n in us[0].shape)
+    # -- build the stencil program (§13) -----------------------------------
+    if program is not None:
+        if (offsets_list is not None or weights_list is not None
+                or stages is not None):
+            raise ValueError(
+                "pass program= or the (offsets/weights/stages) spellings, "
+                "not both"
+            )
+        prog = (
+            ir.Program.from_json(program) if isinstance(program, str)
+            else program
+        )
+    elif stages is not None:
         if offsets_list is not None or weights_list is not None:
             raise ValueError(
                 "pass (offsets_list, weights_list) or stages, not both"
@@ -743,23 +897,16 @@ def multi_stencil_pallas(
             raise ValueError(
                 f"stage chains require a single RHS; got {len(us)} arrays"
             )
-        chain = tuple(
-            (
-                np.asarray(o, dtype=np.int64).reshape(-1, d),
-                tuple(float(w) for w in ws),
-            )
-            for o, ws in stages
-        )
-        if not chain:
+        if not tuple(stages):
             raise ValueError("stages must contain at least one stage")
-        for offs, wts in chain:
-            if len(offs) != len(wts):
+        for o, ws in stages:
+            offs = np.asarray(o, dtype=np.int64).reshape(-1, d)
+            if len(offs) != len(tuple(ws)):
                 raise ValueError(
-                    f"stage has {len(offs)} offsets but {len(wts)} weights"
+                    f"stage has {len(offs)} offsets but {len(tuple(ws))} "
+                    "weights"
                 )
-        T = len(chain)
-        offsets_list = [chain[0][0]]
-        weights_list = [list(chain[0][1])]
+        prog = ir.chain_program(list(stages), d)
     else:
         T = int(time_steps)
         if T < 1:
@@ -772,13 +919,46 @@ def multi_stencil_pallas(
         if len(us) == 1:
             # The canonical form: every single-RHS call IS a (possibly
             # repeated) stage chain.
-            op = (
-                np.asarray(offsets_list[0], dtype=np.int64).reshape(-1, d),
-                tuple(float(w) for w in weights_list[0]),
+            prog = ir.stencil_program(
+                offsets_list[0], weights_list[0], time_steps=T, d=d,
             )
-            chain = (op,) * T
         else:
-            chain = None
+            prog = ir.rhs_program(offsets_list, weights_list, d=d)
+    # -- verify + lower onto the engine's launch form ----------------------
+    lowered = ir.lower(prog, shape)
+    prog_summary = ir.summarize_program(prog)
+    if lowered.kind == "chain":
+        if len(us) != 1:
+            raise ValueError(
+                f"program lowers to a stage chain over one input; got "
+                f"{len(us)} arrays"
+            )
+        chain = tuple(
+            (np.asarray(o, dtype=np.int64).reshape(-1, d), wts)
+            for o, wts in lowered.stages
+        )
+        bcs = lowered.bcs
+        T = len(chain)
+        offsets_list = [chain[0][0]]
+        weights_list = [list(chain[0][1])]
+    else:  # multi-RHS single application
+        if len(us) != len(lowered.inputs):
+            raise ValueError(
+                f"program loads {len(lowered.inputs)} inputs; got "
+                f"{len(us)} arrays"
+            )
+        # ``us`` arrives in load order; the combine may sum the operands
+        # in any order, and stage p applies to lowered.inputs[p].
+        load_order = {name: i for i, name in enumerate(prog.inputs())}
+        us = tuple(us[load_order[name]] for name in lowered.inputs)
+        chain = None
+        bcs = ()
+        T = 1
+        offsets_list = [
+            np.asarray(o, dtype=np.int64).reshape(-1, d)
+            for o, _ in lowered.stages
+        ]
+        weights_list = [list(wts) for _, wts in lowered.stages]
     interpret = resolve_interpret(interpret, kernel="stencil")
     explicit_sweep = sweep_axis is not None
     explicit_shard = shard_axis is not None
@@ -804,6 +984,7 @@ def multi_stencil_pallas(
             us[0].dtype.itemsize,
             time_steps=T,
             stages=[offs for offs, _ in chain] if chain is not None else None,
+            bcs=bcs if chain is not None else None,
         )
         if tile is None:
             tile = plan.tile
@@ -823,6 +1004,7 @@ def multi_stencil_pallas(
             ),
             num_shards=num_shards or 1,
             tune=tune,
+            bcs=bcs if chain is not None else None,
         )
         tile = choice.tile
         if sweep_axis is None:
@@ -902,6 +1084,7 @@ def multi_stencil_pallas(
             plan_key=plan_key, tile=list(tile), sweep_axis=sweep_axis,
             fused_depth=int(depth), steps=n_run, num_shards=num_shards,
             interpret=interpret, modeled_bytes=mb, modeled_flops=mf,
+            program=prog_summary,
         )
 
     if chain is None:  # multi-RHS single application
@@ -917,9 +1100,20 @@ def multi_stencil_pallas(
     pos = 0
     while True:
         run = chain[pos : pos + int(depth)]
+        run_bcs = tuple(bcs[pos : pos + len(run)])
         pos += len(run)
         with launch_span(len(run)) if obs.enabled() else obs.NULL_SPAN:
-            if len(run) == 1:
+            if any(bc is not None for bc in run_bcs):
+                # §13 boundary-op launch: always the stage-chain form
+                # (even for one stage), with the lowered per-stage bcs as
+                # in-kernel correction taps and the pad-free input embed.
+                result = launcher(
+                    arrays, (static_spec(run[0]),), tile, sweep_axis,
+                    pipelined, interpret,
+                    stages_w=tuple(static_spec(op) for op in run),
+                    bcs_w=run_bcs,
+                )
+            elif len(run) == 1:
                 result = launcher(
                     arrays, (static_spec(run[0]),), tile, sweep_axis,
                     pipelined, interpret,

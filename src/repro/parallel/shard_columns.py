@@ -70,10 +70,10 @@ def column_launcher(num_shards=None, shard_axis=None, mesh=None):
     when the call (or its plan) asks for more than one shard."""
 
     def launch(us, offsets_w, tile, sweep, pipelined, interpret,
-               stages_w=None):
+               stages_w=None, bcs_w=None):
         return sharded_stencil_call(
             us, offsets_w, tile, sweep, pipelined, interpret,
-            stages_w=stages_w, num_shards=num_shards,
+            stages_w=stages_w, bcs_w=bcs_w, num_shards=num_shards,
             shard_axis=shard_axis, mesh=mesh,
         )
 
@@ -82,7 +82,7 @@ def column_launcher(num_shards=None, shard_axis=None, mesh=None):
 
 def sharded_stencil_call(
     us, offsets_w, tile, sweep, pipelined, interpret, stages_w=None,
-    num_shards=None, shard_axis=None, mesh=None,
+    bcs_w=None, num_shards=None, shard_axis=None, mesh=None,
 ):
     """One column-sharded launch; signature and result match
     ``_stencil_call`` exactly (bit-wise).  ``mesh`` must be a 1-axis
@@ -101,7 +101,7 @@ def sharded_stencil_call(
         if num_shards == 1:
             return _stencil_call(
                 us, offsets_w, tile, sweep, pipelined, interpret,
-                stages_w=stages_w,
+                stages_w=stages_w, bcs_w=bcs_w,
             )
         from repro.launch.mesh import make_column_mesh
 
@@ -120,7 +120,7 @@ def sharded_stencil_call(
         if size == 1:
             return _stencil_call(
                 us, offsets_w, tile, sweep, pipelined, interpret,
-                stages_w=stages_w,
+                stages_w=stages_w, bcs_w=bcs_w,
             )
     if shard_axis is None:
         shard_axis = pick_shard_axis(u0.shape, tile, sweep)
@@ -134,7 +134,8 @@ def sharded_stencil_call(
         )
     run = _build_sharded(
         mesh, a, tile, sweep, bool(pipelined), bool(interpret), offsets_w,
-        stages_w, tuple(int(n) for n in u0.shape), str(u0.dtype), len(us),
+        stages_w, bcs_w, tuple(int(n) for n in u0.shape), str(u0.dtype),
+        len(us),
     )
     if obs.enabled():
         # The exchange itself runs inside the jitted SPMD program, so the
@@ -144,7 +145,9 @@ def sharded_stencil_call(
         from repro.kernels.stencil import _launch_geometry, _round_up
 
         S = int(mesh.shape[mesh.axis_names[0]])
-        *_, lo_w, hi_w = _launch_geometry(offsets_w, stages_w, tile)
+        *_, lo_w, hi_w = _launch_geometry(
+            offsets_w, stages_w, tile, bcs_w=bcs_w
+        )
         lo_a, hi_a = int(lo_w[a]), int(hi_w[a])
         padded = [_round_up(int(n), t) for n, t in zip(u0.shape, tile)]
         cross_ext = prod(
@@ -168,14 +171,16 @@ def sharded_stencil_call(
 
 @functools.lru_cache(maxsize=128)
 def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
-                   stages_w, shape, dtype, p):
+                   stages_w, bcs_w, shape, dtype, p):
     """Build (and cache) the jitted shard_map'd launch for one static
-    configuration — meshes and the offset/stage specs are hashable, so
-    repeated shapes re-enter the compiled function directly."""
+    configuration — meshes and the offset/stage/boundary specs are
+    hashable, so repeated shapes re-enter the compiled function
+    directly."""
     from repro.kernels.stencil import (
         _launch_geometry,
         _padded_call,
         _round_up,
+        embed_inputs,
     )
 
     del dtype  # part of the cache key only (shapes close over `pads`)
@@ -183,7 +188,7 @@ def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
     axis_name = mesh.axis_names[0]
     S = int(mesh.shape[axis_name])
     offsets, weights, stages, lo_w, hi_w = _launch_geometry(
-        offsets_w, stages_w, tile
+        offsets_w, stages_w, tile, bcs_w=bcs_w
     )
     t_a = tile[a]
     lo_a, hi_a = lo_w[a], hi_w[a]
@@ -237,8 +242,10 @@ def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
         check_rep=False,
     )
 
+    pad_free = bcs_w is not None and any(bc is not None for bc in bcs_w)
+
     def run(*arrays):
-        ins = [jnp.pad(u, pads) for u in arrays]
+        ins = embed_inputs(arrays, pads, pad_free=pad_free)
         out = sharded(*ins)
         return out[tuple(slice(0, n) for n in shape)]
 

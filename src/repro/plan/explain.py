@@ -128,6 +128,10 @@ def format_plan(plan: StencilPlan, validation: dict | None = None) -> str:
             f"{plan.recompute_flops / max(plan.modeled_flops, 1):.2f}x "
             f"saved at unchanged traffic"
         )
+    if req.program:
+        from repro.ir import summarize_program
+
+        lines.append(f"  program: {summarize_program(req.program)}")
     lines += [
         f"  vmem/operand window: {_fmt_bytes(plan.vmem_bytes)}  "
         f"surface/volume {plan.surface_to_volume:.3f}",
@@ -164,12 +168,28 @@ def format_plan(plan: StencilPlan, validation: dict | None = None) -> str:
 
 def plan_json_doc(plan: StencilPlan) -> dict:
     """The ``--json`` document: the full frozen plan (round-trips through
-    ``StencilPlan.from_dict``), the per-depth score table, and a
-    ``report`` block carrying the same fields ``repro.obs.report`` prints
-    per launch — so a trace row and an explain dump reconcile key-for-key.
+    ``StencilPlan.from_dict``), the per-depth score table, the request's
+    canonical §13 stencil program with its inferred per-value bounds
+    (``repro.ir.Program.from_dict(doc["program"])`` round-trips to the
+    request's cache-key form), and a ``report`` block carrying the same
+    fields ``repro.obs.report`` prints per launch — so a trace row and an
+    explain dump reconcile key-for-key.
     """
+    program = None
+    value_bounds = None
+    if plan.request.program:
+        from repro.ir import Program, infer_bounds
+
+        prog = Program.from_json(plan.request.program)
+        program = prog.to_dict()
+        value_bounds = {
+            name: b.to_dict()
+            for name, b in infer_bounds(prog, plan.request.shape).items()
+        }
     return {
         "plan": plan.to_dict(),
+        "program": program,
+        "value_bounds": value_bounds,
         "depth_scores": [
             {
                 "depth": d,

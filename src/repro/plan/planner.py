@@ -81,6 +81,22 @@ from .schema import LatticeReport, PadPlan, PlanRequest, StencilPlan
 __all__ = ["Planner", "default_planner", "plan_stencil"]
 
 
+def _program_stage_halos(request: PlanRequest, d: int):
+    """Per-stage operator halos of a chain request, sourced from its
+    canonical serialized stencil program (DESIGN.md §13): the IR's
+    accessed-offset footprints over the program's ``apply`` ops — which
+    are exactly the cut-points the depth scoring fuses between.  Requests
+    constructed directly (no derived program) fall back to the stage-list
+    arithmetic; the two agree by construction and by test."""
+    if request.program:
+        from repro.ir import Program, stage_halos as ir_stage_halos
+
+        halos = ir_stage_halos(Program.from_json(request.program))
+        if len(halos) == len(request.stages):
+            return [tuple(h) for h in halos]
+    return [halo_from_offsets([st.offsets], d) for st in request.stages]
+
+
 def _align_extent(t: int, n: int, unit: int) -> int:
     """Clamp a tile extent to [1, n], snapped down to ``unit`` multiples
     (or up to min(unit, n) when below the grain)."""
@@ -445,10 +461,12 @@ class Planner:
             # Stage chain (possibly a repeated single operator): per-stage
             # halos drive the launch geometry; the componentwise union is
             # what the lattice/pad stages and the depth-1 tile see (a
-            # window sized for the union admits every stage).
-            stage_halos = [
-                halo_from_offsets([st.offsets], d) for st in stages
-            ]
+            # window sized for the union admits every stage).  The fusion
+            # depths scored below are cut-points of the request's stencil
+            # program — the halos come from the IR's shape inference over
+            # its apply ops (DESIGN.md §13), pinned equal to the legacy
+            # stage-list arithmetic by test.
+            stage_halos = _program_stage_halos(request, d)
             stage_points = [len(st.offsets) for st in stages]
             halo = halo_from_offsets([st.offsets for st in stages], d)
         else:

@@ -33,17 +33,23 @@ __all__ = [
     "validate_plan_call",
 ]
 
-# v4: multi-core column sharding — ``num_shards``/``mesh_axis`` joined the
-# request and the plan gained the shard decomposition (``shard_axis``,
-# worst-shard ``per_shard_traffic_bytes``, ``halo_exchange_bytes``).  The
-# version participates in every cache key, so all v3 on-disk plans are
-# invalidated in one stroke — re-planned, never mis-parsed.
+# v5: the stencil-program IR (DESIGN.md §13) — every request now carries
+# ``program``, the canonical weightless serialized stencil program its
+# stages/offsets lower from (derived, never user-passed, so the
+# ``time_steps=``/``stages=``/explicit-program spellings of one
+# computation share a key), plus ``bcs``, the per-stage boundary
+# conditions a boundary-op program declares.  The version participates in
+# every cache key, so all v4 on-disk plans are invalidated in one stroke
+# — re-planned, never mis-parsed.
+# (v4: multi-core column sharding — ``num_shards``/``mesh_axis`` joined
+# the request and the plan gained the shard decomposition (``shard_axis``,
+# worst-shard ``per_shard_traffic_bytes``, ``halo_exchange_bytes``).)
 # (v3: stage chains — the request canonicalizes every temporal chain into
 # an ordered ``stages`` list, and the plan grew the streaming-vs-recompute
 # flop fields plus the per-depth score table.)
 # (v2: temporal blocking — ``time_steps`` joined the request and the plan
 # gained ``fused_depth``/``single_pass_traffic_bytes``.)
-PLANNER_VERSION = 4
+PLANNER_VERSION = 5
 
 # Default VMEM budget mirrors core.tiling (import-free to keep this module
 # pure data): half of a v5e core's VMEM.
@@ -61,6 +67,44 @@ def _offsets_tuple(offsets, d: int):
         arr = np.asarray(g, dtype=np.int64).reshape(-1, d)
         groups.append(tuple(_int_tuple(row) for row in arr))
     return tuple(groups)
+
+
+def _bcs_tuple(bcs, n_stages: int):
+    """Canonicalize per-stage boundary conditions: each entry ``None`` /
+    ``"zero"`` / ``(kind, value)``; an all-native chain collapses to the
+    empty tuple so bc-free requests keep their bc-free key."""
+    from repro.ir.ops import normalize_bc  # numpy-only
+
+    if not bcs:
+        return ()
+    norm = []
+    for bc in bcs:
+        if bc is None or isinstance(bc, str):
+            norm.append(normalize_bc(bc))
+        else:
+            kind, value = bc
+            norm.append(normalize_bc(kind, value))
+    if len(norm) != n_stages:
+        raise ValueError(
+            f"{len(norm)} boundary conditions for {n_stages} stage(s)"
+        )
+    if all(bc is None for bc in norm):
+        return ()
+    return tuple(norm)
+
+
+def _derive_program(d: int, offs, specs, bcs) -> str:
+    """The request's canonical serialized stencil program (DESIGN.md §13):
+    weightless, values canonically renamed — always derived, never
+    user-passed, so every spelling of one computation shares a key."""
+    from repro.ir.ops import plan_program_key  # numpy-only
+
+    if specs:
+        return plan_program_key(
+            d, stage_offsets=[st.offsets for st in specs],
+            bcs=bcs if bcs else None,
+        )
+    return plan_program_key(d, rhs_offsets=list(offs))
 
 
 @dataclass(frozen=True)
@@ -144,6 +188,14 @@ class PlanRequest:
     never changes the tile decision (the decomposition is per-column),
     so a ``num_shards=1`` request is *the same request* — same canonical
     dict, same cache key — as one that never mentions sharding.
+
+    ``program`` (DESIGN.md §13) is the canonical weightless serialized
+    stencil program this request lowers from — **always derived** from
+    the stages/offsets (+ ``bcs``), never user-passed, so the
+    ``time_steps=``/``stages=``/explicit-program spellings of one
+    computation share a single cache key.  ``bcs`` carries the per-stage
+    boundary conditions a boundary-op program declares (``None`` = the
+    engine-native zero fill; an all-native chain collapses to ``()``).
     """
 
     shape: tuple[int, ...]
@@ -160,6 +212,8 @@ class PlanRequest:
     stages: tuple[StageSpec, ...] = ()
     num_shards: int = 1
     mesh_axis: str = "columns"
+    bcs: tuple = ()
+    program: str = ""
 
     @classmethod
     def make(
@@ -178,12 +232,16 @@ class PlanRequest:
         stages: Sequence | None = None,
         num_shards: int = 1,
         mesh_axis: str = "columns",
+        bcs: Sequence | None = None,
     ) -> "PlanRequest":
         """Build a canonical request.  ``offsets`` may be a single (s, d)
         offset array or a sequence of per-RHS arrays.  ``stages`` instead
         gives the ordered stage chain (each entry a :class:`StageSpec`,
         ``(offsets, weights)`` pair, dict, or bare offset array); it is
-        mutually exclusive with ``offsets``+``time_steps``."""
+        mutually exclusive with ``offsets``+``time_steps``.  ``bcs``
+        gives each stage input's boundary condition (``None``/``"zero"``/
+        ``(kind, value)``); ``program`` is always derived, never
+        accepted."""
         shape = _int_tuple(shape)
         d = len(shape)
         if stages is not None:
@@ -256,6 +314,12 @@ class PlanRequest:
                 vmem_budget = a * z * w * int(dtype_bytes)  # S words
             else:
                 vmem_budget = _DEFAULT_VMEM_BUDGET
+        norm_bcs = _bcs_tuple(bcs, len(specs))
+        if norm_bcs and not specs:
+            raise ValueError(
+                "boundary conditions require a stage chain; multi-RHS "
+                "requests run on the engine-native zero fill"
+            )
         return cls(
             shape=shape,
             offsets=offs,
@@ -271,6 +335,8 @@ class PlanRequest:
             stages=specs,
             num_shards=num_shards,
             mesh_axis=str(mesh_axis),
+            bcs=norm_bcs,
+            program=_derive_program(d, offs, specs, norm_bcs),
         )
 
     def canonical(self) -> dict:
@@ -299,6 +365,7 @@ class PlanRequest:
             stages = (StageSpec(offsets=offs[0]),) * time_steps
         else:
             stages = ()
+        bcs = _bcs_tuple(d.get("bcs") or (), len(stages))
         return cls(
             shape=_int_tuple(d["shape"]),
             offsets=offs,
@@ -314,6 +381,10 @@ class PlanRequest:
             stages=stages,
             num_shards=int(d.get("num_shards", 1)),
             mesh_axis=str(d.get("mesh_axis", "columns")),
+            bcs=bcs,
+            # Re-derived, never trusted from the dict: a hand-edited or
+            # pre-v5 ``program`` string cannot diverge from the stages.
+            program=_derive_program(len(d["shape"]), offs, stages, bcs),
         )
 
 
@@ -550,11 +621,14 @@ def validate_plan_call(
     dtype_bytes: int,
     time_steps: int = 1,
     stages: Sequence | None = None,
+    bcs: Sequence | None = None,
 ) -> None:
     """Raise :class:`PlanMismatchError` unless ``plan`` was compiled for
     exactly this call: same grid shape, same canonicalized offset groups,
     same element width, same requested step count, and — when the call
-    runs a stage chain — the same per-stage operator offsets.
+    runs a stage chain — the same per-stage operator offsets and boundary
+    conditions (a boundary op changes the computed values, so a plan for
+    the zero-fill program is not a plan for the neumann one).
 
     Budget/strategy knobs are deliberately *not* checked — a plan compiled
     under a custom VMEM budget is still a valid (if different) answer for
@@ -594,6 +668,11 @@ def validate_plan_call(
                 f"stages: plan has {len(plan_stages)} stage(s) "
                 f"{plan_stages} vs call {call_stages}"
             )
+    call_bcs = _bcs_tuple(
+        bcs or (), len(stages) if stages is not None else int(time_steps)
+    )
+    if req.bcs != call_bcs:
+        mismatches.append(f"bcs: plan {req.bcs} vs call {call_bcs}")
     if mismatches:
         raise PlanMismatchError(
             "StencilPlan does not match this call (plan request key "

@@ -150,6 +150,32 @@ def test_v3_schema_entry_reinvalidated(tmp_path):
     assert PlanCache(cache_dir=str(tmp_path)).get(key) == plan  # ...healed
 
 
+def test_v4_schema_entry_reinvalidated(tmp_path):
+    """A v4-era on-disk entry (predating the §13 stencil-program IR: no
+    ``bcs``/``program`` in the request, version 4) must be re-planned
+    cleanly, never crashed on or served — the schema-v5 mirror of the
+    v2/v3 regressions above."""
+    cache = PlanCache(cache_dir=str(tmp_path))
+    planner = Planner(cache=cache)
+    req = _request()
+    plan = planner.plan(req)
+    key = req.cache_key()
+    d = plan.to_dict()
+    d["version"] = 4
+    for f in ("bcs", "program"):
+        d["request"].pop(f)
+    path = os.path.join(str(tmp_path), f"{key}.json")
+    with open(path, "w") as fh:
+        json.dump(d, fh)
+    cold = PlanCache(cache_dir=str(tmp_path))
+    assert cold.get(key) is None             # stale schema: never served
+    assert cold.stats["corrupt"] == 1
+    assert not os.path.exists(path)          # dropped, not left to rot
+    replanned = Planner(cache=cold).plan(req)  # clean re-plan...
+    assert replanned == plan
+    assert PlanCache(cache_dir=str(tmp_path)).get(key) == plan  # ...healed
+
+
 def test_lru_eviction_falls_back_to_disk(tmp_path):
     cache = PlanCache(cache_dir=str(tmp_path), capacity=2)
     planner = Planner(cache=cache)
