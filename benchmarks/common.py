@@ -25,6 +25,13 @@ def force_cpu_devices(n: int = 4) -> None:
         os.environ["XLA_FLAGS"] = (
             flags + f" --xla_force_host_platform_device_count={n}"
         ).strip()
+    # The §14 ring↔trapezoid bit-parity gates need deterministic mul→add
+    # rounding on the CPU backend: XLA contracts mul+add into FMAs per
+    # fusion, and different window kinds fuse differently, so cap the
+    # ISA below FMA3 (host platform only; TPU runs are unaffected).
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "jax" not in sys.modules and "--xla_cpu_max_isa" not in flags:
+        os.environ["XLA_FLAGS"] = (flags + " --xla_cpu_max_isa=AVX").strip()
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

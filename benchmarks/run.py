@@ -2,9 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV per benchmark (spec format).
 ``--full`` runs paper-scale sweeps; default is the quick CI-sized pass.
-``--json [PATH]`` runs only the PR-tracked IR-parity record (which
-embeds the PR7 obs record, which embeds PR6's, PR5's, …, PR1's) and
-writes it to PATH (default: ``BENCH_PR8.json`` at the repo root) — the
+``--json [PATH]`` runs only the PR-tracked dtype-window record (which
+embeds the PR8 IR record, which embeds PR7's, PR6's, …, PR1's) and
+writes it to PATH (default: ``BENCH_PR9.json`` at the repo root) — the
 perf trajectory artifact scripts/ci.sh checks on every PR.
 """
 from __future__ import annotations
@@ -20,7 +20,7 @@ def main() -> None:
     quick = "--full" not in argv
     force_cpu_devices()
     if "--json" in argv:
-        from . import ir_parity
+        from . import dtype_window
         from .common import gates_ok
 
         i = argv.index("--json")
@@ -29,20 +29,23 @@ def main() -> None:
         else:
             path = os.path.join(
                 os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                "BENCH_PR8.json",
+                "BENCH_PR9.json",
             )
-        report = ir_parity.main(quick, json_path=path)
+        report = dtype_window.main(quick, json_path=path)
         ok = report["acceptance"]
         print(
-            f"wrote {path}: ir_parity "
-            f"spellings[bitwise={ok['spellings_bitwise_ok']} "
-            f"one_key={ok['spellings_one_key_ok']}] "
-            f"bc[max_err {ok['achieved_bc_max_err']:.1e} "
-            f"ok={ok['bc_oracle_ok']} "
-            f"mesh_no_pad={ok['mesh_no_host_pad_ok']}] "
+            f"wrote {path}: dtype_window "
+            f"uncap[trap_capped_2={ok['trapezoid_f32_capped_at_2']} "
+            f"ring_bf16_ge_4={ok['ring_bf16_depth_ge_4']} "
+            f"cut {ok['achieved_traffic_cut']:.2f}x "
+            f"ok={ok['traffic_cut_ok']}] "
+            f"ring[bitwise={ok['ring_bitwise_ok']} "
+            f"never_shallower={ok['ring_never_shallower_ok']}] "
+            f"pr8[bitwise={ok['pr8_spellings_bitwise_ok']} "
+            f"bc={ok['pr8_bc_oracle_ok']} "
+            f"mesh_no_pad={ok['pr8_mesh_no_host_pad_ok']}] "
             f"pr7[reconcile={ok['pr7_reconcile_ok']}] "
-            f"pr6[never_slower={ok['pr6_never_slower_ok']} "
-            f"warm_hit={ok['pr6_warm_hit_ok']}] "
+            f"pr6[never_slower={ok['pr6_never_slower_ok']}] "
             f"pr5[bitwise={ok['pr5_sharded_bitwise_ok']}] "
             f"pr4[flops_ok={ok['pr4_flop_reduction_ok']}] "
             f"pr3[traffic_ok={ok['pr3_fused_traffic_ok']}] "
@@ -53,10 +56,10 @@ def main() -> None:
             sys.exit(1)  # the perf gate IS the CI signal — fail loudly
         return
     from . import (
-        autotune, bounds_table, fig4_miss_reduction, fig5_unfavorable,
-        ir_parity, obs_overhead, padding_effect, planner_traffic,
-        roofline_report, shard_columns, stage_chain, sweep_traffic,
-        temporal_fusion, tpu_tiling,
+        autotune, bounds_table, dtype_window, fig4_miss_reduction,
+        fig5_unfavorable, ir_parity, obs_overhead, padding_effect,
+        planner_traffic, roofline_report, shard_columns, stage_chain,
+        sweep_traffic, temporal_fusion, tpu_tiling,
     )
     fig4_miss_reduction.main(quick)
     fig5_unfavorable.main(quick)
@@ -72,7 +75,8 @@ def main() -> None:
     pr5 = shard_columns.main(quick, pr4=pr4)
     pr6 = autotune.main(quick, pr5=pr5)
     pr7 = obs_overhead.main(quick, pr6=pr6)
-    ir_parity.main(quick, pr7=pr7)
+    pr8 = ir_parity.main(quick, pr7=pr7)
+    dtype_window.main(quick, pr8=pr8)
     roofline_report.main(quick)
 
 

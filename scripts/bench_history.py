@@ -38,6 +38,7 @@ _HEADLINES = {
     7: ("achieved_record_overhead_ms", "tracing overhead/warm hit",
         "{:.3f} ms"),
     8: ("achieved_bc_max_err", "boundary-tap max |err|", "{:.1e}"),
+    9: ("achieved_traffic_cut", "ring-bf16 traffic cut", "{:.2f}x"),
 }
 
 

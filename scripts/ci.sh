@@ -2,31 +2,45 @@
 # Tier-1 CI: the full test suite, the planner and autotuner smokes, the
 # docs-rot check, and the PR-tracked perf record.
 #
-#   scripts/ci.sh            # tests + smokes + docs check + BENCH_PR8.json
+#   scripts/ci.sh            # tests + smokes + docs check + BENCH_PR9.json
 #
-# The planner smoke plans 6 shapes (one Fig. 5 unfavorable grid, one
+# The planner smoke plans 7 shapes (one Fig. 5 unfavorable grid, one
 # time_steps=3 fused plan, one two-stage heterogeneous chain, one 4-way
-# sharded request) and asserts the pad triggers and the planned-traffic +
-# fused<=single-pass + streaming<=recompute-flops + per-shard-slab gates
+# sharded request, one bf16-frontier §14 ring chain) and asserts the pad
+# triggers and the planned-traffic + fused<=single-pass +
+# streaming<=recompute-flops + per-shard-slab + ring-never-worse gates
 # hold.  The autotune smoke (§11) races the planner's top-k candidates on
 # the live backend and asserts never_slower, the record round-trip, and
 # the sub-ms warm TunedPlanDB hit.  check_docs.py fails on documentation
 # referencing renamed or removed modules or dangling DESIGN.md § anchors.
-# The JSON pass re-derives the spelling-parity + boundary-tap record
-# checked in at BENCH_PR8.json (legacy spellings lower through the §13
-# IR bit-wise unchanged, correction taps match the oracle, zero host-side
-# pads on the mesh, PR7..PR1 gates embedded); a drift there is a
-# regression, not flake.  The IR smoke (§13) lowers a two-stage
-# heterogeneous chain spelled as a program and asserts bit-wise parity
-# with the legacy stages= launch.  The obs smoke (§12) runs one tuned
-# 4-way-sharded fused T=3 chain under REPRO_TRACE, asserts the trace
-# parses as valid trace_event JSON, and gates on repro.obs.report --check
-# reconciling counters against spans; bench_history.py then verifies the
-# PR8⊃…⊃PR1 embedded gate chain.
+# The JSON pass re-derives the §14 depth-uncapping record checked in at
+# BENCH_PR9.json (f32 trapezoid caps at T=2 where the bf16 ring plans
+# T>=4 with a >=1.5x modeled traffic cut, ring↔trapezoid bit-parity,
+# PR8..PR1 gates embedded); a drift there is a regression, not flake.
+# The IR smoke (§13) lowers a two-stage heterogeneous chain spelled as a
+# program and asserts bit-wise parity with the legacy stages= launch.
+# The obs smoke (§12) runs one tuned 4-way-sharded fused T=3 chain under
+# REPRO_TRACE, asserts the trace parses as valid trace_event JSON, and
+# gates on repro.obs.report --check reconciling counters against spans
+# (including the §14 ring_vmem_bytes counter); bench_history.py then
+# verifies the PR9⊃…⊃PR1 embedded gate chain.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+# The non-pytest smokes below need the same XLA pins the test suite and
+# benchmark harness set for themselves (tests/conftest.py,
+# benchmarks/common.py): a 4-device host platform for the §10 mesh
+# launches, and the ISA capped below FMA3 so the §14 ring↔trapezoid
+# bit-parity holds on CPU (per-fusion FMA contraction differs across
+# window kinds).  A user-set value for either flag wins.
+if [[ "${XLA_FLAGS:-}" != *"--xla_force_host_platform_device_count"* ]]; then
+  export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4"
+fi
+if [[ "${XLA_FLAGS:-}" != *"--xla_cpu_max_isa"* ]]; then
+  export XLA_FLAGS="${XLA_FLAGS:-} --xla_cpu_max_isa=AVX"
+fi
 
 python -m pytest -x -q
 python -m repro.plan.explain --smoke
@@ -39,7 +53,11 @@ OBS_TMP="$(mktemp -d)"
 trap 'rm -rf "$OBS_TMP"' EXIT
 REPRO_TRACE="$OBS_TMP/trace.json" python - <<'PY'
 import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in flags:
+    os.environ["XLA_FLAGS"] = (
+        flags + " --xla_force_host_platform_device_count=4"
+    ).strip()
 import numpy as np
 import jax.numpy as jnp
 from repro.core.cache_fitting import star_stencil

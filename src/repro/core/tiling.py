@@ -73,13 +73,16 @@ from .isoperimetric import lower_bound_loads
 
 __all__ = [
     "TileChoice",
+    "WINDOW_KINDS",
     "candidate_tiles",
     "chain_flops",
     "chain_halo",
+    "dtype_itemsize",
     "fused_halo",
     "fused_stage_bytes",
     "halo_from_offsets",
     "stage_suffix_halos",
+    "sublane_unit",
     "tile_traffic_bytes",
     "tile_vmem_bytes",
     "surface_to_volume",
@@ -89,6 +92,40 @@ __all__ = [
 VMEM_BYTES_V5E = 128 * 1024 * 1024  # v5e VMEM per core (target hardware)
 LANE = 128
 SUBLANE = 8
+
+# Staged-intermediate window layouts (DESIGN.md §14): the §8/§9 trapezoid
+# keeps stage j's full suffix-halo extent resident; the ring keeps only the
+# steady-state band the next stage's streaming read actually consumes.
+WINDOW_KINDS = ("trapezoid", "ring")
+
+# Element sizes of the dtypes the engine accepts, keyed by canonical name.
+# numpy has no bfloat16, so this table (not np.dtype) is the single source
+# for the plan stack; the kernel side resolves names through jnp.dtype.
+_DTYPE_BYTES = {
+    "float64": 8, "int64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1,
+}
+
+
+def dtype_itemsize(name: str) -> int:
+    """Bytes per element of a canonical dtype name (bfloat16-aware)."""
+    try:
+        return _DTYPE_BYTES[str(name)]
+    except KeyError:
+        raise ValueError(
+            f"unsupported dtype {name!r}; expected one of "
+            f"{sorted(_DTYPE_BYTES)}"
+        ) from None
+
+
+def sublane_unit(dtype_bytes: int) -> int:
+    """Minimum second-minor tile grain for a packed dtype: the TPU packs
+    ``4 // itemsize`` elements per 32-bit register row, so bf16 wants
+    sublane multiples of 16 and int8 of 32 (f32 stays at 8).  The lane
+    grain is always :data:`LANE`."""
+    return SUBLANE * max(1, 4 // max(int(dtype_bytes), 1))
 
 
 def halo_from_offsets(
@@ -167,12 +204,14 @@ def candidate_tiles(
     max_tile_elems: int,
     sweep_axis: int | None = None,
     aligned: bool = True,
+    dtype_bytes: int = 4,
 ) -> list[tuple[int, ...]]:
     """Candidate tiles.  ``aligned=True`` restricts to hardware-aligned
-    extents (lane dim multiples of 128, sublane dim multiples of 8, leading
-    dims small integers).  The sweep axis additionally admits small extents:
-    with halo reuse the sweep tile only amortizes the window shift, so thin
-    slabs (the paper's scanning face) are often optimal.
+    extents (lane dim multiples of 128, sublane dim multiples of the
+    dtype's packed grain — 8 for f32, 16 for bf16, 32 for int8 — leading
+    dims small integers).  The sweep axis additionally admits small
+    extents: with halo reuse the sweep tile only amortizes the window
+    shift, so thin slabs (the paper's scanning face) are often optimal.
     """
     d = len(shape)
     per_dim: list[list[int]] = []
@@ -182,7 +221,10 @@ def candidate_tiles(
         elif i == d - 1:
             opts = set(_aligned_candidates(n, LANE, max_tile_elems))
         elif i == d - 2:
-            opts = set(_aligned_candidates(n, SUBLANE, max_tile_elems))
+            opts = set(
+                _aligned_candidates(n, sublane_unit(dtype_bytes),
+                                    max_tile_elems)
+            )
         else:
             opts = {o for o in (1, 2, 4, 8, 16, 32, 64, 128, n) if o <= n}
         if i == sweep_axis and (not aligned or i < d - 2):
@@ -345,25 +387,47 @@ def fused_stage_bytes(
     dtype_bytes: int,
     time_steps: int,
     stage_halos: Sequence[Sequence[tuple[int, int]]] | None = None,
+    window_kind: str = "trapezoid",
+    sweep_axis: int | None = None,
+    stage_dtype_bytes: Sequence[int] | None = None,
 ) -> int:
-    """Bytes of the T−1 staged trapezoid intermediates, shared per launch:
-    stage j (1 ≤ j < T) holds ``T_i + (T−j)(h_lo_i + h_hi_i)`` per dim,
-    shrinking toward the bare tile as the trapezoid narrows.  With
-    ``stage_halos`` stage j holds ``T_i +`` the suffix sum of stages
-    ``j+1..T``'s halos instead (``halo``/``time_steps`` ignored)."""
-    if stage_halos is not None:
-        suffix = stage_suffix_halos(stage_halos)
-        return dtype_bytes * sum(
-            prod(t + lo + hi for t, (lo, hi) in zip(tile, suffix[j - 1]))
-            for j in range(1, len(stage_halos))
+    """Bytes of the T−1 staged intermediates, shared per launch.
+
+    ``window_kind="trapezoid"``: stage j (1 ≤ j < T) holds
+    ``T_i + (T−j)(h_lo_i + h_hi_i)`` per dim — the full warm-up cone.
+    With ``stage_halos`` stage j holds ``T_i +`` the suffix sum of stages
+    ``j+1..T``'s halos instead (``halo``/``time_steps`` ignored).
+
+    ``window_kind="ring"`` (DESIGN.md §14): along ``sweep_axis`` the
+    frontier feeding stage j only keeps the steady-state band stage j's
+    streaming read consumes — ``T_s + h_lo_j_s + h_hi_j_s`` rows (that
+    stage's *own* sweep halo, not the suffix sum) — so the resident set
+    stops growing with the remaining chain depth.  Cross axes keep the
+    suffix extents (they do not stream).  ``sweep_axis=None`` has no
+    stream to renormalize along, so it prices the trapezoid.
+
+    ``stage_dtype_bytes[j]`` sizes the frontier holding stage j's output
+    (0-indexed; default ``dtype_bytes`` for every stage)."""
+    if window_kind not in WINDOW_KINDS:
+        raise ValueError(
+            f"window_kind {window_kind!r} not in {WINDOW_KINDS}"
         )
-    return dtype_bytes * sum(
-        prod(
-            t + (time_steps - j) * (lo + hi)
-            for t, (lo, hi) in zip(tile, halo)
-        )
-        for j in range(1, time_steps)
-    )
+    if stage_halos is None:
+        stage_halos = [list(halo)] * max(int(time_steps), 1)
+    T = len(stage_halos)
+    if stage_dtype_bytes is None:
+        stage_dtype_bytes = [dtype_bytes] * T
+    suffix = stage_suffix_halos(stage_halos)
+    total = 0
+    for j in range(1, T):
+        ext = [t + lo + hi for t, (lo, hi) in zip(tile, suffix[j - 1])]
+        if window_kind == "ring" and sweep_axis is not None:
+            s = sweep_axis
+            ext[s] = (
+                tile[s] + stage_halos[j][s][0] + stage_halos[j][s][1]
+            )
+        total += int(stage_dtype_bytes[j - 1]) * prod(ext)
+    return total
 
 
 def chain_flops(
@@ -425,6 +489,8 @@ def select_tile(
     time_steps: int = 1,
     stage_halos: Sequence[Sequence[tuple[int, int]]] | None = None,
     exclude_sweep_axis: int | None = None,
+    window_kind: str = "trapezoid",
+    stage_dtype_bytes: Sequence[int] | None = None,
 ) -> TileChoice:
     """Pick the traffic-minimizing VMEM tile (paper §4 adapted, §5 for the
     per-operand budget split: budget/n_operands per array).
@@ -452,6 +518,13 @@ def select_tile(
     (per-stage halos summed for the window, suffix-summed for the staged
     buffers); ``halo`` is then only the per-application union used for
     the surface-to-volume diagnostic and the lower-bound radius.
+
+    ``window_kind="ring"`` sizes the staged intermediates as steady-state
+    rings along the chosen sweep axis instead of full trapezoids —
+    traffic is unchanged, but deeper fusion stays feasible at the same
+    budget.  ``stage_dtype_bytes`` sizes each staged buffer at its own
+    stage's element width (mixed-precision chains); the input windows are
+    still priced at ``dtype_bytes``.
     """
     shape = tuple(int(n) for n in shape)
     halo = [(int(lo), int(hi)) for lo, hi in halo]
@@ -491,7 +564,7 @@ def select_tile(
     depth = len(stage_halos) if stage_halos is not None else time_steps
     best: TileChoice | None = None
     for axis in axes:
-        cands = candidate_tiles(shape, max_elems, axis, aligned)
+        cands = candidate_tiles(shape, max_elems, axis, aligned, dtype_bytes)
         if extras:
             seen = set(cands)
             cands = cands + [t for t in extras if t not in seen]
@@ -503,12 +576,15 @@ def select_tile(
             if vmem > budget:
                 continue
             if depth > 1:
-                # The staged trapezoid buffers are one shared set per
+                # The staged frontier buffers are one shared set per
                 # launch — charge them against the whole budget on top of
                 # the per-operand windows, not inside each operand's share.
                 stages = fused_stage_bytes(
                     tile, halo, dtype_bytes, time_steps,
                     stage_halos=stage_halos,
+                    window_kind=window_kind,
+                    sweep_axis=axis,
+                    stage_dtype_bytes=stage_dtype_bytes,
                 )
                 if vmem * max(n_operands, 1) + stages > vmem_budget:
                     continue

@@ -50,13 +50,16 @@ class Lowered:
     or ``"multi_rhs"`` (``stages[p]`` applied to ``inputs[p]`` and
     summed).  ``stages`` holds ``(offsets, weights)`` pairs; ``bcs``
     holds each stage input's normalized boundary (``None`` = engine-
-    native zero fill), always the same length as ``stages``.
+    native zero fill) and ``dtypes`` each stage *output*'s storage dtype
+    name (``None`` = the chain input's; DESIGN.md §14) — both always the
+    same length as ``stages``.
     """
 
     kind: str
     inputs: tuple[str, ...]
     stages: tuple[tuple[tuple[tuple[int, ...], ...], tuple[float, ...]], ...]
     bcs: tuple
+    dtypes: tuple = ()
 
     @property
     def has_bc(self) -> bool:
@@ -69,7 +72,7 @@ class _Chain:
     is the pending boundary annotation on the chain's current value."""
 
     input: str
-    stages: tuple  # ((offsets, weights, in_bc), ...)
+    stages: tuple  # ((offsets, weights, in_bc, dtype), ...)
     bc: tuple | None = None
 
 
@@ -121,7 +124,8 @@ def lower(program: Program, shape=None) -> Lowered:
                 )
             env[op.result] = _Chain(
                 input=src.input,
-                stages=src.stages + ((op.offsets, op.weights, src.bc),),
+                stages=src.stages
+                + ((op.offsets, op.weights, src.bc, op.dtype),),
             )
         elif isinstance(op, Combine):
             folded = _fold_combine(op, env, d)
@@ -147,8 +151,11 @@ def lower(program: Program, shape=None) -> Lowered:
                 result = Lowered(
                     kind="chain",
                     inputs=(src.input,),
-                    stages=tuple((offs, wts) for offs, wts, _ in src.stages),
-                    bcs=tuple(bc for _, _, bc in src.stages),
+                    stages=tuple(
+                        (offs, wts) for offs, wts, _, _ in src.stages
+                    ),
+                    bcs=tuple(bc for _, _, bc, _ in src.stages),
+                    dtypes=tuple(dt for _, _, _, dt in src.stages),
                 )
     assert result is not None  # verify guarantees exactly one store
     return result
@@ -162,13 +169,14 @@ def _fold_combine(op: Combine, env: dict[str, _Chain], d: int):
     prefix: tuple | None = None  # (input, stage-tuple) of the shared pred
     taps = []
     bcs = set()
+    dts: set = set()  # folded-stage output dtypes must agree
     for name, coeff in zip(op.operands, op.coeffs):
         src = env.get(name)
         if src is None:
             return None
         if src.stages:
             # Peel the last stage: its apply site is the fold candidate.
-            *head, (offs, wts, in_bc) = src.stages
+            *head, (offs, wts, in_bc, dt) = src.stages
             key = (src.input, tuple(head))
             if src.bc is not None:
                 # A boundary on an apply *result* used in a combine has
@@ -176,6 +184,7 @@ def _fold_combine(op: Combine, env: dict[str, _Chain], d: int):
                 return None
             cand = [(o, float(coeff) * float(w)) for o, w in zip(offs, wts)]
             bcs.add(in_bc)
+            dts.add(dt)
         else:
             # The predecessor itself: identity tap.  Offset 0 never
             # exits the domain, so its boundary annotation is inert.
@@ -187,15 +196,18 @@ def _fold_combine(op: Combine, env: dict[str, _Chain], d: int):
             return None
         taps.extend(cand)
     # Identity-only combines (no apply operand) fold trivially but carry
-    # no bc; with apply operands, all their input bcs must agree.
-    if len(bcs) > 1:
+    # no bc; with apply operands, all their input bcs — and output
+    # dtypes — must agree (summing a bf16-rounded value with an f32 one
+    # is not a single weighted application of anything).
+    if len(bcs) > 1 or len(dts) > 1:
         return None
     bc = next(iter(bcs)) if bcs else None
+    dt = next(iter(dts)) if dts else None
     offsets, weights = _merge_taps(taps)
     assert prefix is not None
     return _Chain(
         input=prefix[0],
-        stages=tuple(prefix[1]) + ((offsets, weights, bc),),
+        stages=tuple(prefix[1]) + ((offsets, weights, bc, dt),),
     )
 
 
@@ -218,12 +230,18 @@ def _as_multi_rhs(op: Combine, env: dict[str, _Chain]) -> Lowered:
                 "needs exactly one apply per operand (and operands of a "
                 "foldable combine must share one predecessor)"
             )
-        offs, wts, in_bc = src.stages[0]
+        offs, wts, in_bc, dt = src.stages[0]
         if in_bc is not None or src.bc is not None:
             raise IRLowerError(
                 f"combine {op.result!r}: operand {name!r} carries a "
                 "non-zero boundary — the multi-RHS launch supports only "
                 "the engine-native zero fill"
+            )
+        if dt is not None:
+            raise IRLowerError(
+                f"combine {op.result!r}: operand {name!r} declares a "
+                "stage dtype — the multi-RHS launch runs at the input "
+                "dtype only"
             )
         if src.input in inputs:
             raise IRLowerError(

@@ -151,12 +151,20 @@ class Apply:
     compiler's cache key is weight-independent, mirroring
     ``plan.schema.StageSpec``); such a program plans but cannot lower to
     an executable launch.
+
+    ``dtype`` declares the result's storage dtype by canonical name
+    (``None`` = the chain input's dtype): the engine stores this value's
+    frontier / write-back at that width while still accumulating in f32
+    (DESIGN.md §14).  Like weights it is a value attribute, not part of
+    the canonical plan-key structure — ``plan.schema.StageSpec.dtype``
+    carries it into the request.
     """
 
     result: str
     operand: str
     offsets: tuple[tuple[int, ...], ...]
     weights: tuple[float, ...] | None = None
+    dtype: str | None = None
 
     def to_dict(self) -> dict:
         d: dict = {
@@ -167,6 +175,8 @@ class Apply:
         }
         if self.weights is not None:
             d["weights"] = [float(w) for w in self.weights]
+        if self.dtype is not None:
+            d["dtype"] = str(self.dtype)
         return d
 
 
@@ -237,6 +247,9 @@ def _op_from_dict(d: dict):
                 tuple(float(w) for w in d["weights"])
                 if d.get("weights") is not None
                 else None
+            ),
+            dtype=(
+                str(d["dtype"]) if d.get("dtype") is not None else None
             ),
         )
     if kind == "combine":
@@ -331,6 +344,9 @@ class Program:
                         kind=bc[0], value=bc[1],
                     ))
             elif isinstance(op, Apply):
+                # dtype is stripped with the weights: the canonical form
+                # keys the *structure*; StageSpec.dtype differentiates
+                # mixed-precision requests in the plan cache.
                 ops.append(Apply(
                     result=name(op.result), operand=name(op.operand),
                     offsets=op.offsets,
@@ -378,6 +394,7 @@ def chain_program(
     boundary: str | Sequence[str | None] | None = None,
     value: float = 0.0,
     input_name: str = "u",
+    dtypes: Sequence[str | None] | None = None,
 ) -> Program:
     """A linear stage chain: ``load → [boundary →] apply → ... → store``.
 
@@ -385,7 +402,9 @@ def chain_program(
     bare offset arrays for a shape-only program).  ``boundary`` declares
     each stage input's boundary condition — one kind for the whole chain
     or a per-stage sequence (``None``/``"zero"`` entries fall back to the
-    native zero fill); ``value`` is the Dirichlet constant.
+    native zero fill); ``value`` is the Dirichlet constant.  ``dtypes``
+    attaches each apply's output storage dtype (``None`` entries = the
+    input's; DESIGN.md §14).
     """
     pairs = _stage_pairs(stages, d)
     if not pairs:
@@ -398,6 +417,14 @@ def chain_program(
             raise ValueError(
                 f"{len(kinds)} boundary kinds for {len(pairs)} stages"
             )
+    if dtypes is None:
+        dts: list[str | None] = [None] * len(pairs)
+    else:
+        dts = [str(dt) if dt is not None else None for dt in dtypes]
+        if len(dts) != len(pairs):
+            raise ValueError(
+                f"{len(dts)} dtypes for {len(pairs)} stages"
+            )
     ops: list = [Load(result="u0", input=input_name)]
     cur = "u0"
     for j, ((offs, wts), kind) in enumerate(zip(pairs, kinds)):
@@ -408,7 +435,7 @@ def chain_program(
             cur = bname
         vname = f"v{j + 1}"
         ops.append(Apply(result=vname, operand=cur, offsets=offs,
-                         weights=wts))
+                         weights=wts, dtype=dts[j]))
         cur = vname
     ops.append(Store(operand=cur))
     return Program(d=d, ops=tuple(ops))
@@ -421,6 +448,7 @@ def stencil_program(
     d: int | None = None,
     boundary: str | None = None,
     value: float = 0.0,
+    dtypes: Sequence[str | None] | None = None,
 ) -> Program:
     """``time_steps`` repeated applications of one operator — the program
     form of ``stencil_pallas(time_steps=T)``."""
@@ -430,7 +458,7 @@ def stencil_program(
     wts = tuple(float(w) for w in weights) if weights is not None else None
     stage = (_offsets_tuple(arr, d), wts)
     return chain_program([stage] * int(time_steps), d,
-                         boundary=boundary, value=value)
+                         boundary=boundary, value=value, dtypes=dtypes)
 
 
 def rhs_program(offsets_list, weights_list=None, d: int | None = None) -> Program:

@@ -13,6 +13,17 @@ Matches ``models.ssm._causal_conv`` (causal, silu-activated); the optional
 kernel drops into the serving path's chunked prefill.  A custom VJP backs
 the kernel with the reference gradient, so it is safe under ``jax.grad``
 (training uses it when ``SSMCfg.pallas_conv`` is set).
+
+**Mixed precision (DESIGN.md §14).**  The kernel is dtype-preserving end
+to end: a bf16 input keeps its VMEM window, prefetch slabs, and output in
+bf16 (half the window bytes, double the sublane grain — the same
+dtype-aware tiling the stencil engine's ring windows use), while every
+multiply-accumulate, the bias add, and the silu run in f32 exactly as on
+the f32 path.  The custom VJP recomputes its pre-activation in f32 too,
+so gradients differ from the f32 path only by the bf16 rounding of the
+inputs/outputs themselves — the tolerance the parity test pins.  The
+planned ``tile_s`` prices the window at the *input's* element width, so
+bf16 calls legally plan longer sweep tiles under the same VMEM budget.
 """
 
 from __future__ import annotations

@@ -39,6 +39,22 @@ stages are masked to the true grid domain (zero outside), which makes
 the fused result exactly equal to iterating the zero-fill reference
 stage by stage.
 
+**Ring windows** (DESIGN.md §14, ``window_kind="ring"`` — the default):
+along the sweep axis each frontier keeps only the steady-state band its
+consumer actually reads — ``tile[sweep] + lo + hi`` rows of the *next*
+stage's own halo — instead of the full warm-up trapezoid; the modulo
+origin is renormalized to 0 each step by the same VMEM shift, so the
+circular addressing costs no dynamic indexing.  VMEM occupancy stops
+growing with the remaining chain depth, which roughly doubles the legal
+fusion depth at a fixed budget.  ``window_kind="trapezoid"`` keeps the
+full-cone buffers (bit-wise identical results — the parity gate).
+
+**Mixed precision** (``dtypes=``): each stage may declare its output
+dtype (``None`` = the input's); frontiers are allocated — and the final
+stage written back — at the stage dtype, while every stage still
+accumulates in f32.  A bf16 input window halves the streamed bytes (and
+the dtype-aware planner doubles the sublane grain to match).
+
 Boundary semantics match ``kernels.ref.stencil_ref``: zero fill, via a
 host-side ``jnp.pad`` that also rounds each extent up to the tile (grids
 not divisible by the tile take this round-up path).
@@ -69,6 +85,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.tiling import (  # shared with the planner
     chain_halo,
+    dtype_itemsize,
+    fused_stage_bytes,
     halo_from_offsets,
     stage_suffix_halos,
 )
@@ -111,11 +129,24 @@ class _Stage(NamedTuple):
     suffix_hi: tuple
     ext: tuple
     bc: tuple | None = None
+    dtype: str | None = None        # stage OUTPUT dtype (None = input's)
+
+
+def _frontier_depth(stages, j, t_s, sweep, window_kind):
+    """Sweep-axis extent of frontier buffer j (holding stage j's output,
+    feeding stage j+1).  Trapezoid: the full suffix-halo extent.  Ring
+    (§14): exactly the band stage j+1's streaming read consumes —
+    ``t_s`` plus that stage's *own* sweep halo — which never exceeds the
+    trapezoid extent (the suffix sum includes it)."""
+    if window_kind == "ring":
+        nxt = stages[j + 1]
+        return t_s + nxt.lo[sweep] + nxt.hi[sweep]
+    return stages[j].ext[sweep]
 
 
 def _sweep_kernel(
     offsets, weights, lo_w, hi_w, stages, tile, sweep, nswp, pipelined,
-    n_true, *refs
+    window_kind, n_true, *refs
 ):
     """Generic d-dim, p-RHS sweep kernel, optionally stage-chain fused.
 
@@ -132,9 +163,12 @@ def _sweep_kernel(
     across sweep steps (DESIGN.md §9).
 
     ``stages`` is the static per-stage chain (``None`` = single
-    application, possibly multi-RHS).  ``n_true`` is the unpadded grid
-    shape — intermediate stages are masked to it so the fused pass equals
-    iterating the zero-fill reference stage by stage.
+    application, possibly multi-RHS).  ``window_kind`` sizes the
+    frontiers: ``"ring"`` keeps the steady-state band per frontier,
+    ``"trapezoid"`` the full warm-up cone (§14) — results are bit-wise
+    identical.  ``n_true`` is the unpadded grid shape — intermediate
+    stages are masked to it so the fused pass equals iterating the
+    zero-fill reference stage by stage.
     """
     d = len(tile)
     p = len(offsets)
@@ -404,18 +438,32 @@ def _sweep_kernel(
     def full_compute():
         """The §8 trapezoid: every stage over its full extent — the warm-up
         of each sweep column (and the whole story when there is no sweep
-        overlap to stream across)."""
+        overlap to stream across).  Under the §14 ring only the trailing
+        steady-state band of each stage's value is *stored*; the full
+        extent is passed forward as a value, round-tripped through the
+        frontier dtype so the stored rows and the forwarded block agree
+        bit-wise with the trapezoid's read-back."""
         cur = windows[0][...]
         for j in range(T):
             acc = stage_apply(j, cur, stages[j].ext, stage_starts(j, False))
             if j < T - 1:
                 acc = mask_domain(acc, stage_starts(j, False), stages[j].ext)
-                # Round-trip through the staged scratch in the input dtype
-                # so the fused chain matches separate kernel launches
-                # bit-wise (each launch writes its iterate in the array
-                # dtype).
-                frontiers[j][...] = acc.astype(frontiers[j].dtype)
-                cur = frontiers[j][...]
+                # Round-trip through the staged scratch in the frontier
+                # dtype so the fused chain matches separate kernel
+                # launches bit-wise (each launch writes its iterate in
+                # the stage dtype).
+                stored = acc.astype(frontiers[j].dtype)
+                depth_j = _frontier_depth(stages, j, t_s, sweep, window_kind)
+                if depth_j == stages[j].ext[sweep]:
+                    frontiers[j][...] = stored
+                    cur = frontiers[j][...]
+                else:
+                    sl = [slice(None)] * d
+                    sl[sweep] = slice(
+                        stages[j].ext[sweep] - depth_j, stages[j].ext[sweep]
+                    )
+                    frontiers[j][...] = stored[tuple(sl)]
+                    cur = stored
             else:
                 out_ref[...] = acc.astype(out_ref.dtype)
 
@@ -423,7 +471,8 @@ def _sweep_kernel(
         """The §9 streaming wavefront: rotate each frontier ring by t_s
         rows and compute only the newly-uncovered rows of each stage —
         stage j consumes exactly the trailing ``t_s + lo_j + hi_j`` rows
-        of stage j−1's frontier (the window for j = 0)."""
+        of stage j−1's frontier (the window for j = 0).  Under the §14
+        ring that trailing band IS the whole buffer."""
         for j in range(T):
             st = stages[j]
             blk = t_s + st.lo[sweep] + st.hi[sweep]
@@ -432,7 +481,9 @@ def _sweep_kernel(
                 src_len = t_s + h_s
             else:
                 src_ref = frontiers[j - 1]
-                src_len = stages[j - 1].ext[sweep]
+                src_len = _frontier_depth(
+                    stages, j - 1, t_s, sweep, window_kind
+                )
             src = src_ref[win_part(src_len - blk, blk)]
             out_ext = tuple(
                 t_s if i == sweep else st.ext[i] for i in range(d)
@@ -440,8 +491,10 @@ def _sweep_kernel(
             acc = stage_apply(j, src, out_ext, stage_starts(j, True))
             if j < T - 1:
                 # Ring rotation, realized as the same VMEM shift the input
-                # window uses: drop the t_s oldest rows, keep the rest.
-                keep = st.ext[sweep] - t_s
+                # window uses: drop the t_s oldest rows, keep the rest
+                # (the modulo origin renormalized to 0 each step).
+                depth_j = _frontier_depth(stages, j, t_s, sweep, window_kind)
+                keep = depth_j - t_s
                 if keep > 0:
                     frontiers[j][win_part(0, keep)] = (
                         frontiers[j][win_part(t_s, keep)]
@@ -467,14 +520,15 @@ def _sweep_kernel(
             streaming_step()
 
 
-def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None):
+def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None, dtypes_w=None):
     """Static launch geometry shared by the single-device and sharded
     paths: per-RHS offset/weight arrays, the per-stage chain (``None`` =
     single application), and the window cone ``lo_w``/``hi_w`` — the same
     helpers the planner prices VMEM/traffic with, so kernel geometry and
     planned geometry cannot diverge.  ``bcs_w`` attaches each stage
     input's lowered boundary condition (``None`` entries = native zero
-    fill)."""
+    fill); ``dtypes_w`` each stage's output dtype name (``None`` entries
+    = the launch input's dtype)."""
     d = len(tile)
     if stages_w is not None:
         T = len(stages_w)
@@ -484,6 +538,8 @@ def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None):
         st_halos = [halo_from_offsets([o], d) for o in st_offs]
         st_bcs = tuple(bcs_w) if bcs_w is not None else (None,) * T
         assert len(st_bcs) == T, (st_bcs, T)
+        st_dts = tuple(dtypes_w) if dtypes_w is not None else (None,) * T
+        assert len(st_dts) == T, (st_dts, T)
         cone = chain_halo(st_halos)
         lo_w = tuple(lo for lo, _ in cone)
         hi_w = tuple(hi for _, hi in cone)
@@ -503,6 +559,7 @@ def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None):
                     t + l + h for t, l, h in zip(tile, sfx_lo, sfx_hi)
                 ),
                 bc=st_bcs[j],
+                dtype=st_dts[j],
             ))
         stages = tuple(stages)
         offsets = [st_offs[0]]
@@ -520,7 +577,8 @@ def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None):
 
 
 def _padded_call(ins, dom, offsets, weights, stages, lo_w, hi_w, tile,
-                 sweep, pipelined, interpret, n_true):
+                 sweep, pipelined, interpret, n_true,
+                 window_kind="ring"):
     """Run the sweep kernel over already-padded arrays and return the
     *padded* result (``∏ ntiles_i · tile_i`` per dim, no trim).
 
@@ -550,13 +608,26 @@ def _padded_call(ins, dom, offsets, weights, stages, lo_w, hi_w, tile,
     scratch = [pltpu.VMEM(window_shape, u0.dtype) for _ in range(p)]
     if pipelined:
         scratch += [pltpu.VMEM((2,) + slab_shape, u0.dtype) for _ in range(p)]
-    # Frontier buffers: stage j keeps tile + its suffix halo per dim,
-    # persisted across sweep steps (§9 streaming).
+    # Frontier buffers, persisted across sweep steps (§9 streaming): a
+    # trapezoid keeps tile + suffix halo per dim; a §14 ring keeps only
+    # the steady-state band along the sweep axis.  Each frontier lives in
+    # its own stage's dtype (None = the input's).
+    t_s = tile[sweep]
     for j in range(T - 1):
-        scratch.append(pltpu.VMEM(stages[j].ext, u0.dtype))
+        f_ext = list(stages[j].ext)
+        f_ext[sweep] = _frontier_depth(stages, j, t_s, sweep, window_kind)
+        f_dtype = (
+            jnp.dtype(stages[j].dtype) if stages[j].dtype else u0.dtype
+        )
+        scratch.append(pltpu.VMEM(tuple(f_ext), f_dtype))
     scratch.append(pltpu.SemaphoreType.DMA((p,)))
     if pipelined:
         scratch.append(pltpu.SemaphoreType.DMA((p, 2)))
+    out_dtype = (
+        jnp.dtype(stages[-1].dtype)
+        if stages is not None and stages[-1].dtype
+        else u0.dtype
+    )
 
     def out_index_map(*g):
         idx = [None] * d
@@ -568,14 +639,15 @@ def _padded_call(ins, dom, offsets, weights, stages, lo_w, hi_w, tile,
     return pl.pallas_call(
         functools.partial(
             _sweep_kernel, offsets, weights, lo_w, hi_w, stages, tile,
-            sweep, nswp, pipelined, tuple(int(n) for n in n_true),
+            sweep, nswp, pipelined, window_kind,
+            tuple(int(n) for n in n_true),
         ),
         grid=grid,
         in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)]
         + [pl.BlockSpec(memory_space=pltpu.ANY) for _ in ins],
         out_specs=pl.BlockSpec(tile, out_index_map),
         out_shape=jax.ShapeDtypeStruct(
-            tuple(k * t for k, t in zip(ntiles, tile)), u0.dtype
+            tuple(k * t for k, t in zip(ntiles, tile)), out_dtype
         ),
         scratch_shapes=scratch,
         interpret=interpret,
@@ -609,11 +681,12 @@ def embed_inputs(us, pads, pad_free=False):
     jax.jit,
     static_argnames=(
         "offsets_w", "tile", "sweep", "pipelined", "interpret", "stages_w",
-        "bcs_w",
+        "bcs_w", "dtypes_w", "window_kind",
     ),
 )
 def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
-                  stages_w=None, bcs_w=None):
+                  stages_w=None, bcs_w=None, dtypes_w=None,
+                  window_kind="ring"):
     """us: tuple of p same-shape arrays.  offsets_w: tuple per array of
     (offsets_tuple, weights_tuple) — hashable static spec.  ``stages_w``
     (tuple per stage of (offsets_tuple, weights_tuple), single RHS only)
@@ -621,12 +694,14 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
     applications with streaming per-stage frontiers.  ``bcs_w`` (tuple
     per stage, ``None``/``(kind, value)``) attaches lowered §13 boundary
     conditions; any non-zero entry switches the input prep to the
-    pad-free embed."""
+    pad-free embed.  ``dtypes_w`` (tuple per stage, ``None``/dtype name)
+    sets each stage's output dtype; ``window_kind`` picks the §14 ring
+    (default) or the full trapezoid frontier layout."""
     u0 = us[0]
     d = u0.ndim
     tile = tuple(int(t) for t in tile)
     offsets, weights, stages, lo_w, hi_w = _launch_geometry(
-        offsets_w, stages_w, tile, bcs_w
+        offsets_w, stages_w, tile, bcs_w, dtypes_w
     )
     padded_shape = tuple(_round_up(n, t) for n, t in zip(u0.shape, tile))
     # lo halo on the low side, hi + round-up slack on the high.
@@ -641,13 +716,14 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
     out = _padded_call(
         ins, jnp.zeros((d,), jnp.int32), offsets, weights, stages, lo_w,
         hi_w, tile, sweep, pipelined, interpret, u0.shape,
+        window_kind=window_kind,
     )
     return out[tuple(slice(0, n) for n in u0.shape)]
 
 
 def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None,
                time_steps=1, stages=None, num_shards=1, tune=None,
-               bcs=None):
+               bcs=None, dtypes=None, window_kind="auto"):
     """Tile decision for an un-planned call: a thin wrapper over the plan
     compiler (``repro.plan``), whose persistent cache makes repeated shapes
     — the serving case — O(1).  The old ad-hoc heuristic survives as
@@ -673,10 +749,13 @@ def _auto_tile(shape, offsets_list, dtype_bytes, n_arrays, vmem_budget=None,
         n_operands=n_arrays + 1,  # p inputs + the output tile (§5 split)
         num_shards=int(num_shards),
     )
+    kw["window_kind"] = window_kind
     if stages is not None:
         kw["stages"] = [np.asarray(o).reshape(-1, d) for o in stages]
         if bcs is not None and any(bc is not None for bc in bcs):
             kw["bcs"] = tuple(bcs)
+        if dtypes is not None and any(dt is not None for dt in dtypes):
+            kw["dtypes"] = tuple(dtypes)
     else:
         kw["offsets"] = [np.asarray(o).reshape(-1, d) for o in offsets_list]
         kw["time_steps"] = time_steps
@@ -702,6 +781,8 @@ def stencil_pallas(
     mesh=None,
     tune=None,
     trace: str | None = None,
+    dtypes: Sequence | None = None,
+    window_kind: str | None = None,
 ) -> jnp.ndarray:
     """Single-array weighted stencil, zero boundary fill (matches ref).
 
@@ -737,6 +818,7 @@ def stencil_pallas(
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
         plan=plan, time_steps=time_steps, num_shards=num_shards,
         shard_axis=shard_axis, mesh=mesh, tune=tune, trace=trace,
+        dtypes=dtypes, window_kind=window_kind,
     )
 
 
@@ -757,6 +839,8 @@ def stencil_iterate(
     mesh=None,
     tune=None,
     trace: str | None = None,
+    dtypes: Sequence | None = None,
+    window_kind: str | None = None,
 ) -> jnp.ndarray:
     """Run a stage-chain stencil program — the iterative-solver workload.
 
@@ -780,7 +864,14 @@ def stencil_iterate(
     ``num_shards``/``shard_axis``/``mesh`` shard every launch of the
     chain over cross-axis tile columns (DESIGN.md §10) — frontier rings
     are per-column state, so the fused streaming launch shards exactly
-    like the single application."""
+    like the single application.
+
+    ``dtypes=[dt_1, ..., dt_T]`` declares each stage's output dtype
+    (``None`` entries = the input's): frontiers, inter-launch handoffs
+    and the final write-back happen at the stage dtype while every stage
+    still accumulates in f32 — the mixed-precision chain of DESIGN.md
+    §14.  ``window_kind`` forces the frontier layout (``"ring"`` /
+    ``"trapezoid"``); default: the plan's choice, else the ring."""
     if stages is not None:
         if offsets is not None or weights is not None:
             raise ValueError("pass (offsets, weights) or stages, not both")
@@ -793,7 +884,7 @@ def stencil_iterate(
             vmem_budget=vmem_budget, sweep_axis=sweep_axis,
             pipelined=pipelined, plan=plan, stages=stages,
             num_shards=num_shards, shard_axis=shard_axis, mesh=mesh,
-            tune=tune, trace=trace,
+            tune=tune, trace=trace, dtypes=dtypes, window_kind=window_kind,
         )
     if offsets is None or weights is None or time_steps is None:
         raise ValueError(
@@ -804,6 +895,7 @@ def stencil_iterate(
         vmem_budget=vmem_budget, sweep_axis=sweep_axis, pipelined=pipelined,
         plan=plan, time_steps=time_steps, num_shards=num_shards,
         shard_axis=shard_axis, mesh=mesh, tune=tune, trace=trace,
+        dtypes=dtypes, window_kind=window_kind,
     )
 
 
@@ -825,6 +917,8 @@ def multi_stencil_pallas(
     tune=None,
     trace: str | None = None,
     program=None,
+    dtypes: Sequence | None = None,
+    window_kind: str | None = None,
 ) -> jnp.ndarray:
     """p-RHS stencil  q = Σ_p K_p u_p  (paper §5): one VMEM budget split
     across p operand windows plus the output tile, one shared sweep.
@@ -860,6 +954,11 @@ def multi_stencil_pallas(
     launch through the §10 column-sharded path; sharding is an execution
     knob — it never changes the result (bit-wise) or the tile choice.
 
+    ``dtypes=[dt_1, ..., dt_T]`` (single-RHS chains only) declares each
+    stage's output dtype (``None`` = the input's); ``window_kind``
+    forces the §14 frontier layout (``"ring"``/``"trapezoid"``; default
+    the plan's choice, else ring) — an execution knob, bit-wise neutral.
+
     ``trace="path.json"`` records this call into a Chrome ``trace_event``
     file (see :mod:`repro.obs`)."""
     if trace is not None:
@@ -870,8 +969,18 @@ def multi_stencil_pallas(
                 sweep_axis=sweep_axis, pipelined=pipelined, plan=plan,
                 time_steps=time_steps, stages=stages,
                 num_shards=num_shards, shard_axis=shard_axis, mesh=mesh,
-                tune=tune, program=program,
+                tune=tune, program=program, dtypes=dtypes,
+                window_kind=window_kind,
             )
+    if window_kind is not None and window_kind not in ("ring", "trapezoid"):
+        raise ValueError(
+            f"window_kind must be 'ring' or 'trapezoid', got {window_kind!r}"
+        )
+    if dtypes is not None:
+        dtypes = tuple(
+            str(jnp.dtype(dt).name) if dt is not None else None
+            for dt in dtypes
+        )
     us = tuple(us)
     assert len({u.shape for u in us}) == 1, "RHS arrays must share a shape"
     d = us[0].ndim
@@ -883,6 +992,11 @@ def multi_stencil_pallas(
             raise ValueError(
                 "pass program= or the (offsets/weights/stages) spellings, "
                 "not both"
+            )
+        if dtypes is not None:
+            raise ValueError(
+                "dtypes= belongs to the legacy spellings; a program "
+                "carries per-stage dtypes on its apply ops"
             )
         prog = (
             ir.Program.from_json(program) if isinstance(program, str)
@@ -906,7 +1020,7 @@ def multi_stencil_pallas(
                     f"stage has {len(offs)} offsets but {len(tuple(ws))} "
                     "weights"
                 )
-        prog = ir.chain_program(list(stages), d)
+        prog = ir.chain_program(list(stages), d, dtypes=dtypes)
     else:
         T = int(time_steps)
         if T < 1:
@@ -921,8 +1035,13 @@ def multi_stencil_pallas(
             # repeated) stage chain.
             prog = ir.stencil_program(
                 offsets_list[0], weights_list[0], time_steps=T, d=d,
+                dtypes=dtypes,
             )
         else:
+            if dtypes is not None:
+                raise ValueError(
+                    "dtypes= requires a single-RHS stage chain"
+                )
             prog = ir.rhs_program(offsets_list, weights_list, d=d)
     # -- verify + lower onto the engine's launch form ----------------------
     lowered = ir.lower(prog, shape)
@@ -941,6 +1060,21 @@ def multi_stencil_pallas(
         T = len(chain)
         offsets_list = [chain[0][0]]
         weights_list = [list(chain[0][1])]
+        # Per-stage output dtypes, resolved once against the chain input:
+        # ``eff`` holds concrete names for the kernel/launch handoffs,
+        # ``req_dtypes`` the None-normalized form the plan stack keys on
+        # (a stage at the input dtype is the same request as no dtype).
+        in_name = str(jnp.dtype(us[0].dtype).name)
+        chain_dtypes = tuple(lowered.dtypes) if lowered.dtypes else (None,) * T
+        assert len(chain_dtypes) == T, (chain_dtypes, T)
+        eff = tuple(
+            str(jnp.dtype(dt).name) if dt is not None else in_name
+            for dt in chain_dtypes
+        )
+        req_dtypes = tuple(dt if dt != in_name else None for dt in eff)
+        if all(dt is None for dt in req_dtypes):
+            eff = None
+            req_dtypes = None
     else:  # multi-RHS single application
         if len(us) != len(lowered.inputs):
             raise ValueError(
@@ -954,6 +1088,7 @@ def multi_stencil_pallas(
         chain = None
         bcs = ()
         T = 1
+        eff = req_dtypes = None
         offsets_list = [
             np.asarray(o, dtype=np.int64).reshape(-1, d)
             for o, _ in lowered.stages
@@ -985,6 +1120,7 @@ def multi_stencil_pallas(
             time_steps=T,
             stages=[offs for offs, _ in chain] if chain is not None else None,
             bcs=bcs if chain is not None else None,
+            dtypes=req_dtypes if chain is not None else None,
         )
         if tile is None:
             tile = plan.tile
@@ -992,6 +1128,8 @@ def multi_stencil_pallas(
             sweep_axis = plan.sweep_axis
         if shard_axis is None:
             shard_axis = plan.shard_axis
+        if window_kind is None:
+            window_kind = plan.window_kind
         pipelined = pipelined and plan.pipelined
         depth = plan.fused_depth
         resolved_plan = plan
@@ -1005,16 +1143,22 @@ def multi_stencil_pallas(
             num_shards=num_shards or 1,
             tune=tune,
             bcs=bcs if chain is not None else None,
+            dtypes=req_dtypes if chain is not None else None,
+            window_kind=window_kind or "auto",
         )
         tile = choice.tile
         if sweep_axis is None:
             sweep_axis = choice.sweep_axis
         if shard_axis is None:
             shard_axis = choice.shard_axis
+        if window_kind is None:
+            window_kind = choice.window_kind
         depth = choice.fused_depth
         resolved_plan = choice
     if sweep_axis is None:
         sweep_axis = 0
+    if window_kind is None:
+        window_kind = "ring"  # §14 default: strictly smaller resident set
     if depth is None:
         depth = T  # explicit tile: the caller owns the VMEM arithmetic
     tile = tuple(int(t) for t in tile)
@@ -1059,7 +1203,7 @@ def multi_stencil_pallas(
         offs, wts = op
         return (tuple(map(tuple, np.asarray(offs).tolist())), tuple(wts))
 
-    def launch_span(n_run):
+    def launch_span(n_run, run=None, run_dts=None):
         # Only called with recording on: prices this launch's slice of
         # the plan's whole-chain model (n_run of T stages) and bumps the
         # counters the report CLI reconciles against the spans.
@@ -1076,15 +1220,34 @@ def multi_stencil_pallas(
         else:
             mb = mf = 0  # explicit tile: the caller owns the model
             plan_key = "<explicit-tile>"
+        # §14 frontier accounting: the modeled VMEM bytes of this
+        # launch's staged buffers under the resolved window kind, at each
+        # stage's own dtype — reconciled by ``repro.obs.report --check``.
+        rvb = 0
+        if run is not None and len(run) > 1:
+            run_halos = [halo_from_offsets([o], d) for o, _ in run]
+            in_db = us[0].dtype.itemsize
+            sdb = [
+                dtype_itemsize(dt) if dt is not None else in_db
+                for dt in (run_dts or (None,) * len(run))
+            ]
+            rvb = fused_stage_bytes(
+                tile, run_halos[0], in_db, len(run),
+                stage_halos=run_halos, window_kind=window_kind,
+                sweep_axis=sweep_axis, stage_dtype_bytes=sdb,
+            ) * max(num_shards, 1)
         obs.add("launches")
         obs.add("modeled_bytes", mb)
         obs.add("modeled_flops", mf)
+        obs.add("ring_vmem_bytes", rvb)
         return obs.span(
             "kernel_launch",
             plan_key=plan_key, tile=list(tile), sweep_axis=sweep_axis,
             fused_depth=int(depth), steps=n_run, num_shards=num_shards,
             interpret=interpret, modeled_bytes=mb, modeled_flops=mf,
-            program=prog_summary,
+            program=prog_summary, window_kind=window_kind,
+            stage_dtypes=(list(run_dts) if run_dts is not None else None),
+            ring_vmem_bytes=rvb,
         )
 
     if chain is None:  # multi-RHS single application
@@ -1101,17 +1264,29 @@ def multi_stencil_pallas(
     while True:
         run = chain[pos : pos + int(depth)]
         run_bcs = tuple(bcs[pos : pos + len(run)])
+        run_dts = (
+            tuple(eff[pos : pos + len(run)]) if eff is not None else None
+        )
         pos += len(run)
-        with launch_span(len(run)) if obs.enabled() else obs.NULL_SPAN:
-            if any(bc is not None for bc in run_bcs):
-                # §13 boundary-op launch: always the stage-chain form
-                # (even for one stage), with the lowered per-stage bcs as
-                # in-kernel correction taps and the pad-free input embed.
+        span = (
+            launch_span(len(run), run, run_dts)
+            if obs.enabled() else obs.NULL_SPAN
+        )
+        with span:
+            if any(bc is not None for bc in run_bcs) or run_dts is not None:
+                # §13 boundary-op / §14 mixed-dtype launch: always the
+                # stage-chain form (even for one stage), with the lowered
+                # per-stage bcs as in-kernel correction taps and the
+                # per-stage output dtypes on the frontiers/write-back.
                 result = launcher(
                     arrays, (static_spec(run[0]),), tile, sweep_axis,
                     pipelined, interpret,
                     stages_w=tuple(static_spec(op) for op in run),
-                    bcs_w=run_bcs,
+                    bcs_w=run_bcs if any(
+                        bc is not None for bc in run_bcs
+                    ) else None,
+                    dtypes_w=run_dts,
+                    window_kind=window_kind,
                 )
             elif len(run) == 1:
                 result = launcher(
@@ -1123,6 +1298,7 @@ def multi_stencil_pallas(
                     arrays, (static_spec(run[0]),), tile, sweep_axis,
                     pipelined, interpret,
                     stages_w=tuple(static_spec(op) for op in run),
+                    window_kind=window_kind,
                 )
         if pos == len(chain):
             return result

@@ -11,9 +11,12 @@ the evidence trail the paper's model promises (DESIGN.md §12):
 
 ``--check`` additionally asserts the internal bookkeeping reconciles —
 the ``launches`` counter matches the number of launch spans, the summed
-per-span ``modeled_bytes`` match the ``modeled_bytes`` counter, and the
-summed ``measure`` span nanoseconds match ``measured_ns`` — exiting
-non-zero on any mismatch.  This is what the CI obs smoke runs.
+per-span ``modeled_bytes`` match the ``modeled_bytes`` counter, the
+summed per-span ``ring_vmem_bytes`` (§14 staged-frontier VMEM at each
+stage's own dtype; 0 on pre-v6 traces) match the ``ring_vmem_bytes``
+counter, and the summed ``measure`` span nanoseconds match
+``measured_ns`` — exiting non-zero on any mismatch.  This is what the
+CI obs smoke runs.
 """
 
 from __future__ import annotations
@@ -65,6 +68,10 @@ def summarize(doc: dict) -> dict[str, Any]:
             "steps": args.get("steps"),
             "modeled_bytes": modeled,
             "modeled_flops": int(args.get("modeled_flops", 0)),
+            # §14 accounting; absent in pre-v6 traces (trapezoid era).
+            "window_kind": args.get("window_kind"),
+            "stage_dtypes": args.get("stage_dtypes"),
+            "ring_vmem_bytes": int(args.get("ring_vmem_bytes", 0)),
             "dur_us": dur_us,
             "gb_per_s": (modeled / (dur_us * 1e3)) if dur_us > 0 else 0.0,
         })
@@ -126,6 +133,12 @@ def reconcile(summary: dict[str, Any]) -> list[str]:
             f"modeled_flops counter={c.get('modeled_flops', 0)} but launch "
             f"spans sum to {span_flops}"
         )
+    span_ring = sum(l["ring_vmem_bytes"] for l in launches)
+    if span_ring != int(c.get("ring_vmem_bytes", 0)):
+        problems.append(
+            f"ring_vmem_bytes counter={c.get('ring_vmem_bytes', 0)} but "
+            f"launch spans sum to {span_ring}"
+        )
     if summary["measure_ns_total"] != int(c.get("measured_ns", 0)):
         problems.append(
             f"measured_ns counter={c.get('measured_ns', 0)} but measure "
@@ -148,17 +161,27 @@ def render(summary: dict[str, Any]) -> str:
     if launches:
         hdr = (
             f"{'#':>3}  {'plan key':<14} {'T':>3} {'shards':>6} "
-            f"{'tile':<14} {'modeled':>12} {'wall ms':>9} {'GB/s':>8}"
+            f"{'tile':<14} {'win':<5} {'ring vmem':>10} "
+            f"{'modeled':>12} {'wall ms':>9} {'GB/s':>8}"
         )
         lines += [hdr, "-" * len(hdr)]
         for i, l in enumerate(launches):
             tile = "x".join(map(str, l["tile"])) if l["tile"] else "-"
+            wk = (l.get("window_kind") or "-")[:5]
             lines.append(
                 f"{i:>3}  {l['plan_key'][:14]:<14} "
                 f"{l['fused_depth'] or 1:>3} {l['num_shards'] or 1:>6} "
-                f"{tile:<14} {_fmt_bytes(l['modeled_bytes']):>12} "
+                f"{tile:<14} {wk:<5} "
+                f"{_fmt_bytes(l['ring_vmem_bytes']):>10} "
+                f"{_fmt_bytes(l['modeled_bytes']):>12} "
                 f"{l['dur_us'] / 1e3:>9.3f} {l['gb_per_s']:>8.2f}"
             )
+            dts = l.get("stage_dtypes")
+            if dts and any(dt is not None for dt in dts):
+                lines.append(
+                    "     stage dtypes: "
+                    + " -> ".join(dt or "<input>" for dt in dts)
+                )
     for race in summary["races"]:
         lines.append(
             f"tune race: key={race['key'][:14]} "

@@ -32,6 +32,12 @@ The planner prices this decomposition (plan schema v4:
 ``PlanRequest.num_shards``, ``StencilPlan.shard_axis`` /
 ``per_shard_traffic_bytes`` / ``halo_exchange_bytes``); the kernel
 frontends (``stencil_pallas(num_shards=...)``) route launches here.
+
+§14 rides along unchanged: ``window_kind``/``dtypes_w`` pass straight
+through to ``_padded_call``, and the exchanged halo bands are slices of
+the launch's *input* arrays — a mixed-precision chain's later launches
+therefore exchange at the previous stage's output dtype for free (the
+band inherits the array's element width).
 """
 
 from __future__ import annotations
@@ -70,10 +76,12 @@ def column_launcher(num_shards=None, shard_axis=None, mesh=None):
     when the call (or its plan) asks for more than one shard."""
 
     def launch(us, offsets_w, tile, sweep, pipelined, interpret,
-               stages_w=None, bcs_w=None):
+               stages_w=None, bcs_w=None, dtypes_w=None,
+               window_kind="ring"):
         return sharded_stencil_call(
             us, offsets_w, tile, sweep, pipelined, interpret,
-            stages_w=stages_w, bcs_w=bcs_w, num_shards=num_shards,
+            stages_w=stages_w, bcs_w=bcs_w, dtypes_w=dtypes_w,
+            window_kind=window_kind, num_shards=num_shards,
             shard_axis=shard_axis, mesh=mesh,
         )
 
@@ -82,7 +90,8 @@ def column_launcher(num_shards=None, shard_axis=None, mesh=None):
 
 def sharded_stencil_call(
     us, offsets_w, tile, sweep, pipelined, interpret, stages_w=None,
-    bcs_w=None, num_shards=None, shard_axis=None, mesh=None,
+    bcs_w=None, dtypes_w=None, window_kind="ring", num_shards=None,
+    shard_axis=None, mesh=None,
 ):
     """One column-sharded launch; signature and result match
     ``_stencil_call`` exactly (bit-wise).  ``mesh`` must be a 1-axis
@@ -101,7 +110,8 @@ def sharded_stencil_call(
         if num_shards == 1:
             return _stencil_call(
                 us, offsets_w, tile, sweep, pipelined, interpret,
-                stages_w=stages_w, bcs_w=bcs_w,
+                stages_w=stages_w, bcs_w=bcs_w, dtypes_w=dtypes_w,
+                window_kind=window_kind,
             )
         from repro.launch.mesh import make_column_mesh
 
@@ -120,7 +130,8 @@ def sharded_stencil_call(
         if size == 1:
             return _stencil_call(
                 us, offsets_w, tile, sweep, pipelined, interpret,
-                stages_w=stages_w, bcs_w=bcs_w,
+                stages_w=stages_w, bcs_w=bcs_w, dtypes_w=dtypes_w,
+                window_kind=window_kind,
             )
     if shard_axis is None:
         shard_axis = pick_shard_axis(u0.shape, tile, sweep)
@@ -134,8 +145,8 @@ def sharded_stencil_call(
         )
     run = _build_sharded(
         mesh, a, tile, sweep, bool(pipelined), bool(interpret), offsets_w,
-        stages_w, bcs_w, tuple(int(n) for n in u0.shape), str(u0.dtype),
-        len(us),
+        stages_w, bcs_w, dtypes_w, str(window_kind),
+        tuple(int(n) for n in u0.shape), str(u0.dtype), len(us),
     )
     if obs.enabled():
         # The exchange itself runs inside the jitted SPMD program, so the
@@ -171,7 +182,7 @@ def sharded_stencil_call(
 
 @functools.lru_cache(maxsize=128)
 def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
-                   stages_w, bcs_w, shape, dtype, p):
+                   stages_w, bcs_w, dtypes_w, window_kind, shape, dtype, p):
     """Build (and cache) the jitted shard_map'd launch for one static
     configuration — meshes and the offset/stage/boundary specs are
     hashable, so repeated shapes re-enter the compiled function
@@ -188,7 +199,7 @@ def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
     axis_name = mesh.axis_names[0]
     S = int(mesh.shape[axis_name])
     offsets, weights, stages, lo_w, hi_w = _launch_geometry(
-        offsets_w, stages_w, tile, bcs_w=bcs_w
+        offsets_w, stages_w, tile, bcs_w=bcs_w, dtypes_w=dtypes_w
     )
     t_a = tile[a]
     lo_a, hi_a = lo_w[a], hi_w[a]
@@ -233,7 +244,7 @@ def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
         )
         return _padded_call(
             locs, dom, offsets, weights, stages, lo_w, hi_w, tile, sweep,
-            pipelined, interpret, shape,
+            pipelined, interpret, shape, window_kind=window_kind,
         )
 
     spec = P(*[axis_name if i == a else None for i in range(d)])

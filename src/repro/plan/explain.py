@@ -10,9 +10,10 @@ planner's own single-pass choice, and the isoperimetric lower bound.
 figures + halo-exchange bytes).  ``--tuned`` additionally looks the
 request up in the §11 TunedPlanDB for this backend fingerprint and, on a
 hit, prints the stored measured-candidate table (``repro.plan.tune`` is
-the tool that writes it).  ``--smoke`` runs the CI gate: six
+the tool that writes it).  ``--smoke`` runs the CI gate: seven
 shapes (one unfavorable, one ``time_steps=3`` fused, one two-stage
-heterogeneous chain, one 4-way sharded), asserting the pad triggers, the
+heterogeneous chain, one 4-way sharded, one §14 mixed-precision ring
+chain), asserting the pad triggers, the
 planner never predicts more traffic than the legacy heuristic, a fused
 plan never predicts more traffic than its own single-pass choice, the
 streaming-frontier path never models more flops than the recompute
@@ -102,9 +103,17 @@ def format_plan(plan: StencilPlan, validation: dict | None = None) -> str:
         lines.append(
             f"  stage chain: {plan.time_steps} applications "
             f"({distinct} distinct operator(s)), fused depth "
-            f"{plan.fused_depth} ({n_launch} launch(es); §9 streaming "
-            f"trapezoid frontiers)"
+            f"{plan.fused_depth} ({n_launch} launch(es); §14 "
+            f"{plan.window_kind} frontier windows)"
         )
+        dts = [st.dtype for st in req.stages]
+        if any(dt is not None for dt in dts):
+            lines.append(
+                "  stage dtypes: "
+                + " -> ".join(dt or "<input>" for dt in dts)
+                + "  (frontiers sized at each stage's own width; "
+                "accumulation stays f32)"
+            )
     if plan.num_shards > 1:
         lines.append(
             f"  sharding: {plan.num_shards} shards over axis "
@@ -214,14 +223,16 @@ def plan_json_doc(plan: StencilPlan) -> dict:
             "modeled_flops": plan.modeled_flops,
             "traffic_vs_legacy": plan.traffic_vs_legacy,
             "efficiency": plan.efficiency,
+            "window_kind": plan.window_kind,
+            "stage_dtypes": [st.dtype for st in plan.request.stages] or None,
         },
     }
 
 
 def smoke() -> int:
-    """CI gate: plan 6 shapes (one unfavorable, one T=3 fused, one
-    two-stage heterogeneous chain, one 4-way sharded), assert the
-    pipeline's promises — pad triggers and clears the threshold, planned
+    """CI gate: plan 7 shapes (one unfavorable, one T=3 fused, one
+    two-stage heterogeneous chain, one 4-way sharded, one §14
+    mixed-precision ring chain), assert the pipeline's promises — pad triggers and clears the threshold, planned
     traffic never exceeds the legacy heuristic, a fused plan never
     exceeds the planner's own single-pass choice, the streaming path
     never models more flops than the recompute trapezoid, a sharded
@@ -251,6 +262,10 @@ def smoke() -> int:
         # §10 column sharding: the planner tiles the worst shard's slab
         # and must beat the unsharded whole-grid traffic per core.
         ("sharded_4", (256, 256, 256), None, 16 << 20, True, 1),
+        # §14 mixed-precision ring: bf16 frontiers under window_kind
+        # "auto" must resolve to the ring and never lose to a forced
+        # trapezoid of the same request.
+        ("ring_bf16", (256, 256, 256), None, 16 << 20, True, 4),
     ]
     for name, shape, g, budget, aligned, t_steps in cases:
         kw = dict(shape=shape, geometry=g, vmem_budget=budget, aligned=aligned)
@@ -260,6 +275,8 @@ def smoke() -> int:
             kw.update(offsets=offs, time_steps=t_steps)
         if name == "sharded_4":
             kw["num_shards"] = 4
+        if name == "ring_bf16":
+            kw["dtypes"] = ["bfloat16"] * 3 + ["float32"]
         plan = planner.plan(**kw)
         assert plan.traffic_bytes <= plan.legacy_traffic_bytes, (
             name, plan.traffic_bytes, plan.legacy_traffic_bytes)
@@ -285,6 +302,15 @@ def smoke() -> int:
             assert plan.time_steps == 2 and len(plan.request.stages) == 2
             assert len(plan.depth_scores) >= 1
             assert any(d == plan.fused_depth for d, _, _ in plan.depth_scores)
+        if name == "ring_bf16":
+            assert plan.window_kind == "ring", plan.window_kind
+            assert [st.dtype for st in plan.request.stages] == kw["dtypes"]
+            trap = planner.plan(**dict(kw, window_kind="trapezoid"))
+            assert plan.traffic_bytes <= trap.traffic_bytes, (
+                plan.traffic_bytes, trap.traffic_bytes)
+            assert max(d for d, _, _ in plan.depth_scores) >= max(
+                d for d, _, _ in trap.depth_scores
+            ), "ring admitted fewer fusion depths than the trapezoid"
         if name == "sharded_4":
             base = planner.plan(**{k: v for k, v in kw.items()
                                    if k != "num_shards"})
@@ -339,6 +365,12 @@ def main(argv: list[str] | None = None) -> int:
                     help="fuse T stencil applications (§8 temporal blocking)")
     ap.add_argument("--num-shards", type=int, default=1,
                     help="plan the §10 column-sharded launch over N cores")
+    ap.add_argument("--window-kind", default="auto",
+                    choices=("auto", "ring", "trapezoid"),
+                    help="§14 frontier layout (auto races both)")
+    ap.add_argument("--dtypes", default=None,
+                    help="comma-separated per-stage output dtypes for a "
+                    "--time-steps chain, e.g. bfloat16,bfloat16,float32")
     ap.add_argument("--aligned", action="store_true",
                     help="restrict tiles to lane/sublane-aligned extents")
     ap.add_argument("--legacy", action="store_true",
@@ -368,6 +400,8 @@ def main(argv: list[str] | None = None) -> int:
         shape=shape, offsets=offs, dtype_bytes=args.dtype_bytes,
         vmem_budget=args.budget, geometry=geometry, aligned=args.aligned,
         time_steps=args.time_steps, num_shards=args.num_shards,
+        window_kind=args.window_kind,
+        dtypes=args.dtypes.split(",") if args.dtypes else None,
     )
     if args.json:
         import json

@@ -63,13 +63,14 @@ from repro.core.lattice import (
 from repro.core.padding import hyperbola_index, pad_grid
 from repro.core.tiling import (
     LANE,
-    SUBLANE,
     TileChoice,
     chain_flops,
     chain_halo,
+    dtype_itemsize,
     fused_stage_bytes,
     halo_from_offsets,
     select_tile,
+    sublane_unit,
     tile_traffic_bytes,
     tile_vmem_bytes,
 )
@@ -114,6 +115,7 @@ def _fit_to_budget(tile, shape, halo, dtype_bytes, budget, aligned):
     does not fit."""
     tile = list(tile)
     d = len(tile)
+    sub = sublane_unit(dtype_bytes)
     for _ in range(64):
         if tile_vmem_bytes(tile, halo, dtype_bytes, None, False) <= budget:
             return tuple(tile)
@@ -122,7 +124,7 @@ def _fit_to_budget(tile, shape, halo, dtype_bytes, budget, aligned):
             return None
         tile[i] = max(1, tile[i] // 2)
         if aligned:
-            unit = LANE if i == d - 1 else SUBLANE if i == d - 2 else 1
+            unit = LANE if i == d - 1 else sub if i == d - 2 else 1
             tile[i] = _align_extent(tile[i], shape[i], unit)
     return None
 
@@ -139,6 +141,7 @@ class _Survey:
         "request", "d", "T", "db", "halo", "stage_halos", "lattice", "pad",
         "work", "work_full", "num_shards", "shard_axis", "extras", "legacy",
         "legacy_priced", "per_depth", "scored", "tiled", "price_chain",
+        "window_kind", "stage_dbs",
     )
 
     def __init__(self, **kw):
@@ -246,6 +249,7 @@ class Planner:
         d = len(shape)
         budget = request.vmem_budget // max(request.n_operands, 1)
         db = request.dtype_bytes
+        sub = sublane_unit(db)
         cands: list[tuple[int, ...]] = []
 
         def add(tile):
@@ -253,7 +257,7 @@ class Planner:
                 return
             tile = tuple(
                 _align_extent(
-                    t, n, LANE if i == d - 1 else SUBLANE if i == d - 2 else 1
+                    t, n, LANE if i == d - 1 else sub if i == d - 2 else 1
                 )
                 if request.aligned
                 else max(1, min(int(t), int(n)))
@@ -500,6 +504,22 @@ class Planner:
         db = request.dtype_bytes
         n_ops = max(request.n_operands, 1)
         per_op_budget = request.vmem_budget // n_ops
+        # §14: per-stage frontier element widths (stage output dtypes) and
+        # the window-kind candidate set.  "auto" races both frontier
+        # layouts under the same model; only chains with T > 1 have
+        # frontiers at all, so shallower requests price as trapezoids.
+        stage_dbs = (
+            [dtype_itemsize(st.dtype) if st.dtype else db for st in stages]
+            if stages else None
+        )
+        wk_req = request.window_kind
+        if T <= 1:
+            kinds = ("trapezoid",) if wk_req == "auto" else (wk_req,)
+        elif wk_req == "auto":
+            kinds = ("ring", "trapezoid")
+        else:
+            kinds = (wk_req,)
+        chosen = {"wk": kinds[0]}  # rebound after scoring (closure default)
 
         # §10 column sharding: a sharded request tiles the *worst shard's
         # column slab* — the per-core cache-fitting problem — with the
@@ -528,12 +548,15 @@ class Planner:
                 for i, n in enumerate(work_full)
             )
 
-        def tiled(depth: int, extras=None, sweep_axis="auto") -> TileChoice:
+        def tiled(
+            depth: int, extras=None, sweep_axis="auto", window_kind=None
+        ) -> TileChoice:
             """Tile for one launch: depth 1 scores the per-application
             union halo (a window sized for the union admits every stage of
             a heterogeneous chain); deeper launches score the chain's
             leading ``depth``-stage prefix.  ``sweep_axis`` pins one axis
-            (the candidate enumeration); ``"auto"`` is plan()'s argmin."""
+            (the candidate enumeration); ``"auto"`` is plan()'s argmin.
+            ``window_kind=None`` uses the survey's resolved §14 layout."""
             launch = None
             if stage_halos is not None and depth > 1:
                 launch = stage_halos[:depth]
@@ -550,9 +573,13 @@ class Planner:
                 time_steps=1 if launch is not None else depth,
                 stage_halos=launch,
                 exclude_sweep_axis=shard_axis,
+                window_kind=window_kind or chosen["wk"],
+                stage_dtype_bytes=(
+                    stage_dbs[:depth] if launch is not None else None
+                ),
             )
 
-        def price_chain(depth: int, c: TileChoice):
+        def price_chain(depth: int, c: TileChoice, window_kind=None):
             """Modeled (traffic, lower bound, streaming flops, recompute
             flops) of the whole T-step chain as ceil(T/depth) launches of
             c's one tile — launch i fuses the stage run [i·d, (i+1)·d).
@@ -581,6 +608,11 @@ class Planner:
                 if len(launch) > 1:
                     staged = fused_stage_bytes(
                         c.tile, halo, db, len(launch), stage_halos=launch,
+                        window_kind=window_kind or chosen["wk"],
+                        sweep_axis=c.sweep_axis,
+                        stage_dtype_bytes=(
+                            stage_dbs[i : i + depth] if stage_dbs else None
+                        ),
                     )
                     if vmem * n_ops + staged > request.vmem_budget:
                         return None
@@ -601,32 +633,61 @@ class Planner:
         legacy_priced = price_chain(1, legacy)
         if request.strategy == "legacy":
             extras = None
-            per_depth = {1: legacy}
+            by_kind = {kinds[0]: {1: legacy}}
         else:
             extras = self._extra_candidates(work, halo, request, lattice)
-            per_depth = {}
-            for depth in range(1, T + 1):
-                try:
-                    per_depth[depth] = tiled(depth, extras)
-                except ValueError:
-                    # The depth-d trapezoid (window + staged intermediates)
-                    # outgrew the VMEM budget; deeper ones only grow.
-                    break
+            by_kind = {}
+            for wk in kinds:
+                per_depth_k = {}
+                for depth in range(1, T + 1):
+                    try:
+                        per_depth_k[depth] = tiled(
+                            depth, extras, window_kind=wk
+                        )
+                    except ValueError:
+                        # The depth-d window + staged intermediates outgrew
+                        # the VMEM budget; deeper ones only grow.
+                        break
+                by_kind[wk] = per_depth_k
             # Superset of candidates under the same model: can never lose.
-            assert per_depth[1].traffic_bytes <= legacy.traffic_bytes, (
+            first = by_kind[kinds[0]]
+            assert first[1].traffic_bytes <= legacy.traffic_bytes, (
                 f"planner regressed vs legacy heuristic: "
-                f"{per_depth[1].traffic_bytes} > {legacy.traffic_bytes} "
+                f"{first[1].traffic_bytes} > {legacy.traffic_bytes} "
                 f"on {work}"
             )
 
-        scored = {}
-        for depth, c in per_depth.items():
-            priced = price_chain(depth, c)
-            if priced is not None:
-                scored[depth] = priced
-        # Depth 1 is always feasible (every stage's halo is componentwise
-        # <= the union the tile was sized for)...
-        assert 1 in scored, f"depth-1 chain infeasible on {work}"
+        scored_by_kind = {}
+        for wk, per_depth_k in by_kind.items():
+            sc = {}
+            for depth, c in per_depth_k.items():
+                priced = price_chain(depth, c, window_kind=wk)
+                if priced is not None:
+                    sc[depth] = priced
+            # Depth 1 is always feasible (every stage's halo is
+            # componentwise <= the union the tile was sized for)...
+            assert 1 in sc, f"depth-1 chain infeasible on {work}"
+            scored_by_kind[wk] = sc
+        # §14 window-kind race: keep the modeled-cheapest layout (ties go
+        # to the first listed — ring under "auto").  The ring can never
+        # lose this race: its bands are subsets of the trapezoid's cones,
+        # so every trapezoid-feasible depth is ring-feasible at identical
+        # modeled traffic — the assert pins that dominance.
+        window_kind = min(
+            scored_by_kind,
+            key=lambda wk: (
+                min(t[0] for t in scored_by_kind[wk].values()),
+                kinds.index(wk),
+            ),
+        )
+        if wk_req == "auto" and len(scored_by_kind) > 1:
+            assert window_kind == "ring", (
+                f"trapezoid out-scored the ring on {work}: "
+                f"{scored_by_kind}"
+            )
+        per_depth = by_kind[window_kind]
+        scored = scored_by_kind[window_kind]
+        chosen["wk"] = window_kind  # rebind the closures' default
         # ...but a heterogeneous chain prices launches with their own
         # halos, where the union-scored tile is not provably best — take
         # the legacy tile instead whenever it chains cheaper, preserving
@@ -656,6 +717,8 @@ class Planner:
             scored=scored,
             tiled=tiled,
             price_chain=price_chain,
+            window_kind=window_kind,
+            stage_dbs=stage_dbs,
         )
 
     def _freeze(
@@ -706,15 +769,21 @@ class Planner:
             else:
                 launch_halos = [halo]
             p_rhs = max(len(request.offsets), 1)
-            for cone in launch_halos:
+            for li, cone in enumerate(launch_halos):
                 ext = prod(
                     grid_full[i] * choice.tile[i] + cone[i][0] + cone[i][1]
                     for i in range(d)
                     if i != a
                 )
+                # §14: launch li > 0 exchanges the previous launch's output
+                # — a stage-dtype array, not the request's input dtype.
+                in_db = (
+                    sv.stage_dbs[li * fused_depth - 1]
+                    if sv.stage_dbs and li > 0 else db
+                )
                 halo_exchange += (
                     p_rhs * (num_shards - 1)
-                    * (cone[a][0] + cone[a][1]) * ext * db
+                    * (cone[a][0] + cone[a][1]) * ext * in_db
                 )
         return StencilPlan(
             request=request,
@@ -743,6 +812,7 @@ class Planner:
             depth_scores=depth_scores,
             num_shards=int(num_shards),
             shard_axis=shard_axis,
+            window_kind=sv.window_kind,
             per_shard_traffic_bytes=int(traffic_total),
             halo_exchange_bytes=int(halo_exchange),
         )

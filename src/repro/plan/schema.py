@@ -33,14 +33,19 @@ __all__ = [
     "validate_plan_call",
 ]
 
-# v5: the stencil-program IR (DESIGN.md §13) — every request now carries
+# v6: ring windows + mixed precision (DESIGN.md §14) — every request
+# carries ``window_kind`` (``auto``/``ring``/``trapezoid``: how staged
+# frontiers are sized) and every :class:`StageSpec` an optional output
+# ``dtype`` (``None`` = the chain input's); plans record the chosen
+# ``window_kind``.  Both change the VMEM/traffic model, so all v5
+# on-disk plans are invalidated in one stroke — re-planned, never
+# mis-parsed.
+# (v5: the stencil-program IR (DESIGN.md §13) — every request now carries
 # ``program``, the canonical weightless serialized stencil program its
 # stages/offsets lower from (derived, never user-passed, so the
 # ``time_steps=``/``stages=``/explicit-program spellings of one
 # computation share a key), plus ``bcs``, the per-stage boundary
-# conditions a boundary-op program declares.  The version participates in
-# every cache key, so all v4 on-disk plans are invalidated in one stroke
-# — re-planned, never mis-parsed.
+# conditions a boundary-op program declares.)
 # (v4: multi-core column sharding — ``num_shards``/``mesh_axis`` joined
 # the request and the plan gained the shard decomposition (``shard_axis``,
 # worst-shard ``per_shard_traffic_bytes``, ``halo_exchange_bytes``).)
@@ -49,7 +54,11 @@ __all__ = [
 # flop fields plus the per-depth score table.)
 # (v2: temporal blocking — ``time_steps`` joined the request and the plan
 # gained ``fused_depth``/``single_pass_traffic_bytes``.)
-PLANNER_VERSION = 5
+PLANNER_VERSION = 6
+
+# Frontier window layouts a request may ask for (DESIGN.md §14); "auto"
+# lets the planner race both and keep the modeled winner.
+_WINDOW_KINDS = ("auto", "ring", "trapezoid")
 
 # Default VMEM budget mirrors core.tiling (import-free to keep this module
 # pure data): half of a v5e core's VMEM.
@@ -58,6 +67,26 @@ _DEFAULT_VMEM_BUDGET = (128 * 1024 * 1024) // 2
 
 def _int_tuple(xs) -> tuple[int, ...]:
     return tuple(int(x) for x in xs)
+
+
+def _dtype_name(dt) -> str | None:
+    """Canonical dtype name, validated against the engine's dtype table
+    (``core.tiling``) — numpy-free bfloat16 handling included."""
+    if dt is None:
+        return None
+    from repro.core.tiling import dtype_itemsize  # numpy-only
+
+    if not isinstance(dt, str):
+        # jnp.bfloat16 / np.float32 scalar types, np.dtype instances, jax
+        # arrays' .dtype — all collapse through np.dtype (ml_dtypes
+        # registers bfloat16 with numpy).
+        try:
+            dt = np.dtype(dt).name
+        except TypeError:
+            pass
+    name = str(getattr(dt, "name", dt))
+    dtype_itemsize(name)  # raises ValueError on unsupported names
+    return name
 
 
 def _offsets_tuple(offsets, d: int):
@@ -115,21 +144,27 @@ class StageSpec:
     operator; ``weights`` are optional — the planner's decisions (halo,
     window, traffic, flops) depend only on the offsets, so kernel-driven
     requests leave weights ``None`` to keep cache keys weight-independent,
-    while explicit requests may carry them for the record.
+    while explicit requests may carry them for the record.  ``dtype`` is
+    the stage *output*'s canonical dtype name (DESIGN.md §14; ``None`` =
+    the chain input's) — unlike weights it changes the VMEM/traffic
+    model, so it is part of the cache key.
     """
 
     offsets: tuple[tuple[int, ...], ...]
     weights: tuple[float, ...] | None = None
+    dtype: str | None = None
 
     @classmethod
     def make(cls, spec, d: int) -> "StageSpec":
         """Canonicalize one stage spec: a :class:`StageSpec`, a
-        ``{"offsets": ..., "weights": ...}`` dict, an ``(offsets,
-        weights)`` pair, or a bare (s, d) offset array."""
+        ``{"offsets": ..., "weights": ..., "dtype": ...}`` dict, an
+        ``(offsets, weights)`` pair, or a bare (s, d) offset array."""
+        dtype = None
         if isinstance(spec, StageSpec):
-            offsets, weights = spec.offsets, spec.weights
+            offsets, weights, dtype = spec.offsets, spec.weights, spec.dtype
         elif isinstance(spec, dict):
             offsets, weights = spec["offsets"], spec.get("weights")
+            dtype = spec.get("dtype")
         else:
             # An (offsets, weights) pair is distinguished from a bare
             # offset array by its first element being a 2-D offset table.
@@ -150,7 +185,7 @@ class StageSpec:
                 raise ValueError(
                     f"stage has {len(offs)} offsets but {len(weights)} weights"
                 )
-        return cls(offsets=offs, weights=weights)
+        return cls(offsets=offs, weights=weights, dtype=_dtype_name(dtype))
 
     @classmethod
     def from_dict(cls, d: dict) -> "StageSpec":
@@ -161,6 +196,7 @@ class StageSpec:
                 if d.get("weights") is not None
                 else None
             ),
+            dtype=_dtype_name(d.get("dtype")),
         )
 
 
@@ -196,6 +232,13 @@ class PlanRequest:
     computation share a single cache key.  ``bcs`` carries the per-stage
     boundary conditions a boundary-op program declares (``None`` = the
     engine-native zero fill; an all-native chain collapses to ``()``).
+
+    ``window_kind`` (DESIGN.md §14) asks for a frontier window layout:
+    ``"ring"`` keeps each staged intermediate at its steady-state band,
+    ``"trapezoid"`` at the full warm-up cone, ``"auto"`` (the default)
+    lets the planner race both and keep the modeled winner.  Per-stage
+    output dtypes live on the :class:`StageSpec`\\ s (``dtypes=`` in
+    :meth:`make`); ``dtype_bytes`` stays the *input* element width.
     """
 
     shape: tuple[int, ...]
@@ -214,6 +257,7 @@ class PlanRequest:
     mesh_axis: str = "columns"
     bcs: tuple = ()
     program: str = ""
+    window_kind: str = "auto"
 
     @classmethod
     def make(
@@ -233,6 +277,8 @@ class PlanRequest:
         num_shards: int = 1,
         mesh_axis: str = "columns",
         bcs: Sequence | None = None,
+        dtypes: Sequence | None = None,
+        window_kind: str = "auto",
     ) -> "PlanRequest":
         """Build a canonical request.  ``offsets`` may be a single (s, d)
         offset array or a sequence of per-RHS arrays.  ``stages`` instead
@@ -240,10 +286,18 @@ class PlanRequest:
         ``(offsets, weights)`` pair, dict, or bare offset array); it is
         mutually exclusive with ``offsets``+``time_steps``.  ``bcs``
         gives each stage input's boundary condition (``None``/``"zero"``/
-        ``(kind, value)``); ``program`` is always derived, never
-        accepted."""
+        ``(kind, value)``); ``dtypes`` each stage's output dtype (§14;
+        ``None`` entries = the input's, stored on the stage specs);
+        ``window_kind`` the frontier layout (``auto``/``ring``/
+        ``trapezoid``); ``program`` is always derived, never accepted."""
         shape = _int_tuple(shape)
         d = len(shape)
+        window_kind = str(window_kind)
+        if window_kind not in _WINDOW_KINDS:
+            raise ValueError(
+                f"window_kind must be one of {_WINDOW_KINDS}, "
+                f"got {window_kind!r}"
+            )
         if stages is not None:
             if offsets is not None:
                 raise ValueError("pass offsets or stages, not both")
@@ -291,6 +345,21 @@ class PlanRequest:
                 "stage chains (len(stages) > 1) require a single RHS; "
                 f"got {len(offs)} offset groups"
             )
+        if dtypes is not None:
+            if not specs:
+                raise ValueError(
+                    "dtypes= requires a stage chain; multi-RHS requests "
+                    "run at the input dtype"
+                )
+            names = tuple(_dtype_name(dt) for dt in dtypes)
+            if len(names) != len(specs):
+                raise ValueError(
+                    f"{len(names)} dtypes for {len(specs)} stage(s)"
+                )
+            specs = tuple(
+                StageSpec(offsets=st.offsets, weights=st.weights, dtype=nm)
+                for st, nm in zip(specs, names)
+            )
         num_shards = int(num_shards)
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
@@ -337,6 +406,7 @@ class PlanRequest:
             mesh_axis=str(mesh_axis),
             bcs=norm_bcs,
             program=_derive_program(d, offs, specs, norm_bcs),
+            window_kind=window_kind,
         )
 
     def canonical(self) -> dict:
@@ -385,6 +455,7 @@ class PlanRequest:
             # Re-derived, never trusted from the dict: a hand-edited or
             # pre-v5 ``program`` string cannot diverge from the stages.
             program=_derive_program(len(d["shape"]), offs, stages, bcs),
+            window_kind=str(d.get("window_kind", "auto")),
         )
 
 
@@ -530,6 +601,7 @@ class StencilPlan:
     shard_axis: int | None = None            # partitioned cross axis (§10)
     per_shard_traffic_bytes: int = 0         # worst shard's chain traffic
     halo_exchange_bytes: int = 0             # cross-device boundary bytes
+    window_kind: str = "trapezoid"           # chosen frontier layout (§14)
     version: int = PLANNER_VERSION
 
     @property
@@ -597,6 +669,8 @@ class StencilPlan:
                 d.get("per_shard_traffic_bytes", d["traffic_bytes"])
             ),
             halo_exchange_bytes=int(d.get("halo_exchange_bytes", 0)),
+            # Pre-v6 plans never sized a ring; their frontiers were cones.
+            window_kind=str(d.get("window_kind", "trapezoid")),
             version=int(d.get("version", PLANNER_VERSION)),
         )
 
@@ -622,13 +696,15 @@ def validate_plan_call(
     time_steps: int = 1,
     stages: Sequence | None = None,
     bcs: Sequence | None = None,
+    dtypes: Sequence | None = None,
 ) -> None:
     """Raise :class:`PlanMismatchError` unless ``plan`` was compiled for
     exactly this call: same grid shape, same canonicalized offset groups,
     same element width, same requested step count, and — when the call
-    runs a stage chain — the same per-stage operator offsets and boundary
-    conditions (a boundary op changes the computed values, so a plan for
-    the zero-fill program is not a plan for the neumann one).
+    runs a stage chain — the same per-stage operator offsets, boundary
+    conditions, and output dtypes (a boundary op or a bf16 stage changes
+    the computed values, so a plan for the zero-fill f32 program is not a
+    plan for the neumann or mixed-precision one).
 
     Budget/strategy knobs are deliberately *not* checked — a plan compiled
     under a custom VMEM budget is still a valid (if different) answer for
@@ -673,6 +749,17 @@ def validate_plan_call(
     )
     if req.bcs != call_bcs:
         mismatches.append(f"bcs: plan {req.bcs} vs call {call_bcs}")
+    if req.stages:
+        plan_dts = tuple(st.dtype for st in req.stages)
+        call_dts = (
+            tuple(_dtype_name(dt) for dt in dtypes)
+            if dtypes is not None
+            else (None,) * len(req.stages)
+        )
+        if plan_dts != call_dts:
+            mismatches.append(
+                f"stage dtypes: plan {plan_dts} vs call {call_dts}"
+            )
     if mismatches:
         raise PlanMismatchError(
             "StencilPlan does not match this call (plan request key "

@@ -18,6 +18,17 @@ if (
         _flags + " --xla_force_host_platform_device_count=4"
     ).strip()
 
+# The §14 ring↔trapezoid bit-parity gates additionally need a CPU
+# backend with a deterministic mul→add rounding: XLA's CPU codegen
+# contracts mul+add pairs into FMAs *per fusion*, and the two window
+# kinds produce different fusion shapes, so the same stage chain can
+# round differently at 1 ULP.  Capping the ISA below FMA3 makes every
+# launch form compile to plain mul-then-add (TPU runs are unaffected —
+# this is a host-platform flag).  A cap the user set wins, as above.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "jax" not in sys.modules and "--xla_cpu_max_isa" not in _flags:
+    os.environ["XLA_FLAGS"] = (_flags + " --xla_cpu_max_isa=AVX").strip()
+
 import numpy as np
 import pytest
 

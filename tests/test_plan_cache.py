@@ -176,6 +176,37 @@ def test_v4_schema_entry_reinvalidated(tmp_path):
     assert PlanCache(cache_dir=str(tmp_path)).get(key) == plan  # ...healed
 
 
+def test_v5_schema_entry_reinvalidated(tmp_path):
+    """A v5-era on-disk entry (predating §14 ring windows and dtype-aware
+    tiling: no ``window_kind`` on the request or plan, no ``dtype`` on
+    the stage specs, version 5) must be re-planned cleanly, never
+    crashed on or served — the schema-v6 mirror of the v2/v3/v4
+    regressions above.  Serving one would be silently wrong, not just
+    stale: a pre-v6 plan's VMEM arithmetic sized trapezoid cones, so
+    its fused depth can exceed what the same budget admits."""
+    cache = PlanCache(cache_dir=str(tmp_path))
+    planner = Planner(cache=cache)
+    req = _request()
+    plan = planner.plan(req)
+    key = req.cache_key()
+    d = plan.to_dict()
+    d["version"] = 5
+    d["request"].pop("window_kind")
+    d.pop("window_kind")
+    for st in d["request"].get("stages") or []:
+        st.pop("dtype", None)
+    path = os.path.join(str(tmp_path), f"{key}.json")
+    with open(path, "w") as fh:
+        json.dump(d, fh)
+    cold = PlanCache(cache_dir=str(tmp_path))
+    assert cold.get(key) is None             # stale schema: never served
+    assert cold.stats["corrupt"] == 1
+    assert not os.path.exists(path)          # dropped, not left to rot
+    replanned = Planner(cache=cold).plan(req)  # clean re-plan...
+    assert replanned == plan
+    assert PlanCache(cache_dir=str(tmp_path)).get(key) == plan  # ...healed
+
+
 def test_lru_eviction_falls_back_to_disk(tmp_path):
     cache = PlanCache(cache_dir=str(tmp_path), capacity=2)
     planner = Planner(cache=cache)
