@@ -10,28 +10,20 @@ import time
 
 def force_cpu_devices(n: int = 4) -> None:
     """The §10 sharding parity gates need a multi-device CPU mesh, and the
-    host platform's device count is fixed at first jax import — call this
-    before any benchmark module pulls jax in (harmless on real TPUs; it
-    only affects the host platform).  A device count the user already
-    set in XLA_FLAGS wins — XLA honors the *last* duplicate flag, so
-    appending ours would silently override theirs.  tests/conftest.py
-    carries its own copy so test collection never depends on this
-    package being importable."""
-    flags = os.environ.get("XLA_FLAGS", "")
-    if (
-        "jax" not in sys.modules
-        and "--xla_force_host_platform_device_count" not in flags
-    ):
-        os.environ["XLA_FLAGS"] = (
-            flags + f" --xla_force_host_platform_device_count={n}"
-        ).strip()
-    # The §14 ring↔trapezoid bit-parity gates need deterministic mul→add
-    # rounding on the CPU backend: XLA contracts mul+add into FMAs per
-    # fusion, and different window kinds fuse differently, so cap the
-    # ISA below FMA3 (host platform only; TPU runs are unaffected).
-    flags = os.environ.get("XLA_FLAGS", "")
-    if "jax" not in sys.modules and "--xla_cpu_max_isa" not in flags:
-        os.environ["XLA_FLAGS"] = (flags + " --xla_cpu_max_isa=AVX").strip()
+    §14 bit-parity gates need the CPU ISA capped below FMA3; both pins
+    are fixed at first jax import — call this before any benchmark
+    module pulls jax in (harmless on real TPUs; both are host-platform
+    flags).  The guards and rationale live in repro.runtime.isa, the
+    single home of the pins (tests/test_isa_pin.py gates against
+    drifting back to an inline copy); repro.runtime is jax-free."""
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    )
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    from repro.runtime import isa
+
+    isa.pin_xla_flags(n_devices=n)
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

@@ -1,0 +1,280 @@
+"""PR-tracked perf record: §15 quantized compute path + window/dtype race.
+
+Emits the machine-readable ``BENCH_PR10.json`` consumed by scripts/ci.sh:
+
+* **Int8-frontier traffic cut** (the headline): at a fixed VMEM budget
+  where the all-f32 ring caps star(3,2)@128³ fusion at depth 3, the
+  int8-frontier chain legally fuses depth 4 — the §14 dtype-aware
+  pricing applied to the §15 storage dtype — and the deeper plan's
+  modeled HBM traffic is the cut (gates: deeper fusion, cut >= 1.15).
+
+* **Accuracy gate**: a fused chain whose intermediate frontiers are
+  int8-quantized in-kernel stays within the *documented* tolerance band
+  of the f32 oracle: per quantized stage one code (scale·1 — ½ code
+  half-even rounding + ½ code for compile-order .5-boundary flips),
+  amplified by the L1 norms of every downstream stage's weights.
+
+* **Boundary-menu gate**: periodic-wrap and robin chains (the §15 menu
+  completions that kill the last host-side pad cases) match their numpy
+  wrap / affine-ghost oracles.
+
+* **Race gate**: one ``AutoTuner.tune`` over a fused chain races
+  window_kind × storage-dtype variants — both frontier layouts
+  measured, bf16/int8 rows present and advisory-only, analytic f32 at
+  index 0, ``never_slower`` asserted, the record round-tripping through
+  the v2 TuneDB schema.
+
+* The PR9 ring-window record (which embeds PR8 ⊃ … ⊃ PR1) rides along
+  unchanged so the perf trajectory keeps its history.
+"""
+from __future__ import annotations
+
+import json
+
+from .common import force_cpu_devices
+
+force_cpu_devices()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache_fitting import star_stencil
+from repro import ir
+from repro.kernels.ref import dequantize_ref, quantize_ref, stencil_ref
+from repro.kernels.stencil import multi_stencil_pallas
+from repro.plan import PlanCache, Planner
+from repro.plan.tune import AutoTuner
+from repro.plan.tunedb import TuneRecord, TunedPlanDB
+
+from .common import emit_bench, timed
+from .timing import device_fingerprint
+from . import dtype_window
+
+# Headline configuration: star(3,2) fused T=8 chain on 128^3 — the same
+# §14 depth-uncapping regime as BENCH_PR9, with the intermediate stages
+# stored int8.  At this budget the all-f32 ring caps fusion at depth 3;
+# the 1-byte frontiers fit depth 4, and the deeper chain moves ~24% less
+# modeled HBM traffic.  Both thresholds are exact cost-model outputs, so
+# the gate is deterministic, not timing-dependent.
+SHAPE = (128, 128, 128)
+T = 8
+BUDGET = 700_000
+INT8_CHAIN = ["int8"] * 7 + ["float32"]
+
+# Accuracy/race configuration (interpret-mode, CI-sized).
+ACC_SHAPE = (48, 64)
+ACC_SCALE = 0.05
+
+
+def _planner() -> Planner:
+    return Planner(cache=PlanCache(persistent=False))
+
+
+def int8_traffic_cut() -> dict:
+    """Modeled whole-chain HBM traffic, all-f32 vs int8 frontiers."""
+    planner = _planner()
+    offs = star_stencil(3, 2)
+    kw = dict(shape=SHAPE, offsets=offs, time_steps=T, vmem_budget=BUDGET,
+              n_operands=1, pipelined=False, aligned=True,
+              window_kind="ring")
+    f32 = planner.plan(**kw)
+    q8 = planner.plan(dtypes=INT8_CHAIN, **kw)
+    return {
+        "shape": list(SHAPE),
+        "time_steps": T,
+        "vmem_budget": BUDGET,
+        "int8_chain": INT8_CHAIN,
+        "f32": {"traffic_bytes": f32.traffic_bytes,
+                "fused_depth": f32.fused_depth, "tile": list(f32.tile)},
+        "int8": {"traffic_bytes": q8.traffic_bytes,
+                 "fused_depth": q8.fused_depth, "tile": list(q8.tile)},
+        "traffic_cut": f32.traffic_bytes / q8.traffic_bytes,
+        "int8_fuses_deeper": q8.fused_depth > f32.fused_depth,
+    }
+
+
+def int8_chain_accuracy() -> dict:
+    """Fused int8-frontier chain vs the f32 oracle, within the band."""
+    offs = star_stencil(2, 1)
+    w = [0.28, 0.18, 0.18, 0.18, 0.18]
+    steps = 3
+    u = jax.random.normal(jax.random.PRNGKey(7), ACC_SHAPE, jnp.float32)
+    dts = ["int8"] * (steps - 1) + [None]
+    qns = [(ACC_SCALE, 0)] * (steps - 1) + [None]
+    prog = ir.chain_program([(offs, w)] * steps, 2, dtypes=dts, quants=qns)
+    got = multi_stencil_pallas([u], None, None, program=prog,
+                               tile=(16, 32), interpret=True)
+    # Oracle: the same chain with quantize/dequantize spelled host-side.
+    ref = u
+    for j in range(steps):
+        ref = stencil_ref(ref, offs, w)
+        if qns[j] is not None:
+            ref = dequantize_ref(quantize_ref(ref, *qns[j]), *qns[j])
+    exact = u
+    for _ in range(steps):
+        exact = stencil_ref(exact, offs, w)
+    # Documented band: one code per quantized stage (½ rounding + ½
+    # compile-order .5-flip), amplified by downstream L1 weight norms.
+    l1 = float(np.sum(np.abs(w)))
+    band = sum(
+        ACC_SCALE * 1.0 * l1 ** (steps - 1 - j)
+        for j in range(steps - 1)
+    )
+    err_q = float(jnp.max(jnp.abs(got - ref)))
+    err_f32 = float(jnp.max(jnp.abs(got - exact)))
+    code_band = ACC_SCALE * 0.5 * sum(
+        l1 ** (steps - 1 - j) for j in range(steps - 1)
+    )
+    return {
+        "shape": list(ACC_SHAPE),
+        "time_steps": steps,
+        "scale": ACC_SCALE,
+        "downstream_l1": l1,
+        "max_err_vs_quant_oracle": err_q,
+        "quant_oracle_band": code_band,
+        "max_err_vs_f32_oracle": err_f32,
+        "f32_band": band + code_band,
+        "within_band": err_q <= code_band and err_f32 <= band + code_band,
+    }
+
+
+def boundary_menu() -> dict:
+    """Periodic and robin fused chains vs their numpy oracles."""
+    offs = star_stencil(2, 1)
+    w = [-0.4, 0.2, 0.15, 0.1, 0.05]
+    u = jax.random.normal(jax.random.PRNGKey(3), (32, 48), jnp.float32)
+    rows = []
+    for kind, value in (("periodic", 0.0), ("robin", (0.6, 0.25))):
+        prog = ir.chain_program([(offs, w)] * 2, 2, boundary=kind,
+                                value=value)
+        got = multi_stencil_pallas([u], None, None, program=prog,
+                                   tile=(8, 16), interpret=True)
+        ref = u
+        for _ in range(2):
+            ref = stencil_ref(ref, offs, w, boundary=kind, value=value)
+        err = float(jnp.max(jnp.abs(got - ref)))
+        rows.append({"kind": kind, "max_err": err, "ok": err <= 1e-5})
+    return {"rows": rows, "all_ok": all(r["ok"] for r in rows)}
+
+
+def window_dtype_race() -> dict:
+    """One tune pass racing window_kind × storage-dtype variants."""
+    db = TunedPlanDB(persistent=False)
+    tuner = AutoTuner(db=db, planner=_planner(), k=2, reps=2, warmup=1,
+                      interpret=True)
+    rec = tuner.tune(
+        shape=(64, 256), offsets=star_stencil(2, 1), time_steps=3,
+        vmem_budget=1 << 20, aligned=True,
+    )
+    kinds = {c.window_kind for c in rec.candidates}
+    adv = [c for c in rec.candidates if c.advisory]
+    adv_dts = {
+        dt for c in adv for dt in (c.stage_dtypes or ()) if dt is not None
+    }
+    return {
+        "candidates": len(rec.candidates),
+        "rows": [
+            {
+                "tile": list(c.tile), "window_kind": c.window_kind,
+                "stage_dtypes": (
+                    list(c.stage_dtypes) if c.stage_dtypes else None
+                ),
+                "advisory": c.advisory,
+                "median_s": c.median_s,
+                "modeled_bytes": c.modeled_bytes,
+            }
+            for c in rec.candidates
+        ],
+        "winner": rec.winner,
+        "never_slower": rec.never_slower,
+        "speedup_vs_analytic": rec.speedup_vs_analytic,
+        "both_windows_raced": kinds >= {"ring", "trapezoid"},
+        "advisory_dtypes": sorted(adv_dts),
+        "advisory_only_dtypes": all(c.advisory for c in rec.candidates
+                                    if c.stage_dtypes),
+        "analytic_is_f32": rec.candidates[0].stage_dtypes is None
+        and rec.analytic == 0,
+        "winner_eligible": not rec.candidates[rec.winner].advisory,
+        "round_trip_ok": TuneRecord.from_dict(rec.to_dict()) == rec,
+    }
+
+
+def build_report(quick: bool = True, pr9: dict | None = None) -> dict:
+    """``pr9``: a pre-built PR9 report to embed — callers that already
+    ran it (benchmarks.run's full pass) skip re-derivation."""
+    cut = int8_traffic_cut()
+    acc = int8_chain_accuracy()
+    bnd = boundary_menu()
+    race = window_dtype_race()
+    if pr9 is None:
+        pr9 = dtype_window.build_report(quick)
+    ok9 = pr9["acceptance"]
+    return {
+        "pr": 10,
+        "benchmark": "quant_race",
+        "fingerprint": device_fingerprint(),
+        "int8_traffic_cut": cut,
+        "int8_chain_accuracy": acc,
+        "boundary_menu": bnd,
+        "window_dtype_race": race,
+        "pr9_dtype_window": pr9,
+        "acceptance": {
+            "achieved_int8_traffic_cut": cut["traffic_cut"],
+            "int8_traffic_cut_ok": cut["traffic_cut"] >= 1.15,
+            "int8_fuses_deeper_ok": cut["int8_fuses_deeper"],
+            "achieved_int8_max_err": acc["max_err_vs_f32_oracle"],
+            "int8_within_band_ok": acc["within_band"],
+            "boundary_menu_ok": bnd["all_ok"],
+            "race_both_windows_ok": race["both_windows_raced"],
+            "race_advisory_dtypes_ok": (
+                race["advisory_dtypes"] == ["bfloat16", "int8"]
+                and race["advisory_only_dtypes"]
+            ),
+            "race_analytic_f32_ok": race["analytic_is_f32"],
+            "race_never_slower_ok": race["never_slower"]
+            and race["winner_eligible"],
+            "race_round_trip_ok": race["round_trip_ok"],
+            # PR9 gates (which include PR8 ⊃ … ⊃ PR1) ride along.
+            "pr9_trap_capped_ok": ok9["trapezoid_f32_capped_at_2"],
+            "pr9_ring_depth_ok": ok9["ring_bf16_depth_ge_4"],
+            "pr9_traffic_cut_ok": ok9["traffic_cut_ok"],
+            "pr9_ring_bitwise_ok": ok9["ring_bitwise_ok"],
+            "pr8_spellings_bitwise_ok": ok9["pr8_spellings_bitwise_ok"],
+            "pr8_bc_oracle_ok": ok9["pr8_bc_oracle_ok"],
+            "pr8_mesh_no_host_pad_ok": ok9["pr8_mesh_no_host_pad_ok"],
+            "pr7_reconcile_ok": ok9["pr7_reconcile_ok"],
+            "pr6_never_slower_ok": ok9["pr6_never_slower_ok"],
+            "pr5_sharded_bitwise_ok": ok9["pr5_sharded_bitwise_ok"],
+            "pr4_flop_reduction_ok": ok9["pr4_flop_reduction_ok"],
+            "pr3_fused_traffic_ok": ok9["pr3_fused_traffic_ok"],
+            "pr2_planned_le_legacy_ok": ok9["pr2_planned_le_legacy_ok"],
+            "pr1_traffic_ok": ok9["pr1_traffic_ok"],
+        },
+    }
+
+
+def main(quick: bool = True, json_path: str | None = None,
+         pr9: dict | None = None) -> dict:
+    report, us = timed(build_report, quick, pr9)
+    ok = report["acceptance"]
+    emit_bench(
+        "quant_race",
+        {
+            "int8_traffic_cut": ok["achieved_int8_traffic_cut"],
+            "int8_traffic_cut_ok": ok["int8_traffic_cut_ok"],
+            "int8_within_band_ok": ok["int8_within_band_ok"],
+            "boundary_menu_ok": ok["boundary_menu_ok"],
+            "race_both_windows_ok": ok["race_both_windows_ok"],
+            "race_never_slower_ok": ok["race_never_slower_ok"],
+        },
+        report,
+        json_path=json_path,
+        us=us,
+    )
+    return report
+
+
+if __name__ == "__main__":
+    rep = main()
+    print(json.dumps(rep["acceptance"], indent=2))

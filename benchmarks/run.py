@@ -2,10 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV per benchmark (spec format).
 ``--full`` runs paper-scale sweeps; default is the quick CI-sized pass.
-``--json [PATH]`` runs only the PR-tracked dtype-window record (which
-embeds the PR8 IR record, which embeds PR7's, PR6's, …, PR1's) and
-writes it to PATH (default: ``BENCH_PR9.json`` at the repo root) — the
-perf trajectory artifact scripts/ci.sh checks on every PR.
+``--json [PATH]`` runs only the PR-tracked quant-race record (which
+embeds the PR9 ring-window record, which embeds PR8's, PR7's, …, PR1's)
+and writes it to PATH (default: ``BENCH_PR10.json`` at the repo root) —
+the perf trajectory artifact scripts/ci.sh checks on every PR.
 """
 from __future__ import annotations
 
@@ -20,7 +20,7 @@ def main() -> None:
     quick = "--full" not in argv
     force_cpu_devices()
     if "--json" in argv:
-        from . import dtype_window
+        from . import quant_race
         from .common import gates_ok
 
         i = argv.index("--json")
@@ -29,18 +29,23 @@ def main() -> None:
         else:
             path = os.path.join(
                 os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                "BENCH_PR9.json",
+                "BENCH_PR10.json",
             )
-        report = dtype_window.main(quick, json_path=path)
+        report = quant_race.main(quick, json_path=path)
         ok = report["acceptance"]
         print(
-            f"wrote {path}: dtype_window "
-            f"uncap[trap_capped_2={ok['trapezoid_f32_capped_at_2']} "
-            f"ring_bf16_ge_4={ok['ring_bf16_depth_ge_4']} "
-            f"cut {ok['achieved_traffic_cut']:.2f}x "
-            f"ok={ok['traffic_cut_ok']}] "
-            f"ring[bitwise={ok['ring_bitwise_ok']} "
-            f"never_shallower={ok['ring_never_shallower_ok']}] "
+            f"wrote {path}: quant_race "
+            f"int8[cut {ok['achieved_int8_traffic_cut']:.2f}x "
+            f"ok={ok['int8_traffic_cut_ok']} "
+            f"deeper={ok['int8_fuses_deeper_ok']} "
+            f"band={ok['int8_within_band_ok']}] "
+            f"bc[menu={ok['boundary_menu_ok']}] "
+            f"race[windows={ok['race_both_windows_ok']} "
+            f"advisory={ok['race_advisory_dtypes_ok']} "
+            f"never_slower={ok['race_never_slower_ok']}] "
+            f"pr9[capped={ok['pr9_trap_capped_ok']} "
+            f"cut_ok={ok['pr9_traffic_cut_ok']} "
+            f"bitwise={ok['pr9_ring_bitwise_ok']}] "
             f"pr8[bitwise={ok['pr8_spellings_bitwise_ok']} "
             f"bc={ok['pr8_bc_oracle_ok']} "
             f"mesh_no_pad={ok['pr8_mesh_no_host_pad_ok']}] "
@@ -58,8 +63,8 @@ def main() -> None:
     from . import (
         autotune, bounds_table, dtype_window, fig4_miss_reduction,
         fig5_unfavorable, ir_parity, obs_overhead, padding_effect,
-        planner_traffic, roofline_report, shard_columns, stage_chain,
-        sweep_traffic, temporal_fusion, tpu_tiling,
+        planner_traffic, quant_race, roofline_report, shard_columns,
+        stage_chain, sweep_traffic, temporal_fusion, tpu_tiling,
     )
     fig4_miss_reduction.main(quick)
     fig5_unfavorable.main(quick)
@@ -76,7 +81,8 @@ def main() -> None:
     pr6 = autotune.main(quick, pr5=pr5)
     pr7 = obs_overhead.main(quick, pr6=pr6)
     pr8 = ir_parity.main(quick, pr7=pr7)
-    dtype_window.main(quick, pr8=pr8)
+    pr9 = dtype_window.main(quick, pr8=pr8)
+    quant_race.main(quick, pr9=pr9)
     roofline_report.main(quick)
 
 

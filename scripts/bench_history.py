@@ -39,6 +39,8 @@ _HEADLINES = {
         "{:.3f} ms"),
     8: ("achieved_bc_max_err", "boundary-tap max |err|", "{:.1e}"),
     9: ("achieved_traffic_cut", "ring-bf16 traffic cut", "{:.2f}x"),
+    10: ("achieved_int8_traffic_cut", "int8-frontier traffic cut",
+         "{:.2f}x"),
 }
 
 

@@ -2,7 +2,7 @@
 # Tier-1 CI: the full test suite, the planner and autotuner smokes, the
 # docs-rot check, and the PR-tracked perf record.
 #
-#   scripts/ci.sh            # tests + smokes + docs check + BENCH_PR9.json
+#   scripts/ci.sh            # tests + smokes + docs check + BENCH_PR10.json
 #
 # The planner smoke plans 7 shapes (one Fig. 5 unfavorable grid, one
 # time_steps=3 fused plan, one two-stage heterogeneous chain, one 4-way
@@ -11,36 +11,38 @@
 # streaming<=recompute-flops + per-shard-slab + ring-never-worse gates
 # hold.  The autotune smoke (§11) races the planner's top-k candidates on
 # the live backend and asserts never_slower, the record round-trip, and
-# the sub-ms warm TunedPlanDB hit.  check_docs.py fails on documentation
+# the sub-ms warm TunedPlanDB hit — plus one §15 chain race whose
+# candidate list must span window kinds (ring + trapezoid) AND advisory
+# bf16/int8 dtype variants, with the winner never an advisory row and
+# the v2 record round-tripping.  check_docs.py fails on documentation
 # referencing renamed or removed modules or dangling DESIGN.md § anchors.
-# The JSON pass re-derives the §14 depth-uncapping record checked in at
-# BENCH_PR9.json (f32 trapezoid caps at T=2 where the bf16 ring plans
-# T>=4 with a >=1.5x modeled traffic cut, ring↔trapezoid bit-parity,
-# PR8..PR1 gates embedded); a drift there is a regression, not flake.
+# The JSON pass re-derives the §15 quantized depth-uncapping record
+# checked in at BENCH_PR10.json (f32 caps at depth 3 under the 700k
+# budget where the int8-frontier chain fuses depth 4 with a >=1.15x
+# modeled traffic cut, int8 chain inside the documented ±1-code band,
+# PR9..PR1 gates embedded); a drift there is a regression, not flake.
 # The IR smoke (§13) lowers a two-stage heterogeneous chain spelled as a
 # program and asserts bit-wise parity with the legacy stages= launch.
 # The obs smoke (§12) runs one tuned 4-way-sharded fused T=3 chain under
 # REPRO_TRACE, asserts the trace parses as valid trace_event JSON, and
 # gates on repro.obs.report --check reconciling counters against spans
-# (including the §14 ring_vmem_bytes counter); bench_history.py then
-# verifies the PR9⊃…⊃PR1 embedded gate chain.
+# (including the §14 ring_vmem_bytes counter).  The §15 fuzzer step
+# replays the committed differential corpus (random programs vs the
+# numpy oracle, tolerance-banded per DESIGN.md §15); when hypothesis is
+# installed it widens into fresh generative search.  bench_history.py
+# then verifies the PR10⊃…⊃PR1 embedded gate chain.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 # The non-pytest smokes below need the same XLA pins the test suite and
-# benchmark harness set for themselves (tests/conftest.py,
-# benchmarks/common.py): a 4-device host platform for the §10 mesh
-# launches, and the ISA capped below FMA3 so the §14 ring↔trapezoid
-# bit-parity holds on CPU (per-fusion FMA contraction differs across
-# window kinds).  A user-set value for either flag wins.
-if [[ "${XLA_FLAGS:-}" != *"--xla_force_host_platform_device_count"* ]]; then
-  export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4"
-fi
-if [[ "${XLA_FLAGS:-}" != *"--xla_cpu_max_isa"* ]]; then
-  export XLA_FLAGS="${XLA_FLAGS:-} --xla_cpu_max_isa=AVX"
-fi
+# benchmark harness apply for themselves: a 4-device host platform for
+# the §10 mesh launches, and the ISA capped below FMA3 so the §14
+# ring↔trapezoid bit-parity holds on CPU.  repro.runtime.isa is the one
+# home of the pins (guards, rationale, user-set values win); its
+# --export mode prints the eval-able assignment for shell consumers.
+eval "$(python -m repro.runtime.isa --export)"
 
 python -m pytest -x -q
 python -m repro.plan.explain --smoke
@@ -52,12 +54,8 @@ python -m benchmarks.run --json
 OBS_TMP="$(mktemp -d)"
 trap 'rm -rf "$OBS_TMP"' EXIT
 REPRO_TRACE="$OBS_TMP/trace.json" python - <<'PY'
-import os
-flags = os.environ.get("XLA_FLAGS", "")
-if "--xla_force_host_platform_device_count" not in flags:
-    os.environ["XLA_FLAGS"] = (
-        flags + " --xla_force_host_platform_device_count=4"
-    ).strip()
+from repro.runtime import isa
+isa.pin_xla_flags()
 import numpy as np
 import jax.numpy as jnp
 from repro.core.cache_fitting import star_stencil
@@ -114,5 +112,12 @@ print(f"ir smoke: {ir.summarize_program(prog)} bit-wise == stages= "
       f"(input halo {halos['u0']})")
 PY
 python -m repro.obs.report "$OBS_TMP/ir_trace.json" --check
+
+# --- §15 differential fuzzer, quick profile ----------------------------
+# The committed corpus (tests/corpus/) replays deterministically in
+# tier-1 already; this names the step so a corpus regression reads as a
+# fuzzer failure, not a generic pytest one.  With hypothesis installed
+# the same file widens into generative search.
+python -m pytest -q tests/test_program_fuzz.py
 
 python scripts/bench_history.py

@@ -14,8 +14,10 @@ from .ops import (
     Boundary,
     Bounds,
     Combine,
+    Dequantize,
     Load,
     Program,
+    Quantize,
     Store,
     chain_program,
     normalize_bc,
@@ -32,11 +34,13 @@ __all__ = [
     "Boundary",
     "Bounds",
     "Combine",
+    "Dequantize",
     "IRLowerError",
     "IRVerifyError",
     "Load",
     "Lowered",
     "Program",
+    "Quantize",
     "Store",
     "chain_program",
     "infer_bounds",

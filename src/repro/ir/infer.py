@@ -2,8 +2,9 @@
 
 Propagates accessed-offset footprints *backward* from the ``store``:
 the stored value covers exactly the domain box ``[0, N)``; an ``apply``
-grows its operand's box by the stencil reach; ``combine`` and
-``boundary`` pass their result box through; a value read by several
+grows its operand's box by the stencil reach; ``combine``, ``boundary``,
+``quantize``, and ``dequantize`` pass their result box through (the
+quantization ops change storage, not geometry); a value read by several
 consumers gets the union box.  The derived per-value halos reproduce —
 and are pinned by test against — the hand-maintained ``chain_halo`` /
 ``stage_suffix_halos`` arithmetic in :mod:`repro.core.tiling`.
@@ -15,7 +16,17 @@ from __future__ import annotations
 
 from typing import Sequence
 
-from .ops import Apply, Boundary, Bounds, Combine, Load, Program, Store
+from .ops import (
+    Apply,
+    Boundary,
+    Bounds,
+    Combine,
+    Dequantize,
+    Load,
+    Program,
+    Quantize,
+    Store,
+)
 
 __all__ = ["infer_bounds", "infer_halos", "stage_halos", "suffix_halos"]
 
@@ -45,7 +56,7 @@ def infer_bounds(program: Program, shape: Sequence[int]) -> dict[str, Bounds]:
             if op.result in bounds:
                 for name in op.operands:
                     demand(name, bounds[op.result])
-        elif isinstance(op, Boundary):
+        elif isinstance(op, (Boundary, Quantize, Dequantize)):
             if op.result in bounds:
                 demand(op.operand, bounds[op.result])
         # Load defines an external input; nothing upstream of it.
@@ -74,7 +85,7 @@ def infer_halos(program: Program) -> dict[str, tuple[tuple[int, int], ...]]:
             if op.result in halos:
                 for name in op.operands:
                     demand(name, halos[op.result])
-        elif isinstance(op, Boundary):
+        elif isinstance(op, (Boundary, Quantize, Dequantize)):
             if op.result in halos:
                 demand(op.operand, halos[op.result])
     return {

@@ -28,8 +28,10 @@ from .ops import (
     Apply,
     Boundary,
     Combine,
+    Dequantize,
     Load,
     Program,
+    Quantize,
     Store,
     normalize_bc,
 )
@@ -50,9 +52,11 @@ class Lowered:
     or ``"multi_rhs"`` (``stages[p]`` applied to ``inputs[p]`` and
     summed).  ``stages`` holds ``(offsets, weights)`` pairs; ``bcs``
     holds each stage input's normalized boundary (``None`` = engine-
-    native zero fill) and ``dtypes`` each stage *output*'s storage dtype
-    name (``None`` = the chain input's; DESIGN.md §14) — both always the
-    same length as ``stages``.
+    native zero fill), ``dtypes`` each stage *output*'s storage dtype
+    name (``None`` = the chain input's; DESIGN.md §14), and ``quants``
+    each stage output's affine int8 ``(scale, zero_point)`` (``None`` =
+    unquantized; DESIGN.md §15) — all always the same length as
+    ``stages``.
     """
 
     kind: str
@@ -60,6 +64,7 @@ class Lowered:
     stages: tuple[tuple[tuple[tuple[int, ...], ...], tuple[float, ...]], ...]
     bcs: tuple
     dtypes: tuple = ()
+    quants: tuple = ()
 
     @property
     def has_bc(self) -> bool:
@@ -72,7 +77,7 @@ class _Chain:
     is the pending boundary annotation on the chain's current value."""
 
     input: str
-    stages: tuple  # ((offsets, weights, in_bc, dtype), ...)
+    stages: tuple  # ((offsets, weights, in_bc, dtype, quant), ...)
     bc: tuple | None = None
 
 
@@ -95,6 +100,7 @@ def lower(program: Program, shape=None) -> Lowered:
     d = program.d
     env: dict[str, _Chain] = {}
     multi: dict[str, Lowered] = {}
+    deq: set[str] = set()
     result: Lowered | None = None
 
     for op in program.ops:
@@ -125,8 +131,38 @@ def lower(program: Program, shape=None) -> Lowered:
             env[op.result] = _Chain(
                 input=src.input,
                 stages=src.stages
-                + ((op.offsets, op.weights, src.bc, op.dtype),),
+                + ((op.offsets, op.weights, src.bc, op.dtype, None),),
             )
+        elif isinstance(op, Quantize):
+            # Collapse apply → quantize into the producing stage: int8
+            # frontier storage with the (scale, zero_point) attached.
+            # verify guarantees the operand is an apply result, so the
+            # chain is non-empty and carries no pending boundary.
+            src = env.get(op.operand)
+            if src is None:
+                raise IRLowerError(
+                    f"quantize {op.result!r} consumes a multi-RHS value"
+                )
+            *head, (offs, wts, in_bc, dt, qn) = src.stages
+            assert qn is None  # verify: operand is an apply, not a quantize
+            if dt is not None and dt != "int8":
+                raise IRLowerError(
+                    f"quantize {op.result!r}: stage declares dtype {dt!r} "
+                    "— a quantized stage stores int8"
+                )
+            env[op.result] = _Chain(
+                input=src.input,
+                stages=tuple(head) + (
+                    (offs, wts, in_bc, "int8",
+                     (float(op.scale), int(op.zero_point))),
+                ),
+            )
+        elif isinstance(op, Dequantize):
+            # Storage-only: the engine dequantizes implicitly when the
+            # next stage's MACs read the int8 frontier, so the chain
+            # state passes through unchanged.
+            env[op.result] = env[op.operand]
+            deq.add(op.result)
         elif isinstance(op, Combine):
             folded = _fold_combine(op, env, d)
             if folded is not None:
@@ -137,6 +173,13 @@ def lower(program: Program, shape=None) -> Lowered:
             if op.operand in multi:
                 result = multi[op.operand]
             else:
+                if op.operand in deq:
+                    raise IRLowerError(
+                        "stored value is a dequantize result — the launch "
+                        "output keeps its storage dtype; store the "
+                        "quantize result and dequantize host-side, or "
+                        "drop the quantization on the final stage"
+                    )
                 src = env[op.operand]
                 if not src.stages:
                     raise IRLowerError(
@@ -152,10 +195,11 @@ def lower(program: Program, shape=None) -> Lowered:
                     kind="chain",
                     inputs=(src.input,),
                     stages=tuple(
-                        (offs, wts) for offs, wts, _, _ in src.stages
+                        (offs, wts) for offs, wts, _, _, _ in src.stages
                     ),
-                    bcs=tuple(bc for _, _, bc, _ in src.stages),
-                    dtypes=tuple(dt for _, _, _, dt in src.stages),
+                    bcs=tuple(bc for _, _, bc, _, _ in src.stages),
+                    dtypes=tuple(dt for _, _, _, dt, _ in src.stages),
+                    quants=tuple(qn for _, _, _, _, qn in src.stages),
                 )
     assert result is not None  # verify guarantees exactly one store
     return result
@@ -176,11 +220,15 @@ def _fold_combine(op: Combine, env: dict[str, _Chain], d: int):
             return None
         if src.stages:
             # Peel the last stage: its apply site is the fold candidate.
-            *head, (offs, wts, in_bc, dt) = src.stages
+            *head, (offs, wts, in_bc, dt, qn) = src.stages
             key = (src.input, tuple(head))
             if src.bc is not None:
                 # A boundary on an apply *result* used in a combine has
                 # no single-stage fold form.
+                return None
+            if qn is not None:
+                # A coefficient-scaled quantized value is not the
+                # quantization of anything the fold could spell.
                 return None
             cand = [(o, float(coeff) * float(w)) for o, w in zip(offs, wts)]
             bcs.add(in_bc)
@@ -207,7 +255,7 @@ def _fold_combine(op: Combine, env: dict[str, _Chain], d: int):
     assert prefix is not None
     return _Chain(
         input=prefix[0],
-        stages=tuple(prefix[1]) + ((offsets, weights, bc, dt),),
+        stages=tuple(prefix[1]) + ((offsets, weights, bc, dt, None),),
     )
 
 
@@ -230,18 +278,18 @@ def _as_multi_rhs(op: Combine, env: dict[str, _Chain]) -> Lowered:
                 "needs exactly one apply per operand (and operands of a "
                 "foldable combine must share one predecessor)"
             )
-        offs, wts, in_bc, dt = src.stages[0]
+        offs, wts, in_bc, dt, qn = src.stages[0]
         if in_bc is not None or src.bc is not None:
             raise IRLowerError(
                 f"combine {op.result!r}: operand {name!r} carries a "
                 "non-zero boundary — the multi-RHS launch supports only "
                 "the engine-native zero fill"
             )
-        if dt is not None:
+        if dt is not None or qn is not None:
             raise IRLowerError(
                 f"combine {op.result!r}: operand {name!r} declares a "
-                "stage dtype — the multi-RHS launch runs at the input "
-                "dtype only"
+                "stage dtype or quantization — the multi-RHS launch runs "
+                "at the input dtype only"
             )
         if src.input in inputs:
             raise IRLowerError(
@@ -256,6 +304,7 @@ def _as_multi_rhs(op: Combine, env: dict[str, _Chain]) -> Lowered:
         inputs=tuple(inputs),
         stages=tuple(stages),
         bcs=(None,) * len(stages),
+        quants=(None,) * len(stages),
     )
 
 

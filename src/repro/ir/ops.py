@@ -37,8 +37,10 @@ __all__ = [
     "Boundary",
     "Bounds",
     "Combine",
+    "Dequantize",
     "Load",
     "Program",
+    "Quantize",
     "Store",
     "chain_program",
     "normalize_bc",
@@ -52,8 +54,12 @@ __all__ = [
 # ``dirichlet`` reads a constant; ``neumann`` edge-replicates (the
 # zero-normal-derivative discretization, numpy's pad mode "edge");
 # ``reflect`` mirrors about the boundary node (numpy's mode "reflect":
-# u[-e] = u[e], u[N-1+e] = u[N-1-e]).
-BC_KINDS = ("zero", "dirichlet", "neumann", "reflect")
+# u[-e] = u[e], u[N-1+e] = u[N-1-e]); ``periodic`` wraps reads around
+# the torus (numpy's mode "wrap": u[-e] = u[N-e]); ``robin`` fills the
+# ghost cells with an affine mix of the edge value,
+# ``u_ghost = α·u_edge + β`` (α=0 degenerates to dirichlet(β), α=1,β=0
+# to neumann — ``normalize_bc`` canonicalizes those spellings).
+BC_KINDS = ("zero", "dirichlet", "neumann", "reflect", "periodic", "robin")
 
 
 def _int_tuple(xs) -> tuple[int, ...]:
@@ -69,13 +75,31 @@ def _offsets_tuple(offsets, d: int | None = None):
     return tuple(_int_tuple(row) for row in arr)
 
 
-def normalize_bc(kind: str | None, value: float = 0.0):
+def normalize_bc(kind: str | None, value=0.0):
     """Canonical boundary annotation: ``None`` for the engine-native zero
     fill (``zero``, or ``dirichlet`` with value 0 — bit-identical by
     construction: every correction term carries a factor of the constant),
-    else ``(kind, float(value))``."""
+    else ``(kind, value)`` with the value floated.
+
+    ``robin`` takes a 2-sequence value ``(alpha, beta)`` (the ghost fill
+    ``α·u_edge + β``) and canonicalizes its degenerate corners: α=0 is
+    dirichlet(β), α=1 with β=0 is neumann.  ``periodic`` carries no
+    value."""
     if kind is None or kind == "zero":
         return None
+    if kind == "robin":
+        if not isinstance(value, (tuple, list)) or len(value) != 2:
+            raise ValueError(
+                f"robin boundary wants value=(alpha, beta), got {value!r}"
+            )
+        alpha, beta = float(value[0]), float(value[1])
+        if alpha == 0.0:
+            return normalize_bc("dirichlet", beta)
+        if alpha == 1.0 and beta == 0.0:
+            return ("neumann", 0.0)
+        return ("robin", (alpha, beta))
+    if kind == "periodic":
+        return ("periodic", 0.0)
     if kind == "dirichlet" and float(value) == 0.0:
         return None
     return (str(kind), float(value))
@@ -201,12 +225,15 @@ class Combine:
 class Boundary:
     """Declare the boundary condition of ``operand``: subsequent reads of
     ``result`` past the true domain resolve per ``kind`` instead of the
-    engine-native zero fill."""
+    engine-native zero fill.
+
+    ``value`` is the Dirichlet constant, or for ``robin`` the
+    ``(alpha, beta)`` pair of the ghost fill ``α·u_edge + β``."""
 
     result: str
     operand: str
     kind: str
-    value: float = 0.0
+    value: float | tuple[float, float] = 0.0
 
     def to_dict(self) -> dict:
         d: dict = {
@@ -217,7 +244,64 @@ class Boundary:
         }
         if self.kind == "dirichlet":
             d["value"] = float(self.value)
+        elif self.kind == "robin":
+            d["value"] = [float(v) for v in self.value]
         return d
+
+
+@dataclass(frozen=True)
+class Quantize:
+    """Affine int8 quantization of ``operand`` (DESIGN.md §15):
+
+        ``q = clip(round(x / scale) + zero_point, -128, 127)`` (int8)
+
+    with ``round`` the IEEE half-even rounding (``jnp.round``), so the
+    mapping is deterministic across backends.  The zero point is an
+    *integer* in int8 range, so exact zeros (the engine's domain-mask
+    fill) survive the round-trip bit-exactly:
+    ``round(0/s) + zp = zp`` dequantizes back to ``0.0``.
+
+    Lowering collapses ``apply → quantize`` into int8 frontier storage
+    with f32 MACs — like ``Apply.dtype``, the scale/zero-point are
+    execution parameters, not part of the canonical plan-key structure.
+    """
+
+    result: str
+    operand: str
+    scale: float
+    zero_point: int = 0
+
+    def to_dict(self) -> dict:
+        return {
+            "op": "quantize",
+            "result": self.result,
+            "operand": self.operand,
+            "scale": float(self.scale),
+            "zero_point": int(self.zero_point),
+        }
+
+
+@dataclass(frozen=True)
+class Dequantize:
+    """Inverse of :class:`Quantize`: ``x = (q - zero_point) · scale``
+    back to f32.  Its operand must be a ``quantize`` result with matching
+    parameters (the IR's quantization is storage-only — verify rejects
+    anything else), so lowering passes it through: the engine dequantizes
+    implicitly when the next stage's MACs read the int8 frontier."""
+
+    result: str
+    operand: str
+    scale: float
+    zero_point: int = 0
+
+    def to_dict(self) -> dict:
+        return {
+            "op": "dequantize",
+            "result": self.result,
+            "operand": self.operand,
+            "scale": float(self.scale),
+            "zero_point": int(self.zero_point),
+        }
 
 
 @dataclass(frozen=True)
@@ -231,7 +315,8 @@ class Store:
 
 
 _OP_TYPES = {"load": Load, "apply": Apply, "combine": Combine,
-             "boundary": Boundary, "store": Store}
+             "boundary": Boundary, "quantize": Quantize,
+             "dequantize": Dequantize, "store": Store}
 
 
 def _op_from_dict(d: dict):
@@ -259,11 +344,24 @@ def _op_from_dict(d: dict):
             coeffs=tuple(float(c) for c in d["coeffs"]),
         )
     if kind == "boundary":
+        raw = d.get("value", 0.0)
+        value = (
+            tuple(float(v) for v in raw)
+            if isinstance(raw, (tuple, list)) else float(raw)
+        )
         return Boundary(
             result=str(d["result"]),
             operand=str(d["operand"]),
             kind=str(d["kind"]),
-            value=float(d.get("value", 0.0)),
+            value=value,
+        )
+    if kind in ("quantize", "dequantize"):
+        cls = Quantize if kind == "quantize" else Dequantize
+        return cls(
+            result=str(d["result"]),
+            operand=str(d["operand"]),
+            scale=float(d["scale"]),
+            zero_point=int(d.get("zero_point", 0)),
         )
     if kind == "store":
         return Store(operand=str(d["operand"]))
@@ -358,6 +456,12 @@ class Program:
                     operands=tuple(name(o) for o in op.operands),
                     coeffs=op.coeffs,
                 ))
+            elif isinstance(op, (Quantize, Dequantize)):
+                # Scale/zero-point are execution parameters, stripped
+                # like weights and Apply.dtype: the canonical form keys
+                # the structure only (StageSpec.dtype differentiates
+                # quantized requests in the plan cache).
+                rename[op.result] = name(op.operand)  # alias through
             elif isinstance(op, Store):
                 ops.append(Store(operand=name(op.operand)))
             else:  # pragma: no cover - _OP_TYPES is closed
@@ -391,32 +495,45 @@ def _stage_pairs(stages, d: int):
 def chain_program(
     stages: Sequence,
     d: int,
-    boundary: str | Sequence[str | None] | None = None,
+    boundary: str | Sequence | None = None,
     value: float = 0.0,
     input_name: str = "u",
     dtypes: Sequence[str | None] | None = None,
+    quants: Sequence[tuple | None] | None = None,
 ) -> Program:
-    """A linear stage chain: ``load → [boundary →] apply → ... → store``.
+    """A linear stage chain: ``load → [boundary →] apply [→ quantize]
+    → ... → store``.
 
     ``stages`` is an ordered list of ``(offsets, weights)`` pairs (or
     bare offset arrays for a shape-only program).  ``boundary`` declares
     each stage input's boundary condition — one kind for the whole chain
-    or a per-stage sequence (``None``/``"zero"`` entries fall back to the
-    native zero fill); ``value`` is the Dirichlet constant.  ``dtypes``
-    attaches each apply's output storage dtype (``None`` entries = the
-    input's; DESIGN.md §14).
+    or a per-stage sequence whose entries are a kind or a
+    ``(kind, value)`` pair (``None``/``"zero"`` entries fall back to the
+    native zero fill); ``value`` is the shared boundary value (the
+    Dirichlet constant, or robin's ``(alpha, beta)``) for entries that
+    don't carry their own.  ``dtypes`` attaches each apply's output
+    storage dtype (``None`` entries = the input's; DESIGN.md §14);
+    ``quants`` attaches per-stage ``(scale, zero_point)`` int8
+    quantization (a :class:`Quantize` op after the apply; DESIGN.md §15).
     """
     pairs = _stage_pairs(stages, d)
     if not pairs:
         raise ValueError("chain_program needs at least one stage")
     if boundary is None or isinstance(boundary, str):
-        kinds = [boundary] * len(pairs)
+        specs: list = [(boundary, value)] * len(pairs)
     else:
-        kinds = list(boundary)
-        if len(kinds) != len(pairs):
+        entries = list(boundary)
+        if len(entries) != len(pairs):
             raise ValueError(
-                f"{len(kinds)} boundary kinds for {len(pairs)} stages"
+                f"{len(entries)} boundary kinds for {len(pairs)} stages"
             )
+        specs = []
+        for b in entries:
+            if (isinstance(b, (tuple, list)) and len(b) == 2
+                    and isinstance(b[0], str)):
+                specs.append((b[0], b[1]))
+            else:
+                specs.append((b, value))
     if dtypes is None:
         dts: list[str | None] = [None] * len(pairs)
     else:
@@ -425,18 +542,38 @@ def chain_program(
             raise ValueError(
                 f"{len(dts)} dtypes for {len(pairs)} stages"
             )
+    if quants is None:
+        qs: list[tuple | None] = [None] * len(pairs)
+    else:
+        qs = [
+            (float(q[0]), int(q[1])) if q is not None else None
+            for q in quants
+        ]
+        if len(qs) != len(pairs):
+            raise ValueError(
+                f"{len(qs)} quants for {len(pairs)} stages"
+            )
     ops: list = [Load(result="u0", input=input_name)]
     cur = "u0"
-    for j, ((offs, wts), kind) in enumerate(zip(pairs, kinds)):
-        if normalize_bc(kind, value) is not None or kind == "zero":
+    for j, ((offs, wts), (kind, val)) in enumerate(zip(pairs, specs)):
+        if normalize_bc(kind, val) is not None or kind == "zero":
             bname = f"b{j}"
+            bval = (
+                tuple(float(v) for v in val)
+                if isinstance(val, (tuple, list)) else float(val)
+            )
             ops.append(Boundary(result=bname, operand=cur,
-                                kind=str(kind), value=float(value)))
+                                kind=str(kind), value=bval))
             cur = bname
         vname = f"v{j + 1}"
         ops.append(Apply(result=vname, operand=cur, offsets=offs,
                          weights=wts, dtype=dts[j]))
         cur = vname
+        if qs[j] is not None:
+            qname = f"q{j + 1}"
+            ops.append(Quantize(result=qname, operand=cur,
+                                scale=qs[j][0], zero_point=qs[j][1]))
+            cur = qname
     ops.append(Store(operand=cur))
     return Program(d=d, ops=tuple(ops))
 
@@ -510,11 +647,13 @@ def plan_program_key(
     else:
         assert stage_offsets is not None
         kinds: list[str | None] = [None] * len(stage_offsets)
-        values = [0.0] * len(stage_offsets)
+        values: list = [0.0] * len(stage_offsets)
         if bcs:
             for j, bc in enumerate(bcs):
                 if bc is not None:
-                    kinds[j], values[j] = bc[0], float(bc[1])
+                    # The value is already normalized (a float, or
+                    # robin's (alpha, beta) tuple).
+                    kinds[j], values[j] = bc[0], bc[1]
         ops: list = [Load(result="u0", input="u")]
         cur = "u0"
         for j, offs in enumerate(stage_offsets):
@@ -541,9 +680,19 @@ def summarize_program(program: "Program | str", shape=None) -> str:
         if isinstance(op, Load):
             parts.append(f"load({op.input})")
         elif isinstance(op, Boundary):
-            parts.append(f"boundary[{op.kind}"
-                         + (f"={op.value:g}" if op.kind == "dirichlet" else "")
-                         + "]")
+            if op.kind == "dirichlet":
+                detail = f"={op.value:g}"
+            elif op.kind == "robin":
+                detail = f"={op.value[0]:g},{op.value[1]:g}"
+            else:
+                detail = ""
+            parts.append(f"boundary[{op.kind}{detail}]")
+        elif isinstance(op, Quantize):
+            parts.append(
+                f"quantize[s={op.scale:g},zp={op.zero_point}]"
+            )
+        elif isinstance(op, Dequantize):
+            parts.append("dequantize")
         elif isinstance(op, Apply):
             offs = np.asarray(op.offsets, dtype=np.int64)
             reach = "".join(

@@ -21,8 +21,10 @@ from .ops import (
     Apply,
     Boundary,
     Combine,
+    Dequantize,
     Load,
     Program,
+    Quantize,
     Store,
     normalize_bc,
 )
@@ -106,6 +108,50 @@ def verify(program: Program, shape: Sequence[int] | None = None) -> None:
                     f"boundary {op.result!r} annotates another boundary "
                     f"({op.operand!r}); a value has one boundary condition"
                 )
+            try:
+                normalize_bc(op.kind, op.value)
+            except ValueError as e:
+                _fail(f"boundary {op.result!r}: {e}")
+            define(op.result, op)
+        elif isinstance(op, Quantize):
+            use(op.operand, op)
+            if not float(op.scale) > 0.0:
+                _fail(
+                    f"quantize {op.result!r}: scale must be positive, got "
+                    f"{op.scale!r}"
+                )
+            zp = op.zero_point
+            if int(zp) != zp or not -128 <= int(zp) <= 127:
+                _fail(
+                    f"quantize {op.result!r}: zero_point must be an int8 "
+                    f"integer in [-128, 127], got {zp!r} (an integer zero "
+                    "point keeps exact zeros exact through the round-trip)"
+                )
+            if not isinstance(defined[op.operand], Apply):
+                _fail(
+                    f"quantize {op.result!r} must quantize an apply result "
+                    f"(got {op.operand!r}); the IR's quantization is "
+                    "storage-only — it collapses into the producing "
+                    "stage's int8 frontier"
+                )
+            define(op.result, op)
+        elif isinstance(op, Dequantize):
+            use(op.operand, op)
+            src = defined[op.operand]
+            if not isinstance(src, Quantize):
+                _fail(
+                    f"dequantize {op.result!r} must consume a quantize "
+                    f"result (got {op.operand!r})"
+                )
+            elif (float(src.scale) != float(op.scale)
+                  or int(src.zero_point) != int(op.zero_point)):
+                _fail(
+                    f"dequantize {op.result!r}: parameters "
+                    f"(scale={op.scale}, zp={op.zero_point}) do not match "
+                    f"its quantize {op.operand!r} (scale={src.scale}, "
+                    f"zp={src.zero_point}) — requantization is not a "
+                    "storage annotation"
+                )
             define(op.result, op)
         elif isinstance(op, Store):
             use(op.operand, op)
@@ -125,9 +171,34 @@ def verify(program: Program, shape: Sequence[int] | None = None) -> None:
             live.update(op.operands)
         elif isinstance(op, Boundary) and op.result in live:
             live.add(op.operand)
+        elif isinstance(op, (Quantize, Dequantize)) and op.result in live:
+            live.add(op.operand)
     dead = set(defined) - live
     if dead:
         _fail(f"dead values (defined but never used): {sorted(dead)}")
+
+    # Periodic wrap is all-or-nothing across a program: the engine
+    # realizes it by wrap-filling the chain input's ghost halo and
+    # extending the intermediate-stage domain masks (torus translation
+    # invariance makes the margin values exactly periodic) — an argument
+    # that only holds when *every* stage input is periodic.  Mixing wrap
+    # with masked/zero stages would feed non-periodic margins forward.
+    bc_norm = {
+        op.result: normalize_bc(op.kind, op.value)
+        for op in program.ops if isinstance(op, Boundary)
+    }
+    if any(bc and bc[0] == "periodic" for bc in bc_norm.values()):
+        for op in program.ops:
+            if not isinstance(op, Apply):
+                continue
+            bc = bc_norm.get(op.operand)
+            if bc is None or bc[0] != "periodic":
+                _fail(
+                    f"apply {op.result!r}: periodic wrap is all-or-nothing "
+                    "— every stage input in a program with a periodic "
+                    "boundary must be annotated periodic, but "
+                    f"{op.operand!r} is not"
+                )
 
     # Boundary lowering legality on a concrete domain.
     if shape is None:
@@ -164,3 +235,22 @@ def verify(program: Program, shape: Sequence[int] | None = None) -> None:
                     f"halo ({lo[i]}, {hi[i]}) is asymmetric — reflected "
                     "taps would reach outside the engine's slice window"
                 )
+    # Periodic wrap additionally needs every value's demanded reach past
+    # the domain to fit in one wrap (the embed fill copies each ghost
+    # side from the far side once; a reach past N would need a double
+    # wrap).
+    if any(bc and bc[0] == "periodic" for bc in bc_norm.values()):
+        from .infer import infer_halos
+
+        halos = infer_halos(program)
+        for name, bc in bc_norm.items():
+            if not (bc and bc[0] == "periodic") or name not in halos:
+                continue
+            for i, (lo_i, hi_i) in enumerate(halos[name]):
+                n = int(shape[i])
+                if lo_i > n or hi_i > n:
+                    _fail(
+                        f"boundary {name!r} (periodic) on axis {i}: reach "
+                        f"({lo_i}, {hi_i}) exceeds the domain extent {n} — "
+                        "wrap fills each ghost side from the far side once"
+                    )

@@ -13,7 +13,12 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["stencil_ref", "star_weights_2nd_order"]
+__all__ = [
+    "dequantize_ref",
+    "quantize_ref",
+    "stencil_ref",
+    "star_weights_2nd_order",
+]
 
 
 def stencil_ref(
@@ -21,7 +26,7 @@ def stencil_ref(
     offsets: np.ndarray,
     weights: Sequence[float],
     boundary: str = "zero",
-    value: float = 0.0,
+    value=0.0,
 ) -> jnp.ndarray:
     """Apply a weighted stencil under a boundary condition.
 
@@ -37,6 +42,11 @@ def stencil_ref(
       normal-derivative condition of a first-order ghost cell.
     * ``"reflect"`` — mirror about the edge cell (numpy ``"reflect"``:
       ``u[-1] == u[1]``).
+    * ``"periodic"`` — wrap around the torus (numpy ``"wrap"``:
+      ``u[-1] == u[N-1]``).
+    * ``"robin"`` — affine mix of the edge value in the ghost cells,
+      ``u_ghost = α·u_edge + β`` with ``value = (alpha, beta)``
+      (α=0 is dirichlet(β); α=1, β=0 is neumann).
     """
     d = u.ndim
     offsets = np.asarray(offsets)
@@ -50,6 +60,22 @@ def stencil_ref(
         up = jnp.pad(u, pad, mode="edge") if r else u
     elif boundary == "reflect":
         up = jnp.pad(u, pad, mode="reflect") if r else u
+    elif boundary == "periodic":
+        up = jnp.pad(u, pad, mode="wrap") if r else u
+    elif boundary == "robin":
+        alpha, beta = (float(value[0]), float(value[1]))
+        if r:
+            edge = jnp.pad(u, pad, mode="edge")
+            # Interior cells stay exactly u (edge-pad is the identity
+            # there); only the ghost region takes the affine mix.
+            interior = jnp.pad(jnp.ones_like(u), pad)
+            up = jnp.where(
+                interior > 0, edge,
+                jnp.asarray(alpha, u.dtype) * edge
+                + jnp.asarray(beta, u.dtype),
+            )
+        else:
+            up = u
     else:
         raise ValueError(f"unknown boundary {boundary!r}")
     out = jnp.zeros_like(u)
@@ -59,6 +85,23 @@ def stencil_ref(
         )
         out = out + jnp.asarray(w, u.dtype) * up[sl]
     return out
+
+
+def quantize_ref(x, scale: float, zero_point: int = 0) -> jnp.ndarray:
+    """The §15 affine int8 quantization oracle:
+    ``q = clip(round(x / scale) + zp, -128, 127)`` with IEEE half-even
+    rounding (``jnp.round``) — deterministic across backends, and an
+    integer zero point keeps exact zeros exact through the round-trip."""
+    q = jnp.round(x.astype(jnp.float32) / jnp.float32(scale))
+    q = jnp.clip(q + jnp.float32(int(zero_point)), -128.0, 127.0)
+    return q.astype(jnp.int8)
+
+
+def dequantize_ref(q, scale: float, zero_point: int = 0) -> jnp.ndarray:
+    """Inverse of :func:`quantize_ref`: ``(q - zp) · scale`` in f32."""
+    return (
+        q.astype(jnp.float32) - jnp.float32(int(zero_point))
+    ) * jnp.float32(scale)
 
 
 def star_weights_2nd_order(d: int, r: int = 2) -> tuple[np.ndarray, list[float]]:

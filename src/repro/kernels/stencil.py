@@ -130,6 +130,7 @@ class _Stage(NamedTuple):
     ext: tuple
     bc: tuple | None = None
     dtype: str | None = None        # stage OUTPUT dtype (None = input's)
+    quant: tuple | None = None      # output (scale, zero_point), §15 int8
 
 
 def _frontier_depth(stages, j, t_s, sweep, window_kind):
@@ -146,7 +147,7 @@ def _frontier_depth(stages, j, t_s, sweep, window_kind):
 
 def _sweep_kernel(
     offsets, weights, lo_w, hi_w, stages, tile, sweep, nswp, pipelined,
-    window_kind, n_true, *refs
+    window_kind, n_true, in_quant, *refs
 ):
     """Generic d-dim, p-RHS sweep kernel, optionally stage-chain fused.
 
@@ -168,7 +169,9 @@ def _sweep_kernel(
     ``"trapezoid"`` the full warm-up cone (§14) — results are bit-wise
     identical.  ``n_true`` is the unpadded grid shape — intermediate
     stages are masked to it so the fused pass equals iterating the
-    zero-fill reference stage by stage.
+    zero-fill reference stage by stage.  ``in_quant`` is the launch
+    input's affine int8 ``(scale, zero_point)`` when the chain resumes
+    from a quantized inter-launch handoff (§15), else ``None``.
     """
     d = len(tile)
     p = len(offsets)
@@ -296,6 +299,26 @@ def _sweep_kernel(
 
     # -- stage-chain trapezoid (p == 1, enforced by the frontend) ----------
 
+    # Periodic wrap (§15) is realized by the host-side ghost fill plus
+    # *extended* intermediate-stage masks, never by correction taps: the
+    # wrap margin of each iterate is exactly periodic (torus translation
+    # invariance), so it must survive the mask for later stages to read.
+    periodic = any(
+        st.bc is not None and st.bc[0] == "periodic" for st in stages
+    )
+
+    def quantize_store(acc, st, dtype):
+        """Round/clip the f32 accumulator onto the stage's affine int8
+        grid before the storage cast (§15: ``clip(round(x/s) + zp)``,
+        half-even like the oracle); a plain dtype cast otherwise."""
+        if st.quant is not None:
+            s_q, z_q = st.quant
+            acc = jnp.clip(
+                jnp.round(acc / np.float32(s_q)) + np.float32(int(z_q)),
+                -128.0, 127.0,
+            )
+        return acc.astype(dtype)
+
     def bc_terms(st, src, out_ext, starts):
         """Correction taps for stage ``st``'s non-zero boundary condition
         (DESIGN.md §13): every read the zero-extended buffer resolved to 0
@@ -322,14 +345,24 @@ def _sweep_kernel(
                 )
             return pos_cache[i]
 
+        # Robin (u_ghost = α·u_edge + β) decomposes exactly into the two
+        # primitives above: a dirichlet-style constant β on every exited
+        # read (the affine intercept — applied once per ghost cell, even
+        # at corners, matching the oracle's edge-pad-then-mix), plus the
+        # neumann clamped-read menu scaled by α (the slope; its partial
+        # corner combinations still self-annihilate through the zero
+        # buffer, which the fused β term could not).
+        mode = "neumann" if kind == "robin" else kind
+        gain = np.float32(cval[0]) if kind == "robin" else np.float32(1)
         for off, w in zip(st.offsets, st.weights):
             off = tuple(int(o) for o in off)
             mix = [i for i in range(d) if off[i] != 0]
             if not mix:
                 continue  # the center tap never exits the domain
-            if kind == "dirichlet":
-                # Outside the domain every cell reads the constant: one
-                # term per tap, on exactly the cells where the read exited.
+            if kind in ("dirichlet", "robin"):
+                # Constant part: one term per tap, on exactly the cells
+                # where the read exited the domain.
+                c = cval if kind == "dirichlet" else cval[1]
                 inside = None
                 for i in mix:
                     q = axis_pos(i) + off[i]
@@ -338,9 +371,10 @@ def _sweep_kernel(
                 add = add + jnp.where(
                     inside,
                     jnp.float32(0),
-                    np.float32(w) * np.float32(cval),
+                    np.float32(w) * np.float32(c),
                 )
-                continue
+                if kind == "dirichlet":
+                    continue
             # neumann (edge-replicate) / reflect (mirror about the edge
             # node): per-axis menus of (global output plane, corrected
             # offset) for each exit depth e — low side reads u[-e] from
@@ -351,11 +385,11 @@ def _sweep_kernel(
                 o = off[i]
                 if o < 0:
                     for e in range(1, -o + 1):
-                        oc = o + e if kind == "neumann" else o + 2 * e
+                        oc = o + e if mode == "neumann" else o + 2 * e
                         opts.append((-o - e, oc))
                 else:
                     for e in range(1, o + 1):
-                        oc = o - e if kind == "neumann" else o - 2 * e
+                        oc = o - e if mode == "neumann" else o - 2 * e
                         opts.append((n_true[i] - 1 + e - o, oc))
                 menus.append(opts)
             for combo in itertools.product(*menus):
@@ -375,7 +409,7 @@ def _sweep_kernel(
                     for o, l, e in zip(oc, st.lo, out_ext)
                 )
                 add = add + jnp.where(
-                    mask, np.float32(w) * src[sl], jnp.float32(0)
+                    mask, gain * np.float32(w) * src[sl], jnp.float32(0)
                 )
         return add
 
@@ -388,6 +422,12 @@ def _sweep_kernel(
         (pre-``dom_ref``), used only by the boundary correction taps."""
         st = stages[j]
         src = src.astype(jnp.float32)
+        q_src = in_quant if j == 0 else stages[j - 1].quant
+        if q_src is not None:
+            # §15: the source block holds affine int8 codes — dequantize
+            # once into the f32 MAC path ((q − zp)·scale), so the taps
+            # and the boundary corrections all read real values.
+            src = (src - np.float32(int(q_src[1]))) * np.float32(q_src[0])
         acc = jnp.zeros(out_ext, dtype=jnp.float32)
         for off, w in zip(st.offsets, st.weights):
             sl = tuple(
@@ -395,15 +435,21 @@ def _sweep_kernel(
                 for o, l, e in zip(off, st.lo, out_ext)
             )
             acc = acc + np.float32(w) * src[sl]
-        if st.bc is not None:
+        if st.bc is not None and st.bc[0] != "periodic":
+            # Periodic needs no taps: its ghost values are materialized
+            # by the wrap fill and kept alive by the extended masks.
             acc = acc + bc_terms(st, src, out_ext, starts)
         return acc
 
-    def mask_domain(acc, starts, ext):
+    def mask_domain(acc, starts, ext, st):
         """Zero everything outside the true grid (coordinates here are
         true-grid: the domain is [0, n_true_i) per axis; ``dom_ref`` lifts
         the local ``starts`` into that global frame) — the zero-fill
-        boundary every intermediate iterate must carry."""
+        boundary every intermediate iterate must carry.  Under periodic
+        wrap (§15) the kept region widens to the stage's suffix margin
+        ``[-suffix_lo_i, n_true_i + suffix_hi_i)``: those margin values
+        are exact periodic images the later stages read in place of
+        correction taps, while the round-up slack beyond still zeroes."""
         inside = None
         for i in range(d):
             if lo_w[i] + hi_w[i] == 0:
@@ -414,7 +460,11 @@ def _sweep_kernel(
                 dom_ref[i] + starts[i]
                 + jax.lax.broadcasted_iota(jnp.int32, ext, i)
             )
-            ok = (posn >= 0) & (posn < n_true[i])
+            lob, hib = 0, n_true[i]
+            if periodic:
+                lob = -st.suffix_lo[i]
+                hib = n_true[i] + st.suffix_hi[i]
+            ok = (posn >= lob) & (posn < hib)
             inside = ok if inside is None else inside & ok
         if inside is None:
             return acc
@@ -447,12 +497,15 @@ def _sweep_kernel(
         for j in range(T):
             acc = stage_apply(j, cur, stages[j].ext, stage_starts(j, False))
             if j < T - 1:
-                acc = mask_domain(acc, stage_starts(j, False), stages[j].ext)
+                acc = mask_domain(
+                    acc, stage_starts(j, False), stages[j].ext, stages[j]
+                )
                 # Round-trip through the staged scratch in the frontier
                 # dtype so the fused chain matches separate kernel
                 # launches bit-wise (each launch writes its iterate in
-                # the stage dtype).
-                stored = acc.astype(frontiers[j].dtype)
+                # the stage dtype — quantized onto the int8 grid first
+                # when the stage carries a §15 quantization).
+                stored = quantize_store(acc, stages[j], frontiers[j].dtype)
                 depth_j = _frontier_depth(stages, j, t_s, sweep, window_kind)
                 if depth_j == stages[j].ext[sweep]:
                     frontiers[j][...] = stored
@@ -465,7 +518,7 @@ def _sweep_kernel(
                     frontiers[j][...] = stored[tuple(sl)]
                     cur = stored
             else:
-                out_ref[...] = acc.astype(out_ref.dtype)
+                out_ref[...] = quantize_store(acc, stages[j], out_ref.dtype)
 
     def streaming_step():
         """The §9 streaming wavefront: rotate each frontier ring by t_s
@@ -499,12 +552,12 @@ def _sweep_kernel(
                     frontiers[j][win_part(0, keep)] = (
                         frontiers[j][win_part(t_s, keep)]
                     )
-                acc = mask_domain(acc, stage_starts(j, True), out_ext)
+                acc = mask_domain(acc, stage_starts(j, True), out_ext, st)
                 frontiers[j][win_part(max(keep, 0), t_s)] = (
-                    acc.astype(frontiers[j].dtype)
+                    quantize_store(acc, st, frontiers[j].dtype)
                 )
             else:
-                out_ref[...] = acc.astype(out_ref.dtype)
+                out_ref[...] = quantize_store(acc, st, out_ref.dtype)
 
     if not reuse:
         # No persisted overlap (h_s == 0 or a single sweep step): there is
@@ -520,7 +573,8 @@ def _sweep_kernel(
             streaming_step()
 
 
-def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None, dtypes_w=None):
+def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None, dtypes_w=None,
+                     quants_w=None):
     """Static launch geometry shared by the single-device and sharded
     paths: per-RHS offset/weight arrays, the per-stage chain (``None`` =
     single application), and the window cone ``lo_w``/``hi_w`` — the same
@@ -528,7 +582,8 @@ def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None, dtypes_w=None):
     planned geometry cannot diverge.  ``bcs_w`` attaches each stage
     input's lowered boundary condition (``None`` entries = native zero
     fill); ``dtypes_w`` each stage's output dtype name (``None`` entries
-    = the launch input's dtype)."""
+    = the launch input's dtype); ``quants_w`` each stage output's affine
+    int8 ``(scale, zero_point)`` (``None`` entries = unquantized)."""
     d = len(tile)
     if stages_w is not None:
         T = len(stages_w)
@@ -540,6 +595,8 @@ def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None, dtypes_w=None):
         assert len(st_bcs) == T, (st_bcs, T)
         st_dts = tuple(dtypes_w) if dtypes_w is not None else (None,) * T
         assert len(st_dts) == T, (st_dts, T)
+        st_qns = tuple(quants_w) if quants_w is not None else (None,) * T
+        assert len(st_qns) == T, (st_qns, T)
         cone = chain_halo(st_halos)
         lo_w = tuple(lo for lo, _ in cone)
         hi_w = tuple(hi for _, hi in cone)
@@ -560,6 +617,7 @@ def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None, dtypes_w=None):
                 ),
                 bc=st_bcs[j],
                 dtype=st_dts[j],
+                quant=st_qns[j],
             ))
         stages = tuple(stages)
         offsets = [st_offs[0]]
@@ -578,7 +636,7 @@ def _launch_geometry(offsets_w, stages_w, tile, bcs_w=None, dtypes_w=None):
 
 def _padded_call(ins, dom, offsets, weights, stages, lo_w, hi_w, tile,
                  sweep, pipelined, interpret, n_true,
-                 window_kind="ring"):
+                 window_kind="ring", in_quant=None):
     """Run the sweep kernel over already-padded arrays and return the
     *padded* result (``∏ ntiles_i · tile_i`` per dim, no trim).
 
@@ -640,7 +698,7 @@ def _padded_call(ins, dom, offsets, weights, stages, lo_w, hi_w, tile,
         functools.partial(
             _sweep_kernel, offsets, weights, lo_w, hi_w, stages, tile,
             sweep, nswp, pipelined, window_kind,
-            tuple(int(n) for n in n_true),
+            tuple(int(n) for n in n_true), in_quant,
         ),
         grid=grid,
         in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)]
@@ -654,7 +712,7 @@ def _padded_call(ins, dom, offsets, weights, stages, lo_w, hi_w, tile,
     )(dom, *ins)
 
 
-def embed_inputs(us, pads, pad_free=False):
+def embed_inputs(us, pads, pad_free=False, wrap=None, fill=0):
     """Zero-extend each array into its launch buffer: per-dim ``(lo,
     hi)`` extra extent, content at offset ``lo``, zeros elsewhere — the
     one input prep both the single-device and §10 sharded paths share.
@@ -664,29 +722,70 @@ def embed_inputs(us, pads, pad_free=False):
     buffer is built as an allocation plus one ``dynamic_update_slice`` —
     bit-identical values, no host-side pad op on the hot path (boundary
     values come from in-kernel correction taps, not from materialized
-    ghost cells)."""
+    ghost cells).
+
+    ``wrap`` (per-dim ``(lo, hi)`` ghost extents, §15 periodic) fills
+    each ghost band from the far side of the domain instead of leaving
+    it at the fill value; ``fill`` sets the background (the int8 zero
+    point for a quantized inter-launch handoff, so the slack dequantizes
+    to exact zeros)."""
     if not pad_free:
-        return [jnp.pad(u, pads) for u in us]
-    shape = tuple(
-        int(n) + lo + hi for (lo, hi), n in zip(pads, us[0].shape)
-    )
-    starts = tuple(lo for lo, _ in pads)
-    return [
-        jax.lax.dynamic_update_slice(jnp.zeros(shape, u.dtype), u, starts)
-        for u in us
-    ]
+        bufs = (
+            [jnp.pad(u, pads, constant_values=fill) for u in us]
+            if fill else [jnp.pad(u, pads) for u in us]
+        )
+    else:
+        shape = tuple(
+            int(n) + lo + hi for (lo, hi), n in zip(pads, us[0].shape)
+        )
+        starts = tuple(lo for lo, _ in pads)
+        bufs = [
+            jax.lax.dynamic_update_slice(
+                jnp.full(shape, fill, u.dtype) if fill
+                else jnp.zeros(shape, u.dtype),
+                u, starts,
+            )
+            for u in us
+        ]
+    if wrap is None:
+        return bufs
+
+    def wrap_fill(buf, n_shape):
+        # Copy each ghost band from the far side of the domain, axis by
+        # axis: axis k's copies read ghost rows axes < k already filled,
+        # which reproduces ``np.pad(mode="wrap")``'s corner composition
+        # exactly.  Round-up slack past the high ghost stays at fill.
+        d = len(n_shape)
+        for i, (lo, hi) in enumerate(wrap):
+            n = int(n_shape[i])
+            base = pads[i][0]
+            if lo:
+                dst = [slice(None)] * d
+                src = [slice(None)] * d
+                dst[i] = slice(base - lo, base)
+                src[i] = slice(base + n - lo, base + n)
+                buf = buf.at[tuple(dst)].set(buf[tuple(src)])
+            if hi:
+                dst = [slice(None)] * d
+                src = [slice(None)] * d
+                dst[i] = slice(base + n, base + n + hi)
+                src[i] = slice(base, base + hi)
+                buf = buf.at[tuple(dst)].set(buf[tuple(src)])
+        return buf
+
+    return [wrap_fill(buf, u.shape) for buf, u in zip(bufs, us)]
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "offsets_w", "tile", "sweep", "pipelined", "interpret", "stages_w",
-        "bcs_w", "dtypes_w", "window_kind",
+        "bcs_w", "dtypes_w", "window_kind", "quants_w", "in_quant",
     ),
 )
 def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
                   stages_w=None, bcs_w=None, dtypes_w=None,
-                  window_kind="ring"):
+                  window_kind="ring", quants_w=None, in_quant=None):
     """us: tuple of p same-shape arrays.  offsets_w: tuple per array of
     (offsets_tuple, weights_tuple) — hashable static spec.  ``stages_w``
     (tuple per stage of (offsets_tuple, weights_tuple), single RHS only)
@@ -696,12 +795,16 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
     conditions; any non-zero entry switches the input prep to the
     pad-free embed.  ``dtypes_w`` (tuple per stage, ``None``/dtype name)
     sets each stage's output dtype; ``window_kind`` picks the §14 ring
-    (default) or the full trapezoid frontier layout."""
+    (default) or the full trapezoid frontier layout.  ``quants_w``
+    (tuple per stage, ``None``/``(scale, zero_point)``) quantizes each
+    stage's stored output onto the affine int8 grid, and ``in_quant``
+    declares the launch *input*'s quantization when it is a quantized
+    inter-launch handoff (§15)."""
     u0 = us[0]
     d = u0.ndim
     tile = tuple(int(t) for t in tile)
     offsets, weights, stages, lo_w, hi_w = _launch_geometry(
-        offsets_w, stages_w, tile, bcs_w, dtypes_w
+        offsets_w, stages_w, tile, bcs_w, dtypes_w, quants_w
     )
     padded_shape = tuple(_round_up(n, t) for n, t in zip(u0.shape, tile))
     # lo halo on the low side, hi + round-up slack on the high.
@@ -709,14 +812,19 @@ def _stencil_call(us, offsets_w, tile, sweep, pipelined, interpret,
         (l, h + ps - n)
         for l, h, ps, n in zip(lo_w, hi_w, padded_shape, u0.shape)
     ]
+    periodic = bcs_w is not None and any(
+        bc is not None and bc[0] == "periodic" for bc in bcs_w
+    )
     ins = embed_inputs(
         us, pads,
         pad_free=bcs_w is not None and any(bc is not None for bc in bcs_w),
+        wrap=tuple(zip(lo_w, hi_w)) if periodic else None,
+        fill=int(in_quant[1]) if in_quant is not None else 0,
     )
     out = _padded_call(
         ins, jnp.zeros((d,), jnp.int32), offsets, weights, stages, lo_w,
         hi_w, tile, sweep, pipelined, interpret, u0.shape,
-        window_kind=window_kind,
+        window_kind=window_kind, in_quant=in_quant,
     )
     return out[tuple(slice(0, n) for n in u0.shape)]
 
@@ -1067,6 +1175,13 @@ def multi_stencil_pallas(
         in_name = str(jnp.dtype(us[0].dtype).name)
         chain_dtypes = tuple(lowered.dtypes) if lowered.dtypes else (None,) * T
         assert len(chain_dtypes) == T, (chain_dtypes, T)
+        # §15 per-stage quantizations: execution parameters (not part of
+        # plan keys — StageSpec dtypes already differentiate), threaded
+        # straight to the launches.
+        chain_quants = (
+            tuple(lowered.quants) if lowered.quants else (None,) * T
+        )
+        assert len(chain_quants) == T, (chain_quants, T)
         eff = tuple(
             str(jnp.dtype(dt).name) if dt is not None else in_name
             for dt in chain_dtypes
@@ -1089,6 +1204,7 @@ def multi_stencil_pallas(
         bcs = ()
         T = 1
         eff = req_dtypes = None
+        chain_quants = (None,)
         offsets_list = [
             np.asarray(o, dtype=np.int64).reshape(-1, d)
             for o, _ in lowered.stages
@@ -1203,7 +1319,7 @@ def multi_stencil_pallas(
         offs, wts = op
         return (tuple(map(tuple, np.asarray(offs).tolist())), tuple(wts))
 
-    def launch_span(n_run, run=None, run_dts=None):
+    def launch_span(n_run, run=None, run_dts=None, run_qs=None):
         # Only called with recording on: prices this launch's slice of
         # the plan's whole-chain model (n_run of T stages) and bumps the
         # counters the report CLI reconciles against the spans.
@@ -1236,10 +1352,15 @@ def multi_stencil_pallas(
                 stage_halos=run_halos, window_kind=window_kind,
                 sweep_axis=sweep_axis, stage_dtype_bytes=sdb,
             ) * max(num_shards, 1)
+        quantized = run_qs is not None and any(
+            q is not None for q in run_qs
+        )
         obs.add("launches")
         obs.add("modeled_bytes", mb)
         obs.add("modeled_flops", mf)
         obs.add("ring_vmem_bytes", rvb)
+        if quantized:
+            obs.add("quantized_launches")
         return obs.span(
             "kernel_launch",
             plan_key=plan_key, tile=list(tile), sweep_axis=sweep_axis,
@@ -1248,6 +1369,10 @@ def multi_stencil_pallas(
             program=prog_summary, window_kind=window_kind,
             stage_dtypes=(list(run_dts) if run_dts is not None else None),
             ring_vmem_bytes=rvb,
+            stage_quants=(
+                [list(q) if q is not None else None for q in run_qs]
+                if quantized else None
+            ),
         )
 
     if chain is None:  # multi-RHS single application
@@ -1261,23 +1386,29 @@ def multi_stencil_pallas(
             )
     arrays = us
     pos = 0
+    in_q = None
     while True:
         run = chain[pos : pos + int(depth)]
         run_bcs = tuple(bcs[pos : pos + len(run)])
         run_dts = (
             tuple(eff[pos : pos + len(run)]) if eff is not None else None
         )
+        run_qs = tuple(chain_quants[pos : pos + len(run)])
         pos += len(run)
         span = (
-            launch_span(len(run), run, run_dts)
+            launch_span(len(run), run, run_dts, run_qs)
             if obs.enabled() else obs.NULL_SPAN
         )
         with span:
             if any(bc is not None for bc in run_bcs) or run_dts is not None:
-                # §13 boundary-op / §14 mixed-dtype launch: always the
-                # stage-chain form (even for one stage), with the lowered
-                # per-stage bcs as in-kernel correction taps and the
-                # per-stage output dtypes on the frontiers/write-back.
+                # §13 boundary-op / §14 mixed-dtype / §15 quantized
+                # launch: always the stage-chain form (even for one
+                # stage), with the lowered per-stage bcs as in-kernel
+                # correction taps and the per-stage output dtypes on the
+                # frontiers/write-back.  A quantized stage anywhere in
+                # the chain forces eff non-None (its dtype is int8), so
+                # every launch of such a chain takes this branch and the
+                # quantized inter-launch handoff (``in_q``) is threaded.
                 result = launcher(
                     arrays, (static_spec(run[0]),), tile, sweep_axis,
                     pipelined, interpret,
@@ -1287,6 +1418,10 @@ def multi_stencil_pallas(
                     ) else None,
                     dtypes_w=run_dts,
                     window_kind=window_kind,
+                    quants_w=run_qs if any(
+                        q is not None for q in run_qs
+                    ) else None,
+                    in_quant=in_q,
                 )
             elif len(run) == 1:
                 result = launcher(
@@ -1303,3 +1438,4 @@ def multi_stencil_pallas(
         if pos == len(chain):
             return result
         arrays = (result,)
+        in_q = run_qs[-1]

@@ -77,12 +77,12 @@ def column_launcher(num_shards=None, shard_axis=None, mesh=None):
 
     def launch(us, offsets_w, tile, sweep, pipelined, interpret,
                stages_w=None, bcs_w=None, dtypes_w=None,
-               window_kind="ring"):
+               window_kind="ring", quants_w=None, in_quant=None):
         return sharded_stencil_call(
             us, offsets_w, tile, sweep, pipelined, interpret,
             stages_w=stages_w, bcs_w=bcs_w, dtypes_w=dtypes_w,
-            window_kind=window_kind, num_shards=num_shards,
-            shard_axis=shard_axis, mesh=mesh,
+            window_kind=window_kind, quants_w=quants_w, in_quant=in_quant,
+            num_shards=num_shards, shard_axis=shard_axis, mesh=mesh,
         )
 
     return launch
@@ -90,8 +90,8 @@ def column_launcher(num_shards=None, shard_axis=None, mesh=None):
 
 def sharded_stencil_call(
     us, offsets_w, tile, sweep, pipelined, interpret, stages_w=None,
-    bcs_w=None, dtypes_w=None, window_kind="ring", num_shards=None,
-    shard_axis=None, mesh=None,
+    bcs_w=None, dtypes_w=None, window_kind="ring", quants_w=None,
+    in_quant=None, num_shards=None, shard_axis=None, mesh=None,
 ):
     """One column-sharded launch; signature and result match
     ``_stencil_call`` exactly (bit-wise).  ``mesh`` must be a 1-axis
@@ -111,7 +111,8 @@ def sharded_stencil_call(
             return _stencil_call(
                 us, offsets_w, tile, sweep, pipelined, interpret,
                 stages_w=stages_w, bcs_w=bcs_w, dtypes_w=dtypes_w,
-                window_kind=window_kind,
+                window_kind=window_kind, quants_w=quants_w,
+                in_quant=in_quant,
             )
         from repro.launch.mesh import make_column_mesh
 
@@ -131,7 +132,8 @@ def sharded_stencil_call(
             return _stencil_call(
                 us, offsets_w, tile, sweep, pipelined, interpret,
                 stages_w=stages_w, bcs_w=bcs_w, dtypes_w=dtypes_w,
-                window_kind=window_kind,
+                window_kind=window_kind, quants_w=quants_w,
+                in_quant=in_quant,
             )
     if shard_axis is None:
         shard_axis = pick_shard_axis(u0.shape, tile, sweep)
@@ -145,7 +147,7 @@ def sharded_stencil_call(
         )
     run = _build_sharded(
         mesh, a, tile, sweep, bool(pipelined), bool(interpret), offsets_w,
-        stages_w, bcs_w, dtypes_w, str(window_kind),
+        stages_w, bcs_w, dtypes_w, str(window_kind), quants_w, in_quant,
         tuple(int(n) for n in u0.shape), str(u0.dtype), len(us),
     )
     if obs.enabled():
@@ -182,7 +184,8 @@ def sharded_stencil_call(
 
 @functools.lru_cache(maxsize=128)
 def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
-                   stages_w, bcs_w, dtypes_w, window_kind, shape, dtype, p):
+                   stages_w, bcs_w, dtypes_w, window_kind, quants_w,
+                   in_quant, shape, dtype, p):
     """Build (and cache) the jitted shard_map'd launch for one static
     configuration — meshes and the offset/stage/boundary specs are
     hashable, so repeated shapes re-enter the compiled function
@@ -199,7 +202,8 @@ def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
     axis_name = mesh.axis_names[0]
     S = int(mesh.shape[axis_name])
     offsets, weights, stages, lo_w, hi_w = _launch_geometry(
-        offsets_w, stages_w, tile, bcs_w=bcs_w, dtypes_w=dtypes_w
+        offsets_w, stages_w, tile, bcs_w=bcs_w, dtypes_w=dtypes_w,
+        quants_w=quants_w,
     )
     t_a = tile[a]
     lo_a, hi_a = lo_w[a], hi_w[a]
@@ -219,24 +223,73 @@ def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
         else (lo_w[i], hi_w[i] + padded[i] - shape[i])
         for i in range(d)
     ]
-    fwd = [(s, s + 1) for s in range(S - 1)]
-    bwd = [(s + 1, s) for s in range(S - 1)]
+    # Periodic wrap (§15): the ghost fill on non-shard axes happens in
+    # the embed below; on the shard axis the exchange ring closes —
+    # extra ppermute links (S−1 → 0 forward, 0 → S−1 backward) carry the
+    # wrap bands that the mesh edges otherwise zero-fill.
+    periodic = bcs_w is not None and any(
+        bc is not None and bc[0] == "periodic" for bc in bcs_w
+    )
+    n_a = shape[a]
+    # The domain ring closes over the shards that own true rows: shard
+    # ``last`` holds the domain's trailing rows (round-up slack may
+    # leave later shards with none), so the wrap links are
+    # (last → 0) forward and (0 → last) backward — and shard last's
+    # normal forward send retargets from its slack neighbor to shard 0
+    # (a ppermute destination appears at most once).
+    last = -(-n_a // C) - 1
+    n_last = n_a - last * C  # true rows owned by shard ``last``
+    if periodic and n_last < max(lo_a, hi_a, 1):
+        raise ValueError(
+            f"periodic shard axis {a}: the trailing shard owns {n_last} "
+            f"true rows but the wrap bands need max(lo, hi) = "
+            f"{max(lo_a, hi_a)} — the wrap would span more than one "
+            "neighbor; use fewer shards or a smaller tile"
+        )
+    if periodic:
+        fwd = [(s, s + 1) for s in range(S - 1) if s + 1 <= last]
+        fwd.append((last, 0))
+        bwd = [(s + 1, s) for s in range(S - 1) if s <= last - 1]
+        bwd.append((0, last))
+    else:
+        fwd = [(s, s + 1) for s in range(S - 1)]
+        bwd = [(s + 1, s) for s in range(S - 1)]
+    # Non-divisible extents leave round-up slack on shard ``last``: its
+    # wrap-band send starts at the end of its *true* rows, and the wrap
+    # band it receives lands right after them — traced (axis_index-
+    # dependent) offsets, static everywhere the extent divides.
+    ragged = periodic and n_last != C
 
     def local_fn(*blocks):
         idx = jax.lax.axis_index(axis_name)
         locs = []
         for b in blocks:
             parts = []
+            recv_hi = None
             if lo_a:
-                tail = jax.lax.slice_in_dim(b, C - lo_a, C, axis=a)
+                if ragged:
+                    start = jnp.where(
+                        idx == last, n_last - lo_a, C - lo_a
+                    )
+                    tail = jax.lax.dynamic_slice_in_dim(
+                        b, start, lo_a, axis=a
+                    )
+                else:
+                    tail = jax.lax.slice_in_dim(b, C - lo_a, C, axis=a)
                 parts.append(jax.lax.ppermute(tail, axis_name, fwd))
             parts.append(b)
             if hi_a:
                 head = jax.lax.slice_in_dim(b, 0, hi_a, axis=a)
-                parts.append(jax.lax.ppermute(head, axis_name, bwd))
-            locs.append(
-                jnp.concatenate(parts, axis=a) if len(parts) > 1 else b
-            )
+                recv_hi = jax.lax.ppermute(head, axis_name, bwd)
+                parts.append(
+                    jnp.zeros_like(recv_hi) if ragged else recv_hi
+                )
+            loc = jnp.concatenate(parts, axis=a) if len(parts) > 1 else b
+            if ragged and hi_a:
+                pos = [0] * d
+                pos[a] = jnp.where(idx == last, lo_a + n_last, lo_a + C)
+                loc = jax.lax.dynamic_update_slice(loc, recv_hi, pos)
+            locs.append(loc)
         # The shard's column offset, in true-grid coordinates: lifts the
         # kernel's intermediate-stage domain masks into the global frame.
         dom = jnp.zeros((d,), jnp.int32).at[a].set(
@@ -245,6 +298,7 @@ def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
         return _padded_call(
             locs, dom, offsets, weights, stages, lo_w, hi_w, tile, sweep,
             pipelined, interpret, shape, window_kind=window_kind,
+            in_quant=in_quant,
         )
 
     spec = P(*[axis_name if i == a else None for i in range(d)])
@@ -254,9 +308,17 @@ def _build_sharded(mesh, a, tile, sweep, pipelined, interpret, offsets_w,
     )
 
     pad_free = bcs_w is not None and any(bc is not None for bc in bcs_w)
+    wrap = (
+        tuple(
+            (0, 0) if i == a else (lo_w[i], hi_w[i]) for i in range(d)
+        )
+        if periodic else None
+    )
+    fill = int(in_quant[1]) if in_quant is not None else 0
 
     def run(*arrays):
-        ins = embed_inputs(arrays, pads, pad_free=pad_free)
+        ins = embed_inputs(arrays, pads, pad_free=pad_free, wrap=wrap,
+                           fill=fill)
         out = sharded(*ins)
         return out[tuple(slice(0, n) for n in shape)]
 

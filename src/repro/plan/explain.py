@@ -304,7 +304,9 @@ def smoke() -> int:
             assert any(d == plan.fused_depth for d, _, _ in plan.depth_scores)
         if name == "ring_bf16":
             assert plan.window_kind == "ring", plan.window_kind
-            assert [st.dtype for st in plan.request.stages] == kw["dtypes"]
+            # The final "float32" restates the input dtype: normalized.
+            assert [st.dtype for st in plan.request.stages] == \
+                ["bfloat16"] * 3 + [None]
             trap = planner.plan(**dict(kw, window_kind="trapezoid"))
             assert plan.traffic_bytes <= trap.traffic_bytes, (
                 plan.traffic_bytes, trap.traffic_bytes)

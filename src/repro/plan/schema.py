@@ -33,13 +33,23 @@ __all__ = [
     "validate_plan_call",
 ]
 
-# v6: ring windows + mixed precision (DESIGN.md §14) — every request
-# carries ``window_kind`` (``auto``/``ring``/``trapezoid``: how staged
+# v7: the quantized compute path (DESIGN.md §15) — stage dtypes now
+# include int8 (``StageSpec.dtype="int8"``: 1-byte frontiers/handoffs,
+# f32 MACs), and the §15 boundary menu grew periodic and robin kinds,
+# both of which reach request ``bcs`` and change the lowered launch.
+# Quantization *parameters* (scale, zero point) are execution knobs —
+# they scale stored codes, never geometry — so they stay out of the
+# key, exactly like stage weights.  The tuner also races window_kind ×
+# stage-dtype variants now (advisory rows in the v2 TuneDB), so v6
+# measured winners are invalidated wholesale rather than mis-compared.
+# Stage dtypes that restate the chain input's dtype None-normalize at
+# ``PlanRequest.make`` (an f32 chain spelled ["bf16", "f32"] keys the
+# same as ["bf16", None]), matching the launch's derivation.
+# (v6: ring windows + mixed precision (DESIGN.md §14) — every request
+# carried ``window_kind`` (``auto``/``ring``/``trapezoid``: how staged
 # frontiers are sized) and every :class:`StageSpec` an optional output
 # ``dtype`` (``None`` = the chain input's); plans record the chosen
-# ``window_kind``.  Both change the VMEM/traffic model, so all v5
-# on-disk plans are invalidated in one stroke — re-planned, never
-# mis-parsed.
+# ``window_kind``.)
 # (v5: the stencil-program IR (DESIGN.md §13) — every request now carries
 # ``program``, the canonical weightless serialized stencil program its
 # stages/offsets lower from (derived, never user-passed, so the
@@ -54,7 +64,7 @@ __all__ = [
 # flop fields plus the per-depth score table.)
 # (v2: temporal blocking — ``time_steps`` joined the request and the plan
 # gained ``fused_depth``/``single_pass_traffic_bytes``.)
-PLANNER_VERSION = 6
+PLANNER_VERSION = 7
 
 # Frontier window layouts a request may ask for (DESIGN.md §14); "auto"
 # lets the planner race both and keep the modeled winner.
@@ -67,6 +77,12 @@ _DEFAULT_VMEM_BUDGET = (128 * 1024 * 1024) // 2
 
 def _int_tuple(xs) -> tuple[int, ...]:
     return tuple(int(x) for x in xs)
+
+
+# Chain-input dtype name by element width — the inverse of the engine's
+# dtype table for the widths a request's ``dtype_bytes`` can carry.  Used
+# to None-normalize stage dtypes that merely restate the input dtype.
+_ITEMSIZE_NAME = {1: "int8", 2: "bfloat16", 4: "float32", 8: "float64"}
 
 
 def _dtype_name(dt) -> str | None:
@@ -356,6 +372,14 @@ class PlanRequest:
                 raise ValueError(
                     f"{len(names)} dtypes for {len(specs)} stage(s)"
                 )
+            # A stage at the chain's input dtype is the same request as no
+            # dtype — normalize to None so spelling the input dtype out
+            # ("float32" on an f32 chain) keys and validates identically
+            # to omitting it (the launch derives the same None form).
+            in_name = _ITEMSIZE_NAME.get(int(dtype_bytes))
+            names = tuple(
+                None if nm == in_name else nm for nm in names
+            )
             specs = tuple(
                 StageSpec(offsets=st.offsets, weights=st.weights, dtype=nm)
                 for st, nm in zip(specs, names)
@@ -751,8 +775,12 @@ def validate_plan_call(
         mismatches.append(f"bcs: plan {req.bcs} vs call {call_bcs}")
     if req.stages:
         plan_dts = tuple(st.dtype for st in req.stages)
+        in_name = _ITEMSIZE_NAME.get(int(dtype_bytes))
         call_dts = (
-            tuple(_dtype_name(dt) for dt in dtypes)
+            tuple(
+                None if (nm := _dtype_name(dt)) == in_name else nm
+                for dt in dtypes
+            )
             if dtypes is not None
             else (None,) * len(req.stages)
         )

@@ -19,6 +19,15 @@ model alone.  This module closes the loop (DESIGN.md §11):
    ≤ measured analytic time — holds by construction and is asserted at
    tune time.
 
+Beyond the geometry candidates, the race covers the §14/§15 execution
+variants (DESIGN.md §15): the *window flip* (the other ring/trapezoid
+frontier layout, bit-wise neutral, eligible to win outright) and the
+*storage-dtype variants* (intermediate stages stored bf16 or
+int8-quantized).  Dtype variants change the computed values, so their
+rows are **advisory** — recorded in the TuneDB for the planner's §14
+pricing to learn from, never served as the winner of the request they
+did not answer.
+
 A Planner constructed with ``tuned_db=`` (or an :class:`AutoTuner` used
 directly, or ``stencil_pallas(..., tune=True)``) then *prefers* the
 measured winner on a warm DB hit — sub-ms, no re-measurement — and falls
@@ -140,15 +149,24 @@ class AutoTuner:
 
     # -- launching one candidate ------------------------------------------
 
-    def _launch_fn(self, request: PlanRequest, plan: StencilPlan):
+    def _launch_fn(self, request: PlanRequest, plan: StencilPlan,
+                   quants=None):
         """A zero-arg closure running the request's whole computation under
         ``plan`` — the thing :func:`repro.runtime.timing.measure` times.
         Inputs are synthesized here (timing depends on shape/dtype, not
         values); weights default to uniform 1/s so deep chains stay
         bounded.  ``plan=plan`` pins tile/sweep/depth/shard explicitly, so
-        the launch never consults a planner (and never re-tunes)."""
+        the launch never consults a planner (and never re-tunes).
+
+        Stage chains launch as explicit §13 programs so the request's
+        boundary conditions and per-stage storage dtypes survive into the
+        launch (a plan for the bf16/robin chain must race the bf16/robin
+        chain — ``validate_plan_call`` rejects anything else); ``quants``
+        attaches per-stage §15 ``(scale, zero_point)`` int8 quantization
+        for the dtype-variant rows (execution params, not plan keys)."""
         import jax.numpy as jnp
 
+        from repro import ir
         from repro.kernels.stencil import multi_stencil_pallas
 
         dtype = {2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}.get(
@@ -163,7 +181,7 @@ class AutoTuner:
 
         interpret = self.interpret
         if request.stages:
-            stages = [
+            stage_list = [
                 (
                     np.asarray(st.offsets, dtype=np.int64),
                     st.weights if st.weights is not None
@@ -171,9 +189,19 @@ class AutoTuner:
                 )
                 for st in request.stages
             ]
+            dts = tuple(st.dtype for st in request.stages)
+            prog = ir.chain_program(
+                stage_list, len(request.shape),
+                boundary=(
+                    list(request.bcs)
+                    if any(bc is not None for bc in request.bcs) else None
+                ),
+                dtypes=dts if any(dt is not None for dt in dts) else None,
+                quants=quants,
+            )
             us = (mk(),)
             return lambda: multi_stencil_pallas(
-                us, None, None, plan=plan, stages=stages,
+                us, None, None, plan=plan, program=prog,
                 interpret=interpret,
             )
         offsets_list = [
@@ -185,6 +213,89 @@ class AutoTuner:
             us, offsets_list, weights_list, plan=plan,
             time_steps=request.time_steps, interpret=interpret,
         )
+
+    # -- the §15 variant survey --------------------------------------------
+
+    def _remake(self, request: PlanRequest, dtypes=None,
+                window_kind=None) -> PlanRequest:
+        """The same planning problem with the stage dtypes or the frontier
+        window rewritten — the variant rows' launch requests."""
+        return PlanRequest.make(
+            shape=request.shape,
+            stages=request.stages,
+            dtypes=dtypes,
+            bcs=request.bcs or None,
+            dtype_bytes=request.dtype_bytes,
+            vmem_budget=request.vmem_budget,
+            n_operands=request.n_operands,
+            geometry=request.geometry,
+            aligned=request.aligned,
+            pipelined=request.pipelined,
+            strategy=request.strategy,
+            max_pad=request.max_pad,
+            num_shards=request.num_shards,
+            mesh_axis=request.mesh_axis,
+            window_kind=(
+                window_kind if window_kind is not None
+                else request.window_kind
+            ),
+        )
+
+    # Intermediate-stage int8 scale for the advisory race: inputs are unit
+    # normals and weights uniform 1/s, so stage values sit well inside
+    # ±128·0.05.  Values never change the timing; any fixed scale does.
+    _RACE_QUANT = (0.05, 0)
+
+    def _variants(self, request: PlanRequest, plan0: StencilPlan):
+        """Entries beyond the geometry candidates (DESIGN.md §15):
+
+        * the **window flip** — the same request re-planned under the
+          other §14 frontier layout.  Ring and trapezoid launches are
+          bit-wise identical, so the flip races *for the win*
+          (``advisory=False``); the served plan keeps the original
+          request (same cache key), only ``window_kind`` differs.
+        * **storage-dtype variants** — the chain with its intermediate
+          stages stored bf16 / int8-quantized.  These change the computed
+          values, so they race **advisory-only**: their rows record what
+          narrower frontiers would buy, but they can never be served as
+          the winner of the f32 request they did not answer.
+
+        Returns ``(plan, launch_request, quants, advisory)`` tuples.
+        """
+        from dataclasses import replace
+
+        out = []
+        T = len(request.stages)
+        if T >= 2 and request.window_kind == "auto" \
+                and plan0.fused_depth >= 2:
+            other = (
+                "ring" if plan0.window_kind == "trapezoid" else "trapezoid"
+            )
+            try:
+                wk_plan = self.planner._analytic(
+                    self._remake(request, window_kind=other)
+                )
+            except ValueError:
+                wk_plan = None  # no tile fits this layout's frontier cost
+            if wk_plan is not None and wk_plan.window_kind != \
+                    plan0.window_kind:
+                out.append(
+                    (replace(wk_plan, request=request), request, None, False)
+                )
+        if T >= 2 and all(st.dtype is None for st in request.stages):
+            for name in ("bfloat16", "int8"):
+                dts = (name,) * (T - 1) + (None,)
+                qns = (
+                    (self._RACE_QUANT,) * (T - 1) + (None,)
+                    if name == "int8" else None
+                )
+                try:
+                    var_req = self._remake(request, dtypes=dts)
+                    var_plan = self.planner._analytic(var_req)
+                except ValueError:
+                    continue  # e.g. unsupported dtype for this engine
+                out.append((var_plan, var_req, qns, True))
+        return out
 
     # -- the tune pass -----------------------------------------------------
 
@@ -208,13 +319,16 @@ class AutoTuner:
             race_sp = obs.span("tune_race", plan_key=key).__enter__()
         try:
             cands = self.planner.candidates(request, k=self.k)
+            entries = [(plan, request, None, False) for plan in cands]
+            entries += self._variants(request, cands[0])
             timed = []
-            for rank, plan in enumerate(cands):
-                fn = self._launch_fn(request, plan)
+            for rank, (plan, lreq, qns, advisory) in enumerate(entries):
+                fn = self._launch_fn(lreq, plan, quants=qns)
                 if obs.enabled():
                     with obs.span(
                         "tune_candidate", plan_key=key, rank=rank,
                         tile=list(plan.tile), fused_depth=plan.fused_depth,
+                        window_kind=plan.window_kind, advisory=advisory,
                         modeled_bytes=_modeled_bytes(plan),
                     ) as csp:
                         t = measure(fn, reps=self.reps, warmup=self.warmup)
@@ -228,11 +342,12 @@ class AutoTuner:
                 race_sp.__exit__(None, None, None)
             raise
         base_t = max(timed[0][1].median_s, 1e-12)
-        base_m = max(_modeled_bytes(cands[0]), 1)
+        base_m = max(_modeled_bytes(entries[0][0]), 1)
         rows = []
-        for plan, t in timed:
+        for (plan, lreq, _, advisory), (_, t) in zip(entries, timed):
             m = _modeled_bytes(plan)
             med = max(t.median_s, 1e-12)
+            row_dts = tuple(st.dtype for st in lreq.stages)
             rows.append(CandidateTiming(
                 tile=plan.tile,
                 sweep_axis=plan.sweep_axis,
@@ -244,8 +359,20 @@ class AutoTuner:
                 reps=t.reps,
                 achieved_gbps=m / med / 1e9,
                 model_measured_ratio=(m / base_m) / (med / base_t),
+                window_kind=plan.window_kind,
+                stage_dtypes=(
+                    row_dts if any(dt is not None for dt in row_dts)
+                    else None
+                ),
+                advisory=advisory,
             ))
-        winner = min(range(len(rows)), key=lambda i: (rows[i].median_s, i))
+        # Winner eligibility (§15): only semantics-preserving rows — the
+        # geometry candidates and the bit-wise-neutral window flip — may
+        # win; dtype-variant rows are information, not answers.
+        winner = min(
+            (i for i in range(len(rows)) if not rows[i].advisory),
+            key=lambda i: (rows[i].median_s, i),
+        )
         never_slower = rows[winner].median_s <= rows[0].median_s
         # The analytic plan is in the raced set, so the measured argmin
         # cannot lose to it — this gate failing means the harness itself
@@ -356,17 +483,23 @@ def format_record(rec: TuneRecord) -> str:
         f"  tuned at {rec.tuned_at}  (schema v{rec.schema}, "
         f"planner v{rec.planner_version})",
         "  candidates (measured on the live backend):",
-        "    #  tile              sweep depth shard   modeled MiB  "
-        "measured      iqr        GB/s  model/meas",
+        "    #  tile              sweep depth shard window     "
+        "dtypes   modeled MiB  measured      iqr        GB/s  model/meas",
     ]
     for i, c in enumerate(rec.candidates):
         mark = (
             "  <-- winner" if i == rec.winner else
-            "  (analytic)" if i == rec.analytic else ""
+            "  (analytic)" if i == rec.analytic else
+            "  (advisory)" if c.advisory else ""
         )
+        dts = "-"
+        if c.stage_dtypes:
+            named = {dt for dt in c.stage_dtypes if dt is not None}
+            dts = "/".join(sorted(named)) or "-"
         lines.append(
             f"    {i}  {str(c.tile):<17} {str(c.sweep_axis):>5} "
             f"{c.fused_depth:>5} {str(c.shard_axis):>5} "
+            f"{str(c.window_kind):>9} {dts:>8} "
             f"{c.modeled_bytes / (1 << 20):>12.2f}  "
             f"{_fmt_t(c.median_s):>9}  {_fmt_t(c.iqr_s):>9}  "
             f"{c.achieved_gbps:>9.3f}  {c.model_measured_ratio:>9.3f}"
@@ -430,6 +563,38 @@ def smoke() -> int:
         f"tune smoke: {len(rec.candidates)} candidates in {tune_s:.2f} s, "
         f"winner {rec.winner} ({rec.speedup_vs_analytic:.3f}x), "
         f"warm_hit={warm_ms:.3f} ms  OK"
+    )
+
+    # §15 variant race: a fused chain must put the window flip and the
+    # bf16/int8 storage variants on the track.  The int8-quantized ring
+    # rows are advisory — measured, recorded, never the winner — and the
+    # never-slower gate must still hold over the eligible rows.
+    t0 = time.perf_counter()
+    chain = tuner.tune(
+        shape=(32, 256), offsets=star_stencil(2, 1), time_steps=3,
+        vmem_budget=256 * 1024, aligned=True,
+    )
+    chain_s = time.perf_counter() - t0
+    assert chain.never_slower, "chain never_slower gate failed"
+    kinds = {c.window_kind for c in chain.candidates}
+    assert kinds >= {"ring", "trapezoid"}, f"window race missing: {kinds}"
+    named = {
+        dt for c in chain.candidates if c.stage_dtypes
+        for dt in c.stage_dtypes if dt is not None
+    }
+    assert "int8" in named and "bfloat16" in named, (
+        f"dtype variants missing from the race: {named}"
+    )
+    assert all(
+        c.advisory for c in chain.candidates if c.stage_dtypes
+    ), "a numerics-changing dtype row raced as winner-eligible"
+    assert not chain.candidates[chain.winner].advisory
+    assert TuneRecord.from_dict(chain.to_dict()) == chain
+    print(format_record(chain))
+    print(
+        f"tune smoke (§15 chain): {len(chain.candidates)} rows in "
+        f"{chain_s:.2f} s, windows={sorted(kinds)}, "
+        f"advisory dtypes={sorted(named)}  OK"
     )
     return 0
 

@@ -47,10 +47,16 @@ __all__ = [
     "default_tuned_db_dir",
 ]
 
-# v1: the initial measured-plan record — candidate timing table, winner
+# v2: the §15 window/dtype race — every candidate row carries its
+# ``window_kind``, its ``stage_dtypes``, and the ``advisory`` flag
+# (numerics-changing dtype variants race for information, never for the
+# win; a record whose winner is advisory is corrupt by construction).
+# v1 records predate those columns and are dropped, re-tuned, never
+# mis-compared against rows that raced a different variant space.
+# (v1: the initial measured-plan record — candidate timing table, winner
 # index, never-slower gate, embedded winner plan.  Bump to invalidate
-# every stored measurement (they are re-taken, never mis-parsed).
-TUNEDB_SCHEMA = 1
+# every stored measurement — they are re-taken, never mis-parsed.)
+TUNEDB_SCHEMA = 2
 
 _ENV_DIR = "REPRO_TUNED_DB_DIR"
 
@@ -84,6 +90,13 @@ class CandidateTiming:
     # analytic choice exactly; the spread of this column is the model
     # error the autotune loop exists to absorb.
     model_measured_ratio: float
+    # §15 variant columns (schema v2): the frontier layout this row ran
+    # under, the per-stage storage dtypes it raced (``None`` = the plain
+    # input-dtype chain), and whether the row is advisory — measured for
+    # information, ineligible to win (it computed different values).
+    window_kind: str | None = None
+    stage_dtypes: tuple | None = None
+    advisory: bool = False
 
     def to_dict(self) -> dict:
         return {
@@ -97,10 +110,17 @@ class CandidateTiming:
             "reps": self.reps,
             "achieved_gbps": self.achieved_gbps,
             "model_measured_ratio": self.model_measured_ratio,
+            "window_kind": self.window_kind,
+            "stage_dtypes": (
+                None if self.stage_dtypes is None
+                else list(self.stage_dtypes)
+            ),
+            "advisory": self.advisory,
         }
 
     @classmethod
     def from_dict(cls, d: dict) -> "CandidateTiming":
+        dts = d.get("stage_dtypes")
         return cls(
             tile=tuple(int(t) for t in d["tile"]),
             sweep_axis=(
@@ -116,6 +136,15 @@ class CandidateTiming:
             reps=int(d["reps"]),
             achieved_gbps=float(d["achieved_gbps"]),
             model_measured_ratio=float(d["model_measured_ratio"]),
+            window_kind=(
+                None if d.get("window_kind") is None
+                else str(d["window_kind"])
+            ),
+            stage_dtypes=(
+                None if dts is None
+                else tuple(None if t is None else str(t) for t in dts)
+            ),
+            advisory=bool(d.get("advisory", False)),
         )
 
 
@@ -272,6 +301,10 @@ class TunedPlanDB:
         if not (0 <= rec.winner < len(rec.candidates)
                 and 0 <= rec.analytic < len(rec.candidates)):
             raise ValueError("tuned entry indices out of range")
+        if rec.candidates[rec.winner].advisory:
+            raise ValueError(
+                "tuned winner is an advisory (numerics-changing) row"
+            )
         if rec.fingerprint != fingerprint:
             self.stats["fingerprint_misses"] += 1
             return False

@@ -1,0 +1,101 @@
+"""The one home of the guarded XLA flag pins (jax-free; importable
+before the first jax import).
+
+Two host-platform pins keep the CPU CI deterministic and mesh-capable:
+
+* ``--xla_force_host_platform_device_count=4`` — the §10 column-sharding
+  parity gates need a multi-device CPU mesh, and the host platform's
+  device count is fixed at first jax import.
+* ``--xla_cpu_max_isa=AVX`` — the §14 ring↔trapezoid bit-parity gates
+  need deterministic mul→add rounding: XLA's CPU codegen contracts
+  mul+add pairs into FMAs *per fusion*, and different window kinds
+  produce different fusion shapes, so the same stage chain can round
+  differently at 1 ULP.  Capping the ISA below FMA3 makes every launch
+  form compile to plain mul-then-add (TPU runs are unaffected — both are
+  host-platform flags).
+
+Both pins are guarded twice: they no-op once jax is imported (too late
+to matter, and appending would mislead), and a value the user already
+set in ``XLA_FLAGS`` wins — XLA honors the *last* duplicate flag, so
+appending ours would silently override theirs.
+
+This used to be copy-pasted across ``tests/conftest.py``,
+``benchmarks/common.py``, and ``scripts/ci.sh``; all three now consume
+this module (``tests/test_isa_pin.py`` fails if any of them drifts back
+to an inline copy).  ``scripts/ci.sh`` shells in via
+
+    eval "$(python -m repro.runtime.isa --export)"
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+__all__ = [
+    "DEVICE_FLAG",
+    "ISA_FLAG",
+    "ISA_PIN",
+    "pin_host_devices",
+    "pin_isa",
+    "pin_xla_flags",
+]
+
+DEVICE_FLAG = "--xla_force_host_platform_device_count"
+ISA_FLAG = "--xla_cpu_max_isa"
+ISA_PIN = f"{ISA_FLAG}=AVX"
+
+
+def _append_guarded(flag_stem: str, flag: str, env) -> bool:
+    """Append ``flag`` to ``env['XLA_FLAGS']`` unless jax is already
+    imported or the user set ``flag_stem`` themselves.  Returns whether
+    the pin was applied."""
+    flags = env.get("XLA_FLAGS", "")
+    if "jax" in sys.modules or flag_stem in flags:
+        return False
+    env["XLA_FLAGS"] = (flags + " " + flag).strip()
+    return True
+
+
+def pin_host_devices(n: int = 4, env=os.environ) -> bool:
+    """Pin the host-platform device count (guarded; user wins)."""
+    return _append_guarded(DEVICE_FLAG, f"{DEVICE_FLAG}={int(n)}", env)
+
+
+def pin_isa(env=os.environ) -> bool:
+    """Cap the CPU ISA below FMA3 (guarded; user wins)."""
+    return _append_guarded(ISA_FLAG, ISA_PIN, env)
+
+
+def pin_xla_flags(n_devices: int = 4, env=os.environ) -> bool:
+    """Apply both pins; returns whether either changed the env."""
+    dev = pin_host_devices(n_devices, env=env)
+    isa = pin_isa(env=env)
+    return dev or isa
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI for shell consumers: print the pinned ``XLA_FLAGS``.
+
+    ``--export`` emits a shell ``export XLA_FLAGS=...`` line suitable
+    for ``eval`` (the spelling ``scripts/ci.sh`` uses)."""
+    import argparse
+    import shlex
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--devices", type=int, default=4,
+                    help="host-platform device count to pin (default 4)")
+    ap.add_argument("--export", action="store_true",
+                    help="emit an eval-able 'export XLA_FLAGS=...' line")
+    args = ap.parse_args(argv)
+    env = dict(os.environ)
+    pin_xla_flags(args.devices, env=env)
+    flags = env.get("XLA_FLAGS", "")
+    if args.export:
+        print(f"export XLA_FLAGS={shlex.quote(flags)}")
+    else:
+        print(flags)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

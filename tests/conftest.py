@@ -1,33 +1,22 @@
 import os
 import sys
 
-# The §10 column-sharding parity tests need a multi-device CPU mesh, and
-# the host platform's device count is fixed at first jax import — so the
-# flag must be set here, before any test module imports jax.  A count
-# the user already set in XLA_FLAGS wins (XLA honors the last duplicate,
-# so appending would override theirs).  Everything else is device-count
-# agnostic (meshes clamp to what exists).  This mirrors
-# benchmarks/common.py::force_cpu_devices; it stays inline so test
-# collection never depends on the benchmarks package.
-_flags = os.environ.get("XLA_FLAGS", "")
-if (
-    "jax" not in sys.modules
-    and "--xla_force_host_platform_device_count" not in _flags
-):
-    os.environ["XLA_FLAGS"] = (
-        _flags + " --xla_force_host_platform_device_count=4"
-    ).strip()
+# The XLA pins (4-device host platform for the §10 mesh parity gates,
+# ISA capped below FMA3 for the §14 ring↔trapezoid bit-parity gates)
+# must be applied here, before any test module imports jax — the host
+# platform is fixed at first jax import.  The guards and their
+# rationale live in repro.runtime.isa, the single home of the pins
+# (tests/test_isa_pin.py gates against drifting back to inline copies);
+# repro.runtime is jax-free, so importing it here is safe.
+_SRC = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), os.pardir, "src")
+)
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
-# The §14 ring↔trapezoid bit-parity gates additionally need a CPU
-# backend with a deterministic mul→add rounding: XLA's CPU codegen
-# contracts mul+add pairs into FMAs *per fusion*, and the two window
-# kinds produce different fusion shapes, so the same stage chain can
-# round differently at 1 ULP.  Capping the ISA below FMA3 makes every
-# launch form compile to plain mul-then-add (TPU runs are unaffected —
-# this is a host-platform flag).  A cap the user set wins, as above.
-_flags = os.environ.get("XLA_FLAGS", "")
-if "jax" not in sys.modules and "--xla_cpu_max_isa" not in _flags:
-    os.environ["XLA_FLAGS"] = (_flags + " --xla_cpu_max_isa=AVX").strip()
+from repro.runtime import isa  # noqa: E402
+
+isa.pin_xla_flags(n_devices=4)
 
 import numpy as np
 import pytest

@@ -1,0 +1,103 @@
+"""The XLA pin helper (repro.runtime.isa) and its anti-drift gate.
+
+The guarded ``--xla_cpu_max_isa=AVX`` / device-count pins used to be
+copy-pasted across tests/conftest.py, benchmarks/common.py, and
+scripts/ci.sh; they now live in one module.  These tests fail if any
+consumer stops routing through it (or grows an inline copy back)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.runtime import isa
+
+REPO = Path(__file__).resolve().parent.parent
+CONSUMERS = [
+    REPO / "tests" / "conftest.py",
+    REPO / "benchmarks" / "common.py",
+    REPO / "scripts" / "ci.sh",
+]
+
+
+def _run_cli(*args, xla_flags=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    if xla_flags is not None:
+        env["XLA_FLAGS"] = xla_flags
+    return subprocess.run(
+        [sys.executable, "-m", "repro.runtime.isa", *args],
+        capture_output=True, text=True, env=env, cwd=REPO, check=True,
+    ).stdout.strip()
+
+
+# --- drift gate ---------------------------------------------------------
+
+def test_every_consumer_routes_through_the_helper():
+    for path in CONSUMERS:
+        text = path.read_text()
+        assert "repro.runtime.isa" in text or "repro.runtime import isa" \
+            in text, f"{path.name} no longer consumes repro.runtime.isa"
+
+
+def test_no_inline_pin_copies_outside_the_helper():
+    # The flag literal may appear only in the helper itself (and in this
+    # test): a consumer spelling it out again is the drift this gate
+    # exists to catch.
+    for path in CONSUMERS:
+        text = path.read_text()
+        assert isa.ISA_FLAG not in text, (
+            f"{path.name} re-grew an inline {isa.ISA_FLAG} pin; use "
+            "repro.runtime.isa instead"
+        )
+        assert isa.DEVICE_FLAG not in text, (
+            f"{path.name} re-grew an inline {isa.DEVICE_FLAG} pin; use "
+            "repro.runtime.isa instead"
+        )
+    helper = (REPO / "src" / "repro" / "runtime" / "isa.py").read_text()
+    assert isa.ISA_FLAG in helper and isa.DEVICE_FLAG in helper
+
+
+# --- pin semantics ------------------------------------------------------
+
+def test_pins_noop_once_jax_imported():
+    # In-process jax is (or becomes) imported; the pin must refuse to
+    # touch the env — the host platform is already fixed.
+    import jax  # noqa: F401
+
+    env: dict[str, str] = {}
+    assert isa.pin_isa(env=env) is False
+    assert isa.pin_host_devices(env=env) is False
+    assert env == {}
+
+
+def test_cli_applies_both_pins_on_clean_env():
+    out = _run_cli()
+    assert f"{isa.DEVICE_FLAG}=4" in out
+    assert isa.ISA_PIN in out
+
+
+def test_cli_devices_override():
+    out = _run_cli("--devices", "8")
+    assert f"{isa.DEVICE_FLAG}=8" in out
+
+
+def test_user_set_flag_wins():
+    out = _run_cli(xla_flags=f"{isa.ISA_FLAG}=AVX512")
+    assert f"{isa.ISA_FLAG}=AVX512" in out
+    assert out.count(isa.ISA_FLAG) == 1, out
+    # The other pin still applies around the user's value.
+    assert f"{isa.DEVICE_FLAG}=4" in out
+
+
+def test_export_emits_evalable_shell():
+    out = _run_cli("--export")
+    assert out.startswith("export XLA_FLAGS=")
+    # Round-trips through a POSIX shell eval.
+    shown = subprocess.run(
+        ["/bin/sh", "-c", f'{out}; printf %s "$XLA_FLAGS"'],
+        capture_output=True, text=True, check=True,
+    ).stdout
+    assert isa.ISA_PIN in shown

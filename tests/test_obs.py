@@ -301,7 +301,9 @@ def test_traced_tuned_sharded_run_reconciles(tmp_path):
     assert reconcile(summary) == [], "trace does not reconcile"
     assert summary["counters"]["launches"] == len(summary["launches"]) > 0
     assert summary["n_exchange_spans"] > 0  # 4-shard halo exchanges
-    assert summary["races"] and summary["races"][0]["candidates"] == 2
+    # k=2 analytic candidates plus the §15 window-flip and advisory
+    # bf16/int8 dtype variants the race appends beyond top-k.
+    assert summary["races"] and summary["races"][0]["candidates"] >= 2
     launch = summary["launches"][-1]
     assert launch["num_shards"] == 4
     assert launch["modeled_bytes"] > 0

@@ -286,6 +286,59 @@ def test_conv1d_bf16_parity_with_f32():
     )
 
 
+def test_conv1d_int8_codes_forward_bitwise():
+    """conv1d's §15 int8 path: int8 code input keeps its VMEM window,
+    slabs, and output in int8 while every MAC, the bias, and the silu
+    run f32 — so the output IS the f32 path's values cast to int8,
+    bit-wise (the int8→f32 load cast is exact)."""
+    from repro.kernels.conv1d import causal_conv1d
+
+    rng = np.random.default_rng(5)
+    x8 = jnp.asarray(rng.integers(-127, 128, (2, 48, 128)), jnp.int8)
+    xf = x8.astype(jnp.float32)
+    # Small weights keep silu outputs inside int8 range post-cast.
+    w = jnp.asarray(rng.standard_normal((4, 128)) * 0.02, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((128,)) * 0.1, jnp.float32)
+    out8 = causal_conv1d(x8, w, b, tile_s=16, interpret=True)
+    outf = causal_conv1d(xf, w, b, tile_s=16, interpret=True)
+    assert out8.dtype == jnp.int8
+    assert np.array_equal(
+        np.asarray(out8), np.asarray(outf.astype(jnp.int8))
+    )
+
+
+def test_conv1d_int8_fake_quant_grad_parity():
+    """int8 codes are not differentiable, so the training-side spelling
+    is fake-quant: f32 values snapped to the int8 grid (scale 0.05).
+    The kernel's forward and custom-VJP gradients at that point must
+    match the reference model's within the f32 pair's tolerance."""
+    from repro.kernels.conv1d import causal_conv1d
+    from repro.models.ssm import _causal_conv
+
+    rng = np.random.default_rng(7)
+    xf = jnp.asarray(rng.standard_normal((2, 40, 128)), jnp.float32)
+    scale = 0.05
+    xq = jnp.round(xf / scale).clip(-127, 127) * scale
+    w = jnp.asarray(rng.standard_normal((4, 128)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((128,)) * 0.1, jnp.float32)
+    g = jnp.asarray(rng.standard_normal((2, 40, 128)), jnp.float32)
+
+    def loss_kernel(x):
+        return (causal_conv1d(x, w, b, tile_s=16, interpret=True) * g).sum()
+
+    def loss_ref(x):
+        ref, _ = _causal_conv(x, w, b, None)
+        return (ref * g).sum()
+
+    np.testing.assert_allclose(
+        float(loss_kernel(xq)), float(loss_ref(xq)), rtol=1e-4)
+    gk = jax.grad(loss_kernel)(xq)
+    gr = jax.grad(loss_ref)(xq)
+    assert gk.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(gk), np.asarray(gr), atol=2e-4, rtol=2e-4)
+
+
 # ---------------------------------------------------------------------------
 # Schema v6: dtype + window_kind round-trips and call validation.
 # ---------------------------------------------------------------------------
@@ -297,7 +350,9 @@ def test_schema_v6_round_trip():
         dtypes=["bfloat16", None, "float32"], window_kind="ring",
     )
     assert req.window_kind == "ring"
-    assert [st.dtype for st in req.stages] == ["bfloat16", None, "float32"]
+    # "float32" restates the f32 input dtype — None-normalized (v7), so
+    # spelling the input dtype out keys identically to omitting it.
+    assert [st.dtype for st in req.stages] == ["bfloat16", None, None]
     back = PlanRequest.from_dict(req.canonical())
     assert back == req
     assert back.cache_key() == req.cache_key()
@@ -376,10 +431,10 @@ def test_explain_json_round_trips_dtyped_plan(monkeypatch, tmp_path,
     assert plan.window_kind == "ring"
     assert doc["report"]["window_kind"] == "ring"
     assert doc["report"]["stage_dtypes"] == [
-        "bfloat16", "bfloat16", "float32"
+        "bfloat16", "bfloat16", None
     ]
     assert [st.dtype for st in plan.request.stages] == [
-        "bfloat16", "bfloat16", "float32"
+        "bfloat16", "bfloat16", None
     ]
 
 

@@ -238,6 +238,139 @@ def test_unwritable_dir_degrades_once(tuned, tmp_path, caplog):
     assert db.get(rec.key, rec.fingerprint) == rec   # memory still serves
 
 
+# -- the §15 variant race + TUNEDB_SCHEMA v2 ---------------------------------
+
+
+CHAIN_KW = dict(
+    shape=(32, 256), offsets=star_stencil(2, 1), time_steps=3,
+    vmem_budget=256 * 1024, aligned=True,
+)
+
+
+def _chain_request(**over):
+    kw = dict(CHAIN_KW)
+    kw.update(over)
+    return PlanRequest.make(**kw)
+
+
+@pytest.fixture(scope="module")
+def tuned_chain():
+    """One fused-chain tune pass: races geometry + window flip + the
+    advisory bf16/int8 storage variants (DESIGN.md §15)."""
+    db = TunedPlanDB(persistent=False)
+    tuner = _tuner(db)
+    rec = tuner.tune(_chain_request())
+    return db, tuner, rec
+
+
+def test_chain_race_covers_windows_and_dtypes(tuned_chain):
+    _, _, rec = tuned_chain
+    assert {c.window_kind for c in rec.candidates} >= {"ring", "trapezoid"}
+    named = {
+        dt for c in rec.candidates if c.stage_dtypes
+        for dt in c.stage_dtypes if dt is not None
+    }
+    assert named == {"bfloat16", "int8"}
+    # Every dtype-variant row is advisory; every geometry/window row is
+    # winner-eligible; the analytic f32 plan is always candidate 0.
+    assert all(c.advisory == bool(c.stage_dtypes) for c in rec.candidates)
+    assert rec.analytic == 0
+    assert rec.candidates[0].stage_dtypes is None
+    assert not rec.candidates[rec.winner].advisory
+    assert rec.never_slower
+    # The served winner answers the ORIGINAL request key, even when the
+    # window flip won (the flip is bit-wise neutral, the key identical).
+    assert rec.winner_plan.request.cache_key() == rec.key
+
+
+def test_schema_v2_round_trip_with_variant_fields(tuned_chain):
+    _, _, rec = tuned_chain
+    assert rec.schema == TUNEDB_SCHEMA == 2
+    assert TuneRecord.from_dict(rec.to_dict()) == rec
+    assert TuneRecord.from_dict(
+        json.loads(json.dumps(rec.to_dict()))
+    ) == rec
+    # The v2 columns survive the JSON trip typed, not stringified.
+    back = TuneRecord.from_dict(json.loads(json.dumps(rec.to_dict())))
+    int8_rows = [
+        c for c in back.candidates
+        if c.stage_dtypes and "int8" in c.stage_dtypes
+    ]
+    assert int8_rows and int8_rows[0].advisory
+    assert int8_rows[0].stage_dtypes == ("int8", "int8", None)
+
+
+def test_v1_stale_entry_dropped_and_retuned(tmp_path, tuned_chain):
+    """A pre-§15 record (schema 1, no variant columns) must never be
+    served into the v2 race — dropped, counted, re-tuned."""
+    _, _, rec = tuned_chain
+    path = _store(tmp_path, rec)
+    d = json.load(open(path))
+    d["schema"] = 1
+    for c in d["candidates"]:   # v1 rows predate the variant columns
+        c.pop("window_kind"), c.pop("stage_dtypes"), c.pop("advisory")
+    json.dump(d, open(path, "w"))
+    cold = TunedPlanDB(db_dir=str(tmp_path))
+    assert cold.get(rec.key, rec.fingerprint) is None
+    assert cold.stats["stale_schema"] == 1
+    assert not os.path.exists(path)
+    tuner = _tuner(cold)
+    assert tuner.plan(_chain_request()) is not None
+    assert not tuner.last_plan_tuned     # healed by a fresh measurement
+    healed = cold.get(rec.key, rec.fingerprint)
+    assert healed is not None and healed.schema == TUNEDB_SCHEMA
+
+
+def test_advisory_winner_record_rejected(tmp_path, tuned_chain):
+    """A record claiming an advisory (numerics-changing) row won is
+    corrupt by construction — never served."""
+    _, _, rec = tuned_chain
+    path = _store(tmp_path, rec)
+    d = json.load(open(path))
+    advisory = [i for i, c in enumerate(d["candidates"]) if c["advisory"]]
+    assert advisory, "chain tune raced no advisory rows"
+    d["winner"] = advisory[0]
+    json.dump(d, open(path, "w"))
+    cold = TunedPlanDB(db_dir=str(tmp_path))
+    assert cold.get(rec.key, rec.fingerprint) is None
+    assert cold.stats["corrupt"] == 1
+    assert not os.path.exists(path)
+
+
+def test_variant_record_fingerprint_mismatch_is_clean_miss(tmp_path,
+                                                           tuned_chain):
+    _, _, rec = tuned_chain
+    _store(tmp_path, rec)
+    cold = TunedPlanDB(db_dir=str(tmp_path))
+    assert cold.get(rec.key, rec.fingerprint + "|other") is None
+    assert cold.stats["corrupt"] == 0
+    assert cold.get(rec.key, rec.fingerprint) == rec
+
+
+def test_pinned_window_kind_skips_the_flip():
+    """A request that already pins ring/trapezoid races no flip — the
+    user's choice is part of the planning problem, not a knob."""
+    db = TunedPlanDB(persistent=False)
+    rec = _tuner(db).tune(_chain_request(window_kind="ring"))
+    assert all(c.window_kind == "ring" for c in rec.candidates)
+
+
+def test_dtyped_request_races_no_dtype_variants():
+    """An explicitly mixed-precision request IS the dtype assignment —
+    nothing to advise on; its rows race winner-eligible as usual."""
+    db = TunedPlanDB(persistent=False)
+    rec = _tuner(db).tune(_chain_request(
+        dtypes=["bfloat16", "bfloat16", "float32"],
+    ))
+    assert all(not c.advisory for c in rec.candidates)
+    # The final "float32" restates the input dtype: None-normalized.
+    assert all(
+        c.stage_dtypes == ("bfloat16", "bfloat16", None)
+        for c in rec.candidates
+    )
+    assert rec.never_slower
+
+
 # -- sharded tuning ----------------------------------------------------------
 
 
